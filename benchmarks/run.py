@@ -1,0 +1,31 @@
+"""Benchmark entry point: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Scale with REPRO_BENCH_SCALE
+(ci | full; see common.py).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import bench_kernels, bench_roofline
+    from . import bench_fig3_fig4, bench_fig5_fig6, bench_fig7_fig8_fig9
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for mod in [bench_roofline, bench_kernels, bench_fig7_fig8_fig9,
+                bench_fig3_fig4, bench_fig5_fig6]:
+        try:
+            mod.main()
+        except Exception as e:  # keep the suite going; record the failure
+            print(f"{mod.__name__},0.0,ERROR:{type(e).__name__}:{e}",
+                  file=sys.stderr)
+            print(f"{mod.__name__.split('.')[-1]}_error,0.0,"
+                  f"{type(e).__name__}")
+    print(f"total_bench_wall_s,0.0,{time.time() - t0:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Quickstart: Karasu-accelerated cluster-configuration search.
+
+A target workload searches the 69-config AWS space for the cheapest
+configuration meeting its runtime target, bootstrapped from one
+collaborator's shared profiling runs of a similar workload.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (BOConfig, Constraint, Objective, Repository,
+                        run_search, scout_search_space)
+from repro.simdata import make_emulator
+
+
+def main():
+    emu = make_emulator()
+    space = scout_search_space()
+    target = "spark2.1/kmeans/points-100m"
+    runtime_target = emu.runtime_target(target, 50)
+    optimal = emu.optimal_cost(target, runtime_target)
+    print(f"target workload : {target}")
+    print(f"runtime target  : {runtime_target:.0f}s  "
+          f"(optimal feasible cost ${optimal:.4f})")
+
+    # a collaborator shared profiling runs of a related workload — only
+    # (opaque id, config, compact metrics, measures) cross the boundary
+    repo = Repository()
+    rng = np.random.default_rng(7)
+    donor = "spark1.5/kmeans/points-100m"
+    for ci in rng.choice(len(space), 12, replace=False):
+        repo.add_run(emu.make_record("anon-collab", donor,
+                                     space.configs[int(ci)], rng))
+
+    rng_t = np.random.default_rng(0)
+    profile = lambda c: emu.run(target, c, rng=rng_t)
+    for method, kwargs in [("naive", {}),
+                           ("karasu", {"repository": repo})]:
+        res = run_search(space, profile, Objective("cost"),
+                         [Constraint("runtime", runtime_target)],
+                         method=method,
+                         bo_config=BOConfig(max_iters=10,
+                                            n_init=1 if method == "karasu"
+                                            else 3),
+                         seed=0, **kwargs)
+        traj = [res.observations[i].measures["cost"] if i >= 0 else None
+                for i in res.best_index_per_iter]
+        print(f"\n{method:7s} incumbent cost per profiling run:")
+        print("  " + " ".join("   -  " if t is None else f"{t:6.3f}"
+                              for t in traj))
+        best = res.best_index_per_iter[-1]
+        print(f"  best config: {dict(res.observations[best].config)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""End-to-end training driver: a ~100M-parameter dense LM trained for a
+few hundred steps on synthetic data, with checkpointing, fault-injected
+restart, and straggler watchdog — the single-host miniature of the
+production loop in launch/train.py.
+
+Run:  PYTHONPATH=src python examples/train_100m.py            # full (~100M)
+      PYTHONPATH=src python examples/train_100m.py --preset ci  # small/fast
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, build_model
+from repro.train.data import Prefetcher, SyntheticLM
+from repro.train.fault import FailureInjector, run_resilient
+from repro.train.optim import adamw, cosine_schedule
+from repro.train.step import make_train_step
+
+PRESETS = {
+    # ~103M params: 12L x 512d x 8H, d_ff 2048, vocab 32k (tied)
+    "full": dict(n_layers=12, d_model=512, n_heads=8, n_kv_heads=8,
+                 d_ff=2048, vocab=32768, seq=256, batch=8, steps=300),
+    # ~7M params, a minute on CPU
+    "ci": dict(n_layers=4, d_model=128, n_heads=4, n_kv_heads=4,
+               d_ff=512, vocab=8192, seq=128, batch=4, steps=60),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="full", choices=list(PRESETS))
+    ap.add_argument("--ckpt-dir", default="artifacts/train_100m")
+    ap.add_argument("--fail-at", type=int, nargs="*", default=[17])
+    args = ap.parse_args()
+    p = PRESETS[args.preset]
+
+    cfg = ModelConfig(
+        name=f"dense-{args.preset}", n_layers=p["n_layers"],
+        d_model=p["d_model"], n_heads=p["n_heads"],
+        n_kv_heads=p["n_kv_heads"], d_ff=p["d_ff"], vocab=p["vocab"],
+        block_pattern=("attn",), tie_embeddings=True, remat=False,
+        param_dtype=jnp.float32)
+    bundle = build_model(cfg)
+    n_params = cfg.param_count()
+    print(f"model: {cfg.name}  params={n_params/1e6:.1f}M  "
+          f"steps={p['steps']}  batch={p['batch']}x{p['seq']}")
+
+    opt = adamw(weight_decay=0.01)
+    step_fn = jax.jit(make_train_step(
+        bundle, opt, cosine_schedule(3e-4, 20, p["steps"]),
+        microbatches=1), donate_argnums=(0, 1))
+
+    data = SyntheticLM(cfg.vocab, p["seq"], p["batch"], seed=0)
+    pf = Prefetcher(data, start_step=0, depth=2)
+
+    def init_state():
+        params = bundle.init(jax.random.PRNGKey(0))
+        return params, opt.init(params)
+
+    t0 = time.time()
+    losses = []
+
+    def batch_at(step):
+        return {k: jnp.asarray(v) for k, v in data.batch_at(step).items()}
+
+    def step_logged(params, opt_state, batch, step):
+        out = step_fn(params, opt_state, batch,
+                      jnp.asarray(step, jnp.int32))
+        loss = float(out[2]["loss"])
+        if step % 10 == 0:
+            tok_s = (step + 1) * p["batch"] * p["seq"] / \
+                max(time.time() - t0, 1e-9)
+            print(f"  step {step:4d}  loss {loss:.4f}  "
+                  f"~{tok_s:,.0f} tok/s", flush=True)
+        return out
+
+    report = run_resilient(
+        init_state=init_state, step_fn=step_logged, batch_at=batch_at,
+        total_steps=p["steps"], ckpt_dir=args.ckpt_dir, ckpt_every=20,
+        injector=FailureInjector(fail_at=args.fail_at))
+    pf.close()
+
+    print(f"\ndone: {report.steps_done} steps, {report.restarts} restart(s) "
+          f"(injected node failure), {len(report.stragglers)} stragglers, "
+          f"loss {report.losses[0]:.3f} -> {report.losses[-1]:.3f} "
+          f"in {time.time()-t0:.0f}s")
+    assert report.losses[-1] < report.losses[0], "loss must decrease"
+
+
+if __name__ == "__main__":
+    main()

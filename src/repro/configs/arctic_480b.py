@@ -1,0 +1,49 @@
+"""arctic-480b: dense-MoE hybrid, 128 experts top-2 + dense residual MLP
+[hf:Snowflake/snowflake-arctic-base; hf].
+
+35L d_model=7168 56H (GQA kv=8, head_dim=128) d_ff=4864 vocab=32000,
+MoE 128e top-2 with a dense residual branch in parallel. Pure full
+attention -> long_500k skipped. Expert weights FSDP-sharded over the
+data axis in addition to expert parallelism (bf16 weights alone are
+~0.96 TB); trained with Adafactor.
+"""
+import jax.numpy as jnp
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=4864,
+    vocab=32000,
+    block_pattern=("attn",),
+    n_experts=128,
+    top_k=2,
+    moe_d_ff=4864,
+    dense_residual=True,
+    rope_theta=10_000.0,
+    tie_embeddings=False,
+    param_dtype=jnp.bfloat16,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="arctic-smoke",
+    family="moe",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=96,
+    vocab=128,
+    block_pattern=("attn",),
+    n_experts=8,
+    top_k=2,
+    moe_d_ff=96,
+    dense_residual=True,
+    tie_embeddings=False,
+)

@@ -1,0 +1,49 @@
+"""gemma2-27b: alternating local/global attention + logit softcaps
+[arXiv:2408.00118; hf].
+
+46L d_model=4608 32H (GQA kv=16, head_dim=128) d_ff=36864 vocab=256000.
+Pattern (local, global) x 23; window 4096; attn softcap 50, final 30;
+sandwich (post) norms; embeddings scaled by sqrt(d). long_500k RUNS
+(half the layers are windowed; globals keep full KV, decode is linear).
+"""
+import jax.numpy as jnp
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-27b",
+    family="dense",
+    n_layers=46,
+    d_model=4608,
+    n_heads=32,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=36864,
+    vocab=256000,
+    block_pattern=("local_attn", "attn"),
+    window=4096,
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    use_post_norm=True,
+    scale_embeddings=True,
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    param_dtype=jnp.bfloat16,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="gemma2-27b-smoke",
+    family="dense",
+    n_layers=4,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab=128,
+    block_pattern=("local_attn", "attn"),
+    window=8,
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    use_post_norm=True,
+    scale_embeddings=True,
+)

@@ -1,0 +1,54 @@
+"""gemma3-4b: 5:1 local:global attention, 128k context
+[hf:google/gemma-3-1b-pt family; unverified].
+
+34L d_model=2560 8H (GQA kv=4, head_dim=256) d_ff=10240 vocab=262144.
+34 = 2 units of a 17-layer pattern with 3 globals each (28 local : 6
+global ~= 5:1; the reference model places globals every 6th layer —
+noted deviation to keep the scan-unit structure). local window = 1024,
+global rope theta = 1M. long_500k RUNS (globals keep full KV; locals
+keep a 1024-slot ring).
+"""
+import jax.numpy as jnp
+from repro.models.common import ModelConfig
+
+_UNIT = ("local_attn",) * 5 + ("attn",) + ("local_attn",) * 5 + ("attn",) \
+    + ("local_attn",) * 4 + ("attn",)  # 17 layers, 3 global
+
+CONFIG = ModelConfig(
+    name="gemma3-4b",
+    family="dense",
+    n_layers=34,
+    d_model=2560,
+    n_heads=8,
+    n_kv_heads=4,
+    head_dim=256,
+    d_ff=10240,
+    vocab=262144,
+    block_pattern=_UNIT,
+    window=1024,
+    rope_theta=10_000.0,
+    rope_theta_global=1_000_000.0,
+    use_qk_norm=True,
+    use_post_norm=True,
+    scale_embeddings=True,
+    tie_embeddings=True,
+    param_dtype=jnp.bfloat16,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="gemma3-4b-smoke",
+    family="dense",
+    n_layers=6,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab=128,
+    block_pattern=("local_attn", "local_attn", "attn"),
+    window=8,
+    rope_theta_global=1_000_000.0,
+    use_qk_norm=True,
+    use_post_norm=True,
+    scale_embeddings=True,
+)

@@ -1,0 +1,40 @@
+"""h2o-danube-1.8b: llama+mistral mix with sliding-window attention
+[arXiv:2401.16818; hf].
+
+24L d_model=2560 32H (GQA kv=8, head_dim=80) d_ff=6912 vocab=32000,
+window=4096 on every layer -> sub-quadratic, long_500k RUNS.
+"""
+import jax.numpy as jnp
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube-1.8b",
+    family="dense",
+    n_layers=24,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=80,
+    d_ff=6912,
+    vocab=32000,
+    block_pattern=("local_attn",),
+    window=4096,
+    rope_theta=10_000.0,
+    tie_embeddings=False,
+    param_dtype=jnp.bfloat16,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="h2o-danube-1.8b-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=96,
+    vocab=128,
+    block_pattern=("local_attn",),
+    window=16,
+    tie_embeddings=False,
+)

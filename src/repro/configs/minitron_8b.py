@@ -1,0 +1,37 @@
+"""minitron-8b: pruned nemotron dense transformer [arXiv:2407.14679; hf].
+
+32L d_model=4096 32H (GQA kv=8, head_dim=128) d_ff=16384 vocab=256000.
+Pure full attention -> long_500k cell skipped (see DESIGN.md).
+"""
+import jax.numpy as jnp
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-8b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab=256000,
+    block_pattern=("attn",),
+    rope_theta=10_000.0,
+    tie_embeddings=False,
+    param_dtype=jnp.bfloat16,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="minitron-8b-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab=128,
+    block_pattern=("attn",),
+    tie_embeddings=False,
+)

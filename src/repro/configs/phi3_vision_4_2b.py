@@ -1,0 +1,44 @@
+"""phi-3-vision-4.2b: phi3-mini backbone + CLIP frontend (STUB)
+[hf:microsoft/Phi-3-vision-128k-instruct; hf].
+
+32L d_model=3072 32H (MHA kv=32, head_dim=96) d_ff=8192 vocab=32064.
+The CLIP ViT frontend is a STUB: input_specs() supplies precomputed
+(batch, 576, d_model) patch embeddings scattered over masked token
+positions. Pure full attention -> long_500k skipped (the reference
+model's 128k blocksparse variant is approximated as full attention;
+noted in DESIGN.md).
+"""
+import jax.numpy as jnp
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi-3-vision-4.2b",
+    family="vlm",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=96,
+    d_ff=8192,
+    vocab=32064,
+    block_pattern=("attn",),
+    n_image_patches=576,
+    rope_theta=10_000.0,
+    tie_embeddings=False,
+    param_dtype=jnp.bfloat16,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="phi3v-smoke",
+    family="vlm",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab=128,
+    block_pattern=("attn",),
+    n_image_patches=8,
+    tie_embeddings=False,
+)

@@ -1,0 +1,47 @@
+"""qwen3-moe-235b-a22b: 128-expert top-8 MoE [hf:Qwen/Qwen3-30B-A3B; hf].
+
+94L d_model=4096 64H (GQA kv=4, head_dim=128) expert d_ff=1536
+vocab=151936, 128 experts top-8, QK-norm. Pure full attention ->
+long_500k skipped. Trained with Adafactor (Adam fp32 state would not
+fit 256 chips; see launch/shardings.py).
+"""
+import jax.numpy as jnp
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    n_layers=94,
+    d_model=4096,
+    n_heads=64,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=0,
+    vocab=151936,
+    block_pattern=("attn",),
+    n_experts=128,
+    top_k=8,
+    moe_d_ff=1536,
+    use_qk_norm=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=False,
+    param_dtype=jnp.bfloat16,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="qwen3-moe-smoke",
+    family="moe",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=0,
+    vocab=128,
+    block_pattern=("attn",),
+    n_experts=8,
+    top_k=2,
+    moe_d_ff=96,
+    use_qk_norm=True,
+    tie_embeddings=False,
+)

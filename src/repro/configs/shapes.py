@@ -1,0 +1,73 @@
+"""Input-shape specs per (arch x shape) cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no device allocation) for every model input of the cell, plus
+the step kind the cell lowers:
+    train_4k    -> train_step   (tokens + labels)
+    prefill_32k -> prefill_step (tokens, positions; builds the KV cache)
+    decode_32k  -> serve_step   (1 new token against a seq_len KV cache)
+    long_500k   -> serve_step   (1 new token against a 524288-entry cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class CellSpec:
+    kind: str            # train | prefill | decode
+    seq_len: int         # context length (cache length for decode)
+    global_batch: int
+    batch: Dict[str, jax.ShapeDtypeStruct]  # model inputs
+
+
+def _modality_extras(cfg: ModelConfig, b: int, s: int) -> Dict[str, Any]:
+    extras: Dict[str, Any] = {}
+    if cfg.is_encoder_decoder:
+        extras["frame_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_audio_frames, cfg.d_model), jnp.bfloat16)
+    if cfg.n_image_patches:
+        extras["image_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_image_patches, cfg.d_model), jnp.bfloat16)
+        extras["image_mask"] = jax.ShapeDtypeStruct((b, s), jnp.bool_)
+    return extras
+
+
+def input_specs(cfg: ModelConfig, shape_id: str) -> CellSpec:
+    meta = SHAPES[shape_id]
+    b, s = meta["global_batch"], meta["seq_len"]
+    kind = meta["kind"]
+    tok = jnp.int32
+
+    if kind == "train":
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, s), tok),
+            "labels": jax.ShapeDtypeStruct((b, s), tok),
+        }
+        batch.update(_modality_extras(cfg, b, s))
+    elif kind == "prefill":
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, s), tok),
+            "positions": jax.ShapeDtypeStruct((b, s), tok),
+        }
+        batch.update(_modality_extras(cfg, b, s))
+    else:  # decode: one new token per sequence
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, 1), tok),
+            "positions": jax.ShapeDtypeStruct((b, 1), tok),
+        }
+        # modality context was consumed at prefill; decode sees the cache
+    return CellSpec(kind=kind, seq_len=s, global_batch=b, batch=batch)

@@ -1,0 +1,51 @@
+"""whisper-large-v3: encoder-decoder audio backbone
+[arXiv:2212.04356; unverified].
+
+32 encoder + 32 decoder layers, d_model=1280 20H (MHA, head_dim=64)
+d_ff=5120 vocab=51866. Conv/mel frontend is a STUB: input_specs()
+supplies precomputed (batch, 1500, d_model) frame embeddings. long_500k
+skipped (<=1500-frame source, short decoder by construction).
+
+The embedding table is padded to 51872 (next multiple of 16) so the
+vocab axis shards evenly over the 16-way model axis — standard
+production practice (the 6 pad rows are never addressed; the logical
+vocab remains 51866).
+"""
+import jax.numpy as jnp
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    family="audio",
+    n_layers=32,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    head_dim=64,
+    d_ff=5120,
+    vocab=51872,  # 51866 padded to a multiple of 16 (see docstring)
+    block_pattern=("attn",),
+    is_encoder_decoder=True,
+    n_encoder_layers=32,
+    n_audio_frames=1500,
+    use_bias=True,
+    tie_embeddings=True,
+    param_dtype=jnp.bfloat16,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="whisper-smoke",
+    family="audio",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab=128,
+    block_pattern=("attn",),
+    is_encoder_decoder=True,
+    n_encoder_layers=2,
+    n_audio_frames=30,
+    use_bias=True,
+)

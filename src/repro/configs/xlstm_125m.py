@@ -1,0 +1,38 @@
+"""xlstm-125m: sLSTM + mLSTM blocks [arXiv:2405.04517; unverified].
+
+12L d_model=768 4H vocab=50304, d_ff=0 (blocks own their projections).
+Pattern (mlstm x5, slstm) x 2 (paper uses ~[7:1]; 12 layers forces 5:1
+— noted deviation). Recurrent state O(1) -> long_500k RUNS.
+"""
+import jax.numpy as jnp
+from repro.models.common import ModelConfig
+
+_UNIT = ("mlstm",) * 5 + ("slstm",)
+
+CONFIG = ModelConfig(
+    name="xlstm-125m",
+    family="ssm",
+    n_layers=12,
+    d_model=768,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=192,
+    d_ff=0,
+    vocab=50304,
+    block_pattern=_UNIT,
+    tie_embeddings=True,
+    param_dtype=jnp.float32,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="xlstm-125m-smoke",
+    family="ssm",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    d_ff=0,
+    vocab=128,
+    block_pattern=("mlstm", "slstm"),
+)

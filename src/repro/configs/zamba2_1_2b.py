@@ -1,0 +1,52 @@
+"""zamba2-1.2b: Mamba2 backbone + weight-tied shared attention blocks
+[arXiv:2411.15242; hf].
+
+38L d_model=2048, ssm_state=64; shared transformer block (32H, kv=32,
+d_ff=8192) applied with per-use LoRA adapters, input = concat(hidden,
+initial embedding). Pattern: 19-layer unit (8 mamba, shared, 9 mamba,
+shared) x 2 = 38 layers with 4 shared-block applications. long_500k
+RUNS (SSM state is O(1); shared attn keeps full KV, linear decode).
+"""
+import jax.numpy as jnp
+from repro.models.common import ModelConfig
+
+_UNIT = ("mamba2",) * 8 + ("shared_attn",) + ("mamba2",) * 9 + ("shared_attn",)
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    n_layers=38,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab=32000,
+    block_pattern=_UNIT,
+    ssm_state=64,
+    ssm_conv=4,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    shared_lora_rank=128,
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    param_dtype=jnp.bfloat16,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="zamba2-1.2b-smoke",
+    family="hybrid",
+    n_layers=6,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab=128,
+    block_pattern=("mamba2", "mamba2", "shared_attn"),
+    ssm_state=8,
+    ssm_conv=4,
+    ssm_expand=2,
+    ssm_head_dim=16,
+    shared_lora_rank=8,
+)

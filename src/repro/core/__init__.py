@@ -1,0 +1,28 @@
+"""Karasu core: collaborative resource-configuration profiling.
+
+Public API:
+    run_search / run_search_moo   — the BO loops (naive | augmented | karasu)
+    Repository, RunRecord         — minimal-data sharing layer
+    SearchSpace encoders          — AWS (scout-like) and TPU-mesh spaces
+    fit_gp / build_ensemble       — the GP + RGPE machinery
+"""
+from .aggregation import SAR_METRICS, aggregate_metrics
+from .bo import BOConfig, run_search
+from .encoding import (SearchSpace, aws_search_space, scout_search_space,
+                       tpu_search_space)
+from .gp import GP, fit_gp, gp_posterior, gp_posterior_raw
+from .moo import pareto_of_result, run_search_moo
+from .repository import Repository
+from .rgpe import Ensemble, build_ensemble, compute_weights, ensemble_posterior
+from .selection import select_similar, select_similar_batched
+from .types import BOResult, Constraint, Objective, Observation, RunRecord
+
+__all__ = [
+    "SAR_METRICS", "aggregate_metrics", "BOConfig", "run_search",
+    "SearchSpace", "aws_search_space", "scout_search_space",
+    "tpu_search_space", "GP", "fit_gp", "gp_posterior", "gp_posterior_raw",
+    "pareto_of_result", "run_search_moo", "Repository", "Ensemble",
+    "build_ensemble", "compute_weights", "ensemble_posterior",
+    "select_similar", "select_similar_batched", "BOResult", "Constraint",
+    "Objective", "Observation", "RunRecord",
+]

@@ -1,0 +1,107 @@
+"""Acquisition functions: EI, constrained EI (EI x PoF), MC-EHVI.
+
+All minimization convention. CherryPick's NaiveBO uses EI with the
+feasibility-weighted form for runtime constraints; Karasu applies the
+same acquisitions on the RGPE ensemble posterior; the MOO extension
+(paper §III-D) weights expected (hypervolume) improvement of the
+objectives by the probability of feasibility under every constraint.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _phi(z):
+    return jnp.exp(-0.5 * z * z) / jnp.sqrt(2.0 * jnp.pi)
+
+
+def _Phi(z):
+    return 0.5 * (1.0 + jax.scipy.special.erf(z / jnp.sqrt(2.0)))
+
+
+def expected_improvement(mu: jnp.ndarray, var: jnp.ndarray,
+                         best: jnp.ndarray) -> jnp.ndarray:
+    """Closed-form EI for minimization."""
+    sigma = jnp.sqrt(var)
+    z = (best - mu) / sigma
+    ei = sigma * (z * _Phi(z) + _phi(z))
+    return jnp.maximum(ei, 0.0)
+
+
+def mc_expected_improvement(samples: jnp.ndarray, best: float
+                            ) -> jnp.ndarray:
+    """samples: (S, q) posterior draws -> (q,) MC-EI (noisy-EI style)."""
+    return jnp.mean(jnp.maximum(best - samples, 0.0), axis=0)
+
+
+def probability_of_feasibility(mu: jnp.ndarray, var: jnp.ndarray,
+                               upper_bound: float) -> jnp.ndarray:
+    """P(measure <= upper_bound) under the (Gaussian) constraint model."""
+    return _Phi((upper_bound - mu) / jnp.sqrt(var))
+
+
+def constrained_ei(mu_obj, var_obj, best,
+                   constraint_posteriors: Sequence[Tuple[jnp.ndarray,
+                                                         jnp.ndarray,
+                                                         float]]
+                   ) -> jnp.ndarray:
+    """EI(objective) x prod_k PoF(constraint_k)."""
+    acq = expected_improvement(mu_obj, var_obj, best)
+    for mu_c, var_c, ub in constraint_posteriors:
+        acq = acq * probability_of_feasibility(mu_c, var_c, ub)
+    return acq
+
+
+# ---------------------------------------------------------------------------
+# 2-objective MC expected hypervolume improvement
+# ---------------------------------------------------------------------------
+
+
+def _hv_2d(front: np.ndarray, ref: np.ndarray) -> float:
+    """Hypervolume dominated by `front` (minimization) wrt `ref` point.
+    front: (k, 2)."""
+    pts = front[np.all(front <= ref, axis=1)]
+    if len(pts) == 0:
+        return 0.0
+    pts = pts[np.argsort(pts[:, 0])]
+    hv, prev_y = 0.0, ref[1]
+    for x, y in pts:
+        if y < prev_y:
+            hv += (ref[0] - x) * (prev_y - y)
+            prev_y = y
+    return float(hv)
+
+
+def pareto_front(points: np.ndarray) -> np.ndarray:
+    """Non-dominated subset (minimization)."""
+    keep = []
+    for i, p in enumerate(points):
+        dominated = np.any(np.all(points <= p, axis=1)
+                           & np.any(points < p, axis=1))
+        if not dominated:
+            keep.append(i)
+    return points[keep]
+
+
+def mc_ehvi(samples_a: np.ndarray, samples_b: np.ndarray,
+            observed: np.ndarray, ref: np.ndarray) -> np.ndarray:
+    """MC expected hypervolume improvement for 2 objectives.
+
+    samples_a/b: (S, q) posterior draws per objective; observed: (n, 2)
+    current observations; ref: (2,) reference point. Returns (q,)."""
+    front = pareto_front(observed)
+    hv0 = _hv_2d(front, ref)
+    s, q = samples_a.shape
+    out = np.zeros(q)
+    for j in range(q):
+        gain = 0.0
+        for i in range(s):
+            p = np.array([samples_a[i, j], samples_b[i, j]])
+            hv1 = _hv_2d(np.vstack([front, p[None]]), ref)
+            gain += max(hv1 - hv0, 0.0)
+        out[j] = gain / s
+    return out

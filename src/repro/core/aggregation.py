@@ -1,0 +1,28 @@
+"""The paper's ``agg`` function (§III-B): R^{n x t} -> R^{n x b}, b << t.
+
+Low-level metrics recorded per machine over time are compacted to
+per-metric quantiles (10th/50th/90th by default) across time AND
+machines, yielding the compact metric vector shared in the repository —
+six sar metrics x three quantiles = 18 floats in the paper's setup.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import numpy as np
+
+DEFAULT_QUANTILES: Tuple[float, ...] = (0.1, 0.5, 0.9)
+
+# sar metrics used in the paper's evaluation (§IV-B)
+SAR_METRICS = ("cpu_idle_pct", "mem_used_pct", "disk_util_pct",
+               "net_ifutil_pct", "swap_used_pct", "paging_vmeff_pct")
+
+
+def aggregate_metrics(raw: np.ndarray,
+                      quantiles: Sequence[float] = DEFAULT_QUANTILES
+                      ) -> np.ndarray:
+    """raw: (n_metrics, ...) metric samples over (machines x time) or any
+    trailing layout -> (n_metrics, len(quantiles)) compact matrix."""
+    raw = np.asarray(raw, dtype=np.float64)
+    flat = raw.reshape(raw.shape[0], -1)
+    return np.quantile(flat, list(quantiles), axis=1).T.copy()

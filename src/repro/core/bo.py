@@ -1,0 +1,244 @@
+"""Search-based resource-configuration profiling loops.
+
+  - NaiveBO    (CherryPick): Matern-5/2 GP prior + EI, constraints via
+               probability of feasibility.
+  - AugmentedBO (Arrow): Extra-Trees prior fed low-level metric averages,
+               EI acquisition.
+  - Karasu     : NaiveBO extended with the RGPE ensemble over support
+               models chosen by Algorithm 1 from the shared repository.
+
+All methods share the same protocol (paper §IV-C): 3 random initial
+samples, <= 20 profiling runs, optional CherryPick stopping rule (stop
+when max EI <= 10% of the incumbent and >= 6 runs done).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .acquisition import (constrained_ei, expected_improvement,
+                          probability_of_feasibility)
+from .encoding import SearchSpace
+from .extra_trees import fit_extra_trees
+from .gp import GP, fit_gp, gp_posterior
+from .repository import Repository
+from .rgpe import build_ensemble, ensemble_posterior, target_best
+from .selection import select_similar_batched
+from .types import BOResult, Constraint, Objective, Observation, RunRecord
+
+ProfileFn = Callable[[Mapping], Tuple[Dict[str, float], np.ndarray]]
+# profile_fn(config) -> (measures, compact metric matrix)
+
+
+@dataclasses.dataclass(frozen=True)
+class BOConfig:
+    n_init: int = 3
+    max_iters: int = 20
+    noise: float = 0.1
+    early_stop: bool = False
+    ei_threshold: float = 0.1     # CherryPick: stop when EI <= 10% incumbent
+    min_iters: int = 6
+    n_support: int = 3            # Karasu support models
+    rgpe_samples: int = 256
+    kernel_impl: str = "xla"      # xla | pallas | pallas_interpret
+
+
+def _feasible(obs: Observation, constraints: Sequence[Constraint]) -> bool:
+    return all(obs.measures[c.name] <= c.upper_bound for c in constraints)
+
+
+def _best_feasible_value(observations, objective, constraints):
+    vals = [o.measures[objective.name] for o in observations
+            if _feasible(o, constraints)]
+    return min(vals) if vals else None
+
+
+def _best_index_so_far(observations, objective, constraints) -> int:
+    best_i, best_v = -1, np.inf
+    for i, o in enumerate(observations):
+        if _feasible(o, constraints) and o.measures[objective.name] < best_v:
+            best_i, best_v = i, o.measures[objective.name]
+    return best_i
+
+
+class _SupportModelCache:
+    """GP per (workload, measure) fit on repository runs; reused across
+    iterations."""
+
+    def __init__(self, space: SearchSpace, noise: float):
+        self.space = space
+        self.noise = noise
+        self._cache: Dict[Tuple[str, str], Optional[GP]] = {}
+
+    def get(self, repo: Repository, z: str, measure: str) -> Optional[GP]:
+        k = (z, measure)
+        if k not in self._cache:
+            runs = repo.runs(z)
+            xs, ys = [], []
+            for r in runs:
+                if measure in r.measures:
+                    xs.append(self.space.encode(r.config))
+                    ys.append(r.measures[measure])
+            if len(ys) >= 3 and np.ptp(ys) > 0:
+                self._cache[k] = fit_gp(np.stack(xs), np.array(ys),
+                                        noise=self.noise)
+            else:
+                self._cache[k] = None
+        return self._cache[k]
+
+
+def _model_posteriors_karasu(observations, space, repo, measures, cfg,
+                             cache, key, xq):
+    """RGPE ensemble posterior per measure + target scalers."""
+    target_runs = [RunRecord("__target__", o.config, o.metrics,
+                             o.measures) for o in observations
+                   if o.metrics is not None]
+    selected = select_similar_batched(
+        target_runs, repo.all_runs(), cfg.n_support, impl=cfg.kernel_impl)
+
+    out = {}
+    x = np.stack([o.x for o in observations])
+    for mi, m in enumerate(measures):
+        y = np.array([o.measures[m] for o in observations])
+        tgt = fit_gp(x, y, noise=cfg.noise)
+        bases = []
+        for z, _score in selected:
+            gp = cache.get(repo, z, m)
+            if gp is not None:
+                bases.append(gp)
+        if bases:
+            ens = build_ensemble(bases, tgt, jax.random.fold_in(key, mi),
+                                 n_samples=cfg.rgpe_samples,
+                                 impl=cfg.kernel_impl)
+            mu, var = ensemble_posterior(ens, xq)
+            w = np.asarray(ens.weights)
+        else:
+            mu, var = gp_posterior(tgt, xq)
+            w = np.array([1.0])
+        out[m] = {"mu": mu, "var": var, "y_mean": tgt.y_mean,
+                  "y_std": tgt.y_std, "weights": w}
+    return out, selected
+
+
+def _model_posteriors_naive(observations, measures, cfg, xq):
+    out = {}
+    x = np.stack([o.x for o in observations])
+    for m in measures:
+        y = np.array([o.measures[m] for o in observations])
+        gp = fit_gp(x, y, noise=cfg.noise)
+        mu, var = gp_posterior(gp, xq)
+        out[m] = {"mu": mu, "var": var, "y_mean": gp.y_mean,
+                  "y_std": gp.y_std}
+    return out
+
+
+def _model_posteriors_augmented(observations, measures, cfg, xq, seed):
+    """Arrow: Extra-Trees on [encoded config ++ low-level metric means];
+    candidate metrics imputed with the observed means."""
+    out = {}
+    metr = np.stack([
+        np.mean(o.metrics, axis=1) if o.metrics is not None
+        else np.zeros(6) for o in observations])
+    x = np.stack([o.x for o in observations])
+    x_aug = np.concatenate([x, metr], axis=1)
+    imput = np.tile(metr.mean(0), (xq.shape[0], 1))
+    xq_aug = np.concatenate([np.asarray(xq), imput], axis=1)
+    for m in measures:
+        y = np.array([o.measures[m] for o in observations])
+        et = fit_extra_trees(x_aug, y, seed=seed)
+        mu, var = et.posterior(xq_aug)
+        out[m] = {"mu": jnp.asarray(mu), "var": jnp.asarray(var),
+                  "y_mean": jnp.asarray(et.y_mean),
+                  "y_std": jnp.asarray(et.y_std)}
+    return out
+
+
+def run_search(
+    space: SearchSpace,
+    profile_fn: ProfileFn,
+    objective: Objective,
+    constraints: Sequence[Constraint] = (),
+    *,
+    method: str = "naive",            # naive | augmented | karasu
+    repository: Optional[Repository] = None,
+    bo_config: BOConfig = BOConfig(),
+    seed: int = 0,
+) -> BOResult:
+    cfg = bo_config
+    key = jax.random.PRNGKey(seed)
+    rng = np.random.default_rng(seed)
+    measures = [objective.name] + [c.name for c in constraints]
+    xq_all = space.all_encoded()
+    cache = _SupportModelCache(space, cfg.noise)
+
+    observations: List[Observation] = []
+    best_idx: List[int] = []
+    profiled: set = set()
+    stopped_at = cfg.max_iters
+    meta: Dict = {"method": method, "selected": []}
+
+    def profile(ci: int):
+        config = space.configs[ci]
+        measures_out, metrics = profile_fn(config)
+        observations.append(Observation(
+            config=config, x=xq_all[ci], measures=measures_out,
+            metrics=metrics))
+        profiled.add(ci)
+        best_idx.append(_best_index_so_far(observations, objective,
+                                           constraints))
+
+    # --- random initialisation (3 samples, paper §IV-B) -------------------
+    init = rng.choice(len(space), size=min(cfg.n_init, len(space)),
+                      replace=False)
+    for ci in init:
+        profile(int(ci))
+
+    for it in range(len(observations), cfg.max_iters):
+        remaining = [i for i in range(len(space)) if i not in profiled]
+        if not remaining:
+            stopped_at = it
+            break
+        xq = xq_all[remaining]
+
+        if method == "karasu" and repository is not None:
+            post, selected = _model_posteriors_karasu(
+                observations, space, repository, measures, cfg, cache,
+                jax.random.fold_in(key, it), xq)
+            meta["selected"].append([z for z, _ in selected])
+        elif method == "augmented":
+            post = _model_posteriors_augmented(observations, measures, cfg,
+                                               xq, seed)
+        else:
+            post = _model_posteriors_naive(observations, measures, cfg, xq)
+
+        # objective EI on the model's standardised scale
+        obj_post = post[objective.name]
+        best_raw = _best_feasible_value(observations, objective, constraints)
+        if best_raw is None:
+            best_raw = min(o.measures[objective.name] for o in observations)
+        best_std = (best_raw - obj_post["y_mean"]) / obj_post["y_std"]
+        cons_posts = []
+        for c in constraints:
+            cp = post[c.name]
+            ub_std = (c.upper_bound - cp["y_mean"]) / cp["y_std"]
+            cons_posts.append((cp["mu"], cp["var"], ub_std))
+        acq = constrained_ei(obj_post["mu"], obj_post["var"], best_std,
+                             cons_posts)
+        acq = np.asarray(acq)
+
+        # CherryPick stopping rule: max EI <= 10% of incumbent
+        if cfg.early_stop and len(observations) >= cfg.min_iters:
+            ei_raw = float(np.max(acq)) * float(obj_post["y_std"])
+            if ei_raw <= cfg.ei_threshold * abs(best_raw):
+                stopped_at = it
+                break
+
+        profile(remaining[int(np.argmax(acq))])
+
+    meta["n_profiled"] = len(observations)
+    return BOResult(observations=observations, best_index_per_iter=best_idx,
+                    stopped_at=stopped_at, meta=meta)

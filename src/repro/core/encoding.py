@@ -1,0 +1,152 @@
+"""Resource-configuration encoders ``h`` (paper §III-B).
+
+The encoder deterministically maps a resource configuration to a
+discretised vector; its bounds describe the search space. Two concrete
+spaces ship with the framework:
+
+  - ``aws_search_space``  (machine type x node count) — the paper's
+    evaluation space on the scout-like dataset.
+  - ``tpu_search_space``  (pods x data x model layout, microbatch, remat,
+    EP mode) — the TPU-pod adaptation used by launch/karasu_search.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Any, Callable, Dict, List, Mapping, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchSpace:
+    """Discrete search space + encoder."""
+    name: str
+    configs: Tuple[Mapping[str, Any], ...]           # all candidates
+    encoder: Callable[[Mapping[str, Any]], np.ndarray]
+
+    def encode(self, config: Mapping[str, Any]) -> np.ndarray:
+        return np.asarray(self.encoder(config), dtype=np.float64)
+
+    def all_encoded(self) -> np.ndarray:
+        return np.stack([self.encode(c) for c in self.configs])
+
+    def __len__(self) -> int:
+        return len(self.configs)
+
+
+# ---------------------------------------------------------------------------
+# AWS space (scout-like): machine specs after CherryPick/Arrow
+# ---------------------------------------------------------------------------
+
+# family -> (cores, mem_gb, io_scale, net_scale) for the '.large' size
+AWS_FAMILIES: Dict[str, Tuple[int, float, float, float]] = {
+    "c4": (2, 3.75, 1.0, 1.0),
+    "m4": (2, 8.0, 1.0, 1.0),
+    "r4": (2, 15.25, 1.0, 2.0),
+}
+AWS_SIZES = {"large": 1, "xlarge": 2, "2xlarge": 4}
+
+
+def machine_features(machine_type: str) -> Dict[str, float]:
+    family, size = machine_type.split(".")
+    cores, mem, io, net = AWS_FAMILIES[family]
+    scale = AWS_SIZES[size]
+    return {
+        "cores": cores * scale,
+        "mem_gb": mem * scale,
+        "io_scale": io * scale,
+        "net_scale": net * scale,
+        "mem_per_core": mem / cores,
+    }
+
+
+def _aws_encode(config: Mapping[str, Any]) -> np.ndarray:
+    f = machine_features(str(config["machine_type"]))
+    n = int(config["node_count"])
+    return np.array([
+        math.log2(n) / 6.0,                  # node count (<= 64)
+        math.log2(f["cores"]) / 5.0,         # per-machine cores
+        math.log2(f["mem_gb"]) / 7.0,        # per-machine memory
+        f["mem_per_core"] / 8.0,             # family signature
+        f["net_scale"] / 8.0,
+        math.log2(f["cores"] * n) / 9.0,     # total cores
+        math.log2(f["mem_gb"] * n) / 11.0,   # total memory
+    ])
+
+
+def aws_search_space(machine_types: Sequence[str],
+                     node_counts: Sequence[int]) -> SearchSpace:
+    configs = tuple({"machine_type": mt, "node_count": nc}
+                    for mt in machine_types for nc in node_counts)
+    return SearchSpace("aws", configs, _aws_encode)
+
+
+# the 69-config scout-like space: 9 machine types x scaleouts
+SCOUT_MACHINE_TYPES = tuple(f"{fam}.{size}" for fam in AWS_FAMILIES
+                            for size in AWS_SIZES)
+SCOUT_NODE_COUNTS_WIDE = (4, 6, 8, 10, 12, 16, 20, 24)
+
+
+def scout_search_space() -> SearchSpace:
+    """9 machine types x 8 scaleouts = 72, trimmed to 69 as in scout
+    (the three largest r4.2xlarge scaleouts are absent)."""
+    configs = [
+        {"machine_type": mt, "node_count": nc}
+        for mt in SCOUT_MACHINE_TYPES for nc in SCOUT_NODE_COUNTS_WIDE
+    ]
+    configs = [c for c in configs
+               if not (c["machine_type"] == "r4.2xlarge"
+                       and c["node_count"] >= 20)]
+    configs = configs[:69]
+    return SearchSpace("scout-aws", tuple(configs), _aws_encode)
+
+
+# ---------------------------------------------------------------------------
+# TPU mesh space: the hardware adaptation
+# ---------------------------------------------------------------------------
+
+
+def _tpu_encode(config: Mapping[str, Any]) -> np.ndarray:
+    pods = int(config["pods"])
+    dp = int(config["data"])
+    mp = int(config["model"])
+    mb = int(config["microbatches"])
+    remat = 1.0 if config.get("remat", True) else 0.0
+    ep = {"none": 0.0, "allgather": 0.5, "a2a": 1.0}[
+        config.get("ep_mode", "none")]
+    sp = 1.0 if config.get("seq_parallel") else 0.0
+    chips = pods * dp * mp
+    return np.array([
+        math.log2(chips) / 10.0,
+        math.log2(mp) / 8.0,
+        math.log2(dp) / 8.0,
+        math.log2(pods) / 3.0 if pods > 1 else 0.0,
+        math.log2(mb) / 6.0 if mb >= 1 else 0.0,
+        remat,
+        ep,
+        sp,
+    ])
+
+
+def tpu_search_space(chips_per_pod: int = 256,
+                     pods: Sequence[int] = (1, 2),
+                     model_par: Sequence[int] = (4, 8, 16, 32),
+                     microbatches: Sequence[int] = (1, 2, 4, 8, 16),
+                     ep_modes: Sequence[str] = ("none",),
+                     remat_opts: Sequence[bool] = (True,),
+                     seq_parallel: Sequence[bool] = (False,)) -> SearchSpace:
+    configs = []
+    for p, mp, mb, ep, rm, sp in itertools.product(
+            pods, model_par, microbatches, ep_modes, remat_opts,
+            seq_parallel):
+        if chips_per_pod % mp:
+            continue
+        dp = chips_per_pod // mp
+        configs.append({"pods": p, "data": dp, "model": mp,
+                        "microbatches": mb, "ep_mode": ep, "remat": rm,
+                        "seq_parallel": sp,
+                        "machine_type": f"v5e-pod{p}x{mp}",
+                        "node_count": p * chips_per_pod // 4})
+    return SearchSpace("tpu-mesh", tuple(configs), _tpu_encode)

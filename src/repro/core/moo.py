@@ -1,0 +1,118 @@
+"""Multi-objective optimisation (paper §III-D).
+
+Each objective and each constraint gets its OWN model (GP or RGPE
+ensemble) — treated as independent, so the approach applies without
+correlation priors and workloads optimised under different objective
+sets can still share models. Acquisition: MC expected hypervolume
+improvement over the (2-objective) posterior, weighted by the
+probability of feasibility under every constraint.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .acquisition import mc_ehvi, pareto_front, probability_of_feasibility
+from .bo import (BOConfig, ProfileFn, _model_posteriors_karasu,
+                 _model_posteriors_naive, _SupportModelCache, _feasible)
+from .encoding import SearchSpace
+from .repository import Repository
+from .types import BOResult, Constraint, Objective, Observation
+
+
+def run_search_moo(
+    space: SearchSpace,
+    profile_fn: ProfileFn,
+    objectives: Sequence[Objective],
+    constraints: Sequence[Constraint] = (),
+    *,
+    method: str = "naive",            # naive | karasu
+    repository: Optional[Repository] = None,
+    bo_config: BOConfig = BOConfig(),
+    seed: int = 0,
+    n_mc: int = 64,
+) -> BOResult:
+    assert len(objectives) == 2, "MC-EHVI path implemented for 2 objectives"
+    cfg = bo_config
+    key = jax.random.PRNGKey(seed)
+    rng = np.random.default_rng(seed)
+    measures = [o.name for o in objectives] + [c.name for c in constraints]
+    xq_all = space.all_encoded()
+    cache = _SupportModelCache(space, cfg.noise)
+
+    observations: List[Observation] = []
+    profiled: set = set()
+    best_idx: List[int] = []
+    stopped_at = cfg.max_iters
+
+    def profile(ci: int):
+        config = space.configs[ci]
+        m, metr = profile_fn(config)
+        observations.append(Observation(config=config, x=xq_all[ci],
+                                        measures=m, metrics=metr))
+        profiled.add(ci)
+        best_idx.append(len(observations) - 1)
+
+    for ci in rng.choice(len(space), size=min(cfg.n_init, len(space)),
+                         replace=False):
+        profile(int(ci))
+
+    for it in range(len(observations), cfg.max_iters):
+        remaining = [i for i in range(len(space)) if i not in profiled]
+        if not remaining:
+            stopped_at = it
+            break
+        xq = xq_all[remaining]
+
+        if method == "karasu" and repository is not None:
+            post, _sel = _model_posteriors_karasu(
+                observations, space, repository, measures, cfg, cache,
+                jax.random.fold_in(key, it), xq)
+        else:
+            post = _model_posteriors_naive(observations, measures, cfg, xq)
+
+        # raw-scale posterior samples per objective
+        samples = []
+        for oi, obj in enumerate(objectives):
+            p = post[obj.name]
+            k = jax.random.fold_in(key, 1000 + it * 10 + oi)
+            eps = jax.random.normal(k, (n_mc, xq.shape[0]))
+            s = (p["mu"][None] + eps * jnp.sqrt(p["var"])[None])
+            samples.append(np.asarray(s * p["y_std"] + p["y_mean"]))
+
+        feas_obs = [o for o in observations if _feasible(o, constraints)] \
+            or observations
+        observed = np.array([[o.measures[objectives[0].name],
+                              o.measures[objectives[1].name]]
+                             for o in feas_obs])
+        ref = observed.max(axis=0) * 1.1 + 1e-9
+        acq = mc_ehvi(samples[0], samples[1], observed, ref)
+
+        for c in constraints:
+            cp = post[c.name]
+            ub_std = (c.upper_bound - cp["y_mean"]) / cp["y_std"]
+            pof = np.asarray(probability_of_feasibility(
+                cp["mu"], cp["var"], float(ub_std)))
+            acq = acq * pof
+
+        profile(remaining[int(np.argmax(acq))])
+
+    return BOResult(observations=observations, best_index_per_iter=best_idx,
+                    stopped_at=stopped_at,
+                    meta={"method": method, "moo": True,
+                          "objectives": [o.name for o in objectives]})
+
+
+def pareto_of_result(result: BOResult, objectives: Sequence[Objective],
+                     constraints: Sequence[Constraint] = ()) -> np.ndarray:
+    pts = np.array([[o.measures[objectives[0].name],
+                     o.measures[objectives[1].name]]
+                    for o in result.observations
+                    if _feasible(o, constraints)])
+    if len(pts) == 0:
+        return np.empty((0, 2))
+    return pareto_front(pts)

@@ -1,0 +1,88 @@
+"""The shared performance-data repository (paper §III-B "Sharing").
+
+Stores only minimal tuples (z, c, agg(l), y). Supports the evaluation's
+data-availability filters (Cases A-D) through arbitrary predicates over
+*private* workload tags kept OUTSIDE the shared record (the emulation
+layer knows each workload's framework/algorithm/dataset; the repository
+payload itself never contains them).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from collections import defaultdict
+from typing import Callable, Dict, Iterable, List, Mapping, Optional, Sequence
+
+import numpy as np
+
+from .types import RunRecord
+
+
+class Repository:
+    def __init__(self) -> None:
+        self._runs: Dict[str, List[RunRecord]] = defaultdict(list)
+
+    # -- sharing API -------------------------------------------------------
+    def add_run(self, run: RunRecord) -> None:
+        self._runs[run.workload_id].append(run)
+
+    def add_runs(self, runs: Iterable[RunRecord]) -> None:
+        for r in runs:
+            self.add_run(r)
+
+    def workloads(self) -> List[str]:
+        return list(self._runs.keys())
+
+    def runs(self, workload_id: str) -> List[RunRecord]:
+        return list(self._runs.get(workload_id, []))
+
+    def all_runs(self) -> Dict[str, List[RunRecord]]:
+        return {z: list(rs) for z, rs in self._runs.items()}
+
+    def __len__(self) -> int:
+        return sum(len(rs) for rs in self._runs.values())
+
+    # -- filtering (evaluation harness) -------------------------------------
+    def filtered(self, keep: Callable[[str], bool]) -> "Repository":
+        out = Repository()
+        for z, rs in self._runs.items():
+            if keep(z):
+                out.add_runs(rs)
+        return out
+
+    def truncated(self, counts: Mapping[str, int]) -> "Repository":
+        """Keep only the first counts[z] runs per workload (heterogeneous
+        data-amount experiments, paper §IV-D)."""
+        out = Repository()
+        for z, rs in self._runs.items():
+            out.add_runs(rs[:counts.get(z, len(rs))])
+        return out
+
+    # -- persistence ---------------------------------------------------------
+    def save(self, path: str) -> None:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        payload = []
+        for z, rs in self._runs.items():
+            for r in rs:
+                payload.append({
+                    "z": z,
+                    "config": dict(r.config),
+                    "metrics": np.asarray(r.metrics).tolist(),
+                    "measures": {k: float(v) for k, v in r.measures.items()},
+                })
+        with open(path, "w") as f:
+            json.dump(payload, f)
+
+    @classmethod
+    def load(cls, path: str) -> "Repository":
+        repo = cls()
+        with open(path) as f:
+            payload = json.load(f)
+        for item in payload:
+            repo.add_run(RunRecord(
+                workload_id=item["z"],
+                config=item["config"],
+                metrics=np.asarray(item["metrics"]),
+                measures=item["measures"]))
+        return repo

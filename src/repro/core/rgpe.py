@@ -1,0 +1,119 @@
+"""Ranking-weighted Gaussian Process Ensemble (paper §III-B, after
+Feurer et al. 2022).
+
+Given base GPs fit on support workloads' shared observations and a target
+GP fit on the target's own (few) observations:
+
+ 1. sample each model's predictions at the target's observed configs
+    (base models: marginal posterior; target: leave-one-out posterior);
+ 2. score every sample with the *ranking loss* — the number of misranked
+    pairs vs the target's observed y (prediction scale never matters,
+    which is what makes cross-workload transfer possible);
+ 3. weight a_i = fraction of samples where model i achieves the minimum
+    loss (ties split evenly);
+ 4. weight-dilution prevention: a base model is dropped when its median
+    loss exceeds the 95th percentile of the target model's loss.
+
+The ensemble posterior is the a-weighted mixture:
+    mu = sum a_i mu_i,  var = sum a_i^2 var_i .
+
+The O(S * n^2) pairwise loss over MC samples is the compute hot spot at
+scale; ``repro.kernels.ranking_loss`` provides the Pallas-tiled version.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ranking_loss import ranking_loss
+from .gp import GP, gp_loo_samples, gp_posterior, gp_sample
+
+
+@dataclasses.dataclass(frozen=True)
+class Ensemble:
+    models: Tuple[GP, ...]         # base models + target LAST
+    weights: jnp.ndarray           # (m + 1,), on the simplex
+
+    @property
+    def target(self) -> GP:
+        return self.models[-1]
+
+
+def compute_weights(
+    base_models: Sequence[GP],
+    target: GP,
+    key: jax.Array,
+    *,
+    n_samples: int = 256,
+    dilution_percentile: float = 95.0,
+    impl: str = "xla",
+) -> jnp.ndarray:
+    """Returns (m+1,) weights; index -1 is the target model."""
+    x_tar, y_tar = target.x, target.y
+    n = int(y_tar.shape[0])
+    m = len(base_models)
+    if n < 2:
+        # a single observation cannot rank pairs: spread weight uniformly
+        # so the support models carry the prior (this is what lets Karasu
+        # diverge from the baselines already at profiling run 2, fig. 3)
+        return jnp.full((m + 1,), 1.0 / (m + 1))
+
+    keys = jax.random.split(key, m + 1)
+    losses = []
+    for i, gp in enumerate(base_models):
+        s = gp_sample(gp, x_tar, keys[i], n_samples)      # (S, n)
+        losses.append(ranking_loss(s, y_tar, impl=impl))  # (S,)
+    s_tar = gp_loo_samples(target, keys[-1], n_samples)
+    losses.append(ranking_loss(s_tar, y_tar, impl=impl))
+    loss_mat = jnp.stack(losses)                          # (m+1, S)
+
+    # weight-dilution prevention (Feurer et al. §4.2)
+    tar_pct = jnp.percentile(loss_mat[-1], dilution_percentile)
+    medians = jnp.median(loss_mat, axis=1)
+    diluted = medians > tar_pct
+    diluted = diluted.at[-1].set(False)                   # never drop target
+    loss_mat = jnp.where(diluted[:, None], jnp.inf, loss_mat)
+
+    # a_i = E_s[ 1(i in argmin) / |argmin| ]
+    mins = jnp.min(loss_mat, axis=0, keepdims=True)
+    is_min = (loss_mat == mins).astype(jnp.float32)
+    w = jnp.mean(is_min / jnp.sum(is_min, axis=0, keepdims=True), axis=1)
+    return w / jnp.sum(w)
+
+
+def build_ensemble(base_models: Sequence[GP], target: GP, key: jax.Array,
+                   *, n_samples: int = 256, impl: str = "xla") -> Ensemble:
+    w = compute_weights(base_models, target, key, n_samples=n_samples,
+                        impl=impl)
+    return Ensemble(tuple(base_models) + (target,), w)
+
+
+def ensemble_posterior(ens: Ensemble, xq: jnp.ndarray
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Weighted mixture posterior (standardised scale)."""
+    mus, vars_ = [], []
+    for gp in ens.models:
+        mu, var = gp_posterior(gp, xq)
+        mus.append(mu)
+        vars_.append(var)
+    mus = jnp.stack(mus)            # (m+1, q)
+    vars_ = jnp.stack(vars_)
+    w = ens.weights[:, None]
+    mu = jnp.sum(w * mus, axis=0)
+    var = jnp.sum((w ** 2) * vars_, axis=0)
+    return mu, jnp.maximum(var, 1e-10)
+
+
+def target_best(ens: Ensemble) -> jnp.ndarray:
+    """Best (min) observed target value on the ensemble's output scale.
+
+    The ensemble mean at observed data is dominated by the target model's
+    standardised y, so the incumbent for EI is the target's standardised
+    minimum scaled by its weight-mixed mean — we use the plain
+    standardised min, which is exact when the target carries the weight
+    and rank-correct otherwise."""
+    return jnp.min(ens.target.y)

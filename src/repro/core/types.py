@@ -1,0 +1,65 @@
+"""Core datatypes for Karasu.
+
+Data minimalism (paper §III-B): a shared run record carries ONLY
+``(z, c, agg(l), y)`` — an opaque workload id, the resource configuration,
+the quantile-compacted metric matrix, and the final performance measures.
+Nothing about the workload itself (framework, algorithm, dataset) crosses
+the sharing boundary.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class RunRecord:
+    workload_id: str                 # z_i — opaque id, no workload details
+    config: Mapping[str, Any]        # c_j — resource configuration
+    metrics: np.ndarray              # agg(l_ij): (n_metrics, n_quantiles)
+    measures: Mapping[str, float]    # y_ij: e.g. {"cost", "runtime", ...}
+
+    @property
+    def machine_type(self) -> str:
+        return str(self.config.get("machine_type", ""))
+
+    @property
+    def node_count(self) -> int:
+        return int(self.config.get("node_count", 1))
+
+    def metric_vector(self) -> np.ndarray:
+        return np.asarray(self.metrics, dtype=np.float64).reshape(-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Objective:
+    name: str                        # key into RunRecord.measures
+    minimize: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class Constraint:
+    name: str
+    upper_bound: float               # feasible iff measure <= upper_bound
+
+
+@dataclasses.dataclass
+class Observation:
+    config: Mapping[str, Any]
+    x: np.ndarray                    # encoded configuration
+    measures: Mapping[str, float]
+    metrics: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass
+class BOResult:
+    """History of one profiling search."""
+    observations: List[Observation]
+    best_index_per_iter: List[int]   # index of cheapest-feasible-so-far
+    stopped_at: int                  # iteration where early stop triggered
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def measures_array(self, key: str) -> np.ndarray:
+        return np.array([o.measures[key] for o in self.observations])

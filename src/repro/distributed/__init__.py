@@ -1,0 +1,3 @@
+from .context import DistContext, get_context, set_context, use_context
+
+__all__ = ["DistContext", "get_context", "set_context", "use_context"]

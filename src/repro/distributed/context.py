@@ -1,0 +1,60 @@
+"""Ambient distribution context.
+
+Model code is mesh-agnostic; the launcher installs a ``DistContext`` that
+tells distribution-aware layers (MoE expert parallelism, sequence-parallel
+attention) which mesh/axes to use. When no context is installed (unit
+tests, single-host CPU), layers fall back to purely local math.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional, Tuple
+
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass
+class DistContext:
+    mesh: Optional[Mesh] = None
+    batch_axes: Tuple[str, ...] = ("data",)  # batch shards over these
+    model_axis: str = "model"
+    # expert parallelism mode: none | allgather | a2a
+    ep_mode: str = "none"
+    # FSDP axis for expert weights (huge MoE archs); None = no FSDP
+    fsdp_axis: Optional[str] = None
+    # sequence axis used for context parallelism in long-prefill shapes
+    seq_axis: Optional[str] = None
+
+    @property
+    def model_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+    @property
+    def all_axes(self) -> Tuple[str, ...]:
+        return tuple(self.batch_axes) + (self.model_axis,)
+
+
+_CURRENT = DistContext()
+
+
+def get_context() -> DistContext:
+    return _CURRENT
+
+
+def set_context(ctx: DistContext) -> None:
+    global _CURRENT
+    _CURRENT = ctx
+
+
+@contextlib.contextmanager
+def use_context(ctx: DistContext):
+    global _CURRENT
+    prev = _CURRENT
+    _CURRENT = ctx
+    try:
+        yield ctx
+    finally:
+        _CURRENT = prev

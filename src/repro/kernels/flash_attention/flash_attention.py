@@ -1,0 +1,179 @@
+"""Pallas TPU flash attention (forward) with GQA / SWA / logit softcap.
+
+TPU-native design notes (vs. the CUDA flash-attention algorithm):
+  - The kv axis is the innermost *sequential* grid dimension; VMEM scratch
+    (acc, m, l) persists across kv steps of one (batch, head, q-block), so
+    the online-softmax state lives in VMEM instead of registers/SMEM.
+  - Block shapes are (block_q, head_dim) / (block_kv, head_dim); head_dim
+    is MXU-lane aligned by the caller (multiple of 128 preferred);
+    block_q/block_kv default to 128/512 so the working set
+    (bq*hd + 2*bkv*hd + bq*bkv fp32 words) stays well under 16 MiB VMEM.
+  - Fully-masked (causal/window) kv blocks are no-ops under @pl.when; a
+    production index_map would skip them outright — the roofline model
+    applies the causal 1/2 factor analytically instead.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    qpos_ref, kvpos_ref, kvmask_ref,  # position/validity inputs
+    q_ref, k_ref, v_ref,              # blocked tensor inputs
+    o_ref,                            # blocked output
+    acc_ref, m_ref, l_ref,            # VMEM scratch
+    *,
+    causal: bool,
+    window: int,
+    softcap: float,
+    scale: float,
+    n_kv_blocks: int,
+    block_q: int,
+    block_kv: int,
+):
+    kv_idx = pl.program_id(3)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (block_q, hd)
+    k = k_ref[0, 0].astype(jnp.float32)  # (block_kv, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # (bq, bkv)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+
+    qp = qpos_ref[0].astype(jnp.int32)   # (block_q,)
+    kp = kvpos_ref[0].astype(jnp.int32)  # (block_kv,)
+    mask = jnp.ones((block_q, block_kv), dtype=bool)
+    if causal:
+        mask &= qp[:, None] >= kp[None, :]
+    if window:
+        mask &= qp[:, None] - kp[None, :] < window
+    mask &= kvmask_ref[0][None, :] != 0
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                              # (bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kv_idx == n_kv_blocks - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe_l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,  # (batch, q_len, n_q_heads, head_dim)
+    k: jnp.ndarray,  # (batch, kv_len, n_kv_heads, head_dim)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_positions: Optional[jnp.ndarray] = None,
+    kv_positions: Optional[jnp.ndarray] = None,
+    kv_mask: Optional[jnp.ndarray] = None,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_kv: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, qlen, nq, hd = q.shape
+    _, kvlen, nkv, _ = k.shape
+    assert nq % nkv == 0, (nq, nkv)
+    group = nq // nkv
+    scale = scale if scale is not None else hd ** -0.5
+
+    block_q = min(block_q, qlen)
+    block_kv = min(block_kv, kvlen)
+
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(
+            jnp.arange(kvlen - qlen, kvlen), (b, qlen))
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(kvlen), (b, kvlen))
+    if kv_mask is None:
+        kv_mask = jnp.ones((b, kvlen), dtype=jnp.int32)
+    else:
+        kv_mask = kv_mask.astype(jnp.int32)
+
+    # pad sequence axes to block multiples; padded kv is masked out and
+    # padded q rows are dropped on return.
+    q_pad = (-qlen) % block_q
+    kv_pad = (-kvlen) % block_kv
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, ((0, 0), (0, q_pad)),
+                              constant_values=-(10 ** 9))
+    if kv_pad:
+        k = jnp.pad(k, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, kv_pad)))
+        kv_mask = jnp.pad(kv_mask, ((0, 0), (0, kv_pad)))
+
+    qlen_p, kvlen_p = qlen + q_pad, kvlen + kv_pad
+    n_q_blocks = qlen_p // block_q
+    n_kv_blocks = kvlen_p // block_kv
+
+    # layout: (batch, heads, seq, hd) so the blocked dims are the minor two
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    grid = (b, nq, n_q_blocks, n_kv_blocks)
+    kernel = functools.partial(
+        _flash_kernel,
+        causal=causal, window=window, softcap=softcap, scale=scale,
+        n_kv_blocks=n_kv_blocks, block_q=block_q, block_kv=block_kv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q), lambda bi, hi, qi, ki: (bi, qi)),
+            pl.BlockSpec((1, block_kv), lambda bi, hi, qi, ki: (bi, ki)),
+            pl.BlockSpec((1, block_kv), lambda bi, hi, qi, ki: (bi, ki)),
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd),
+                         lambda bi, hi, qi, ki: (bi, hi // group, ki, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd),
+                         lambda bi, hi, qi, ki: (bi, hi // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nq, qlen_p, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_positions, kv_positions, kv_mask, qt, kt, vt)
+
+    out = out.transpose(0, 2, 1, 3)  # (b, qlen_p, nq, hd)
+    return out[:, :qlen]

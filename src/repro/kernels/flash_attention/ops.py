@@ -1,0 +1,175 @@
+"""Dispatching wrapper for flash attention.
+
+impl:
+  - ``xla``              chunked online-softmax in pure jnp (lax.scan over
+                         kv blocks). Never materialises the (q, kv) score
+                         matrix for long sequences, so dry-run HLO byte
+                         counts stay realistic. Default on CPU and for
+                         dry-run lowering.
+  - ``pallas``           the TPU Pallas kernel (compiled).
+  - ``pallas_interpret`` the Pallas kernel in interpret mode (CPU tests).
+  - ``naive``            the ref oracle (tests / tiny shapes only).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .ref import attention_ref
+from .flash_attention import flash_attention_pallas
+
+_CHUNK = 1024
+_DECODE_Q = 8  # q_len at or below this uses the decode path
+
+
+def _decode_attention(q, k, v, *, causal, window, softcap, q_positions,
+                      kv_positions, kv_mask, scale):
+    """Small-q attention that materialises (b, h, q, S) scores.
+
+    GQA is handled by head grouping (no KV repeat), and every reduction
+    over the KV axis is a plain max/sum — so when the KV cache is sharded
+    over a mesh axis (flash-decoding style KV parallelism for long_500k),
+    GSPMD lowers the softmax into partial reductions + small all-reduces
+    instead of gathering the cache.
+    """
+    b, qlen, nq, hd = q.shape
+    _, kvlen, nkv, _ = k.shape
+    group = nq // nkv
+    scale = scale if scale is not None else hd ** -0.5
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(
+            jnp.arange(kvlen - qlen, kvlen), (b, qlen))
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(kvlen), (b, kvlen))
+    if kv_mask is None:
+        kv_mask = jnp.ones((b, kvlen), dtype=bool)
+
+    qg = q.reshape(b, qlen, nkv, group, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32)) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qp = q_positions[:, None, None, :, None]
+    kp = kv_positions[:, None, None, None, :]
+    mask = kv_mask[:, None, None, None, :]
+    if causal:
+        mask = mask & (qp >= kp)
+    if window:
+        mask = mask & (qp - kp < window)
+    s = jnp.where(mask, s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m)
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    l = jnp.where(l == 0.0, 1.0, l)
+    o = o / l.transpose(0, 3, 1, 2, 4)
+    return o.reshape(b, qlen, nq, hd).astype(q.dtype)
+
+
+def _xla_flash(q, k, v, *, causal, window, softcap, q_positions,
+               kv_positions, kv_mask, scale):
+    """Chunked online-softmax attention; one kv chunk per scan step."""
+    b, qlen, nq, hd = q.shape
+    _, kvlen, nkv, _ = k.shape
+    group = nq // nkv
+    scale = scale if scale is not None else hd ** -0.5
+
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(
+            jnp.arange(kvlen - qlen, kvlen), (b, qlen))
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(kvlen), (b, kvlen))
+    if kv_mask is None:
+        kv_mask = jnp.ones((b, kvlen), dtype=bool)
+
+    chunk = min(_CHUNK, kvlen)
+    pad = (-kvlen) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)))
+        kv_mask = jnp.pad(kv_mask, ((0, 0), (0, pad)))
+    n_chunks = (kvlen + pad) // chunk
+
+    # (chunks, b, chunk, ...) scan layout
+    ks = k.reshape(b, n_chunks, chunk, nkv, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, n_chunks, chunk, nkv, hd).transpose(1, 0, 2, 3, 4)
+    kps = kv_positions.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+    kms = kv_mask.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    qf = q.astype(jnp.float32)
+
+    def step(carry, chunk_in):
+        acc, m, l = carry
+        kc, vc, kpc, kmc = chunk_in
+        kh = jnp.repeat(kc, group, axis=2).astype(jnp.float32)
+        vh = jnp.repeat(vc, group, axis=2).astype(jnp.float32)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kh) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        qp = q_positions[:, None, :, None]
+        kp = kpc[:, None, None, :]
+        mask = kmc[:, None, None, :]
+        if causal:
+            mask &= qp >= kp
+        if window:
+            mask &= qp - kp < window
+        s = jnp.where(mask, s, -jnp.inf)
+        m_cur = jnp.max(s, axis=-1)                      # (b,h,q)
+        m_new = jnp.maximum(m, m_cur)
+        # guard fully-masked chunks (m_new may still be -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vh)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, nq, qlen, hd), jnp.float32)
+    m0 = jnp.full((b, nq, qlen), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, nq, qlen), jnp.float32)
+    # remat the chunk body: backward recomputes the (b,h,q,chunk) score
+    # transients from the carried (acc, m, l) instead of saving them
+    (acc, m, l), _ = jax.lax.scan(
+        jax.checkpoint(step, prevent_cse=False),
+        (acc0, m0, l0), (ks, vs, kps, kms))
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l[..., None]).transpose(0, 2, 1, 3)  # (b,q,h,hd)
+    return out.astype(q.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_positions: Optional[jnp.ndarray] = None,
+    kv_positions: Optional[jnp.ndarray] = None,
+    kv_mask: Optional[jnp.ndarray] = None,
+    scale: Optional[float] = None,
+    impl: str = "xla",
+) -> jnp.ndarray:
+    kwargs = dict(causal=causal, window=window, softcap=softcap,
+                  q_positions=q_positions, kv_positions=kv_positions,
+                  kv_mask=kv_mask, scale=scale)
+    if impl == "naive":
+        return attention_ref(q, k, v, **kwargs)
+    if impl == "decode":
+        return _decode_attention(q, k, v, **kwargs)
+    if impl == "xla":
+        if q.shape[1] <= _DECODE_Q < k.shape[1]:
+            return _decode_attention(q, k, v, **kwargs)
+        return _xla_flash(q, k, v, **kwargs)
+    if impl == "pallas":
+        return flash_attention_pallas(q, k, v, interpret=False, **kwargs)
+    if impl == "pallas_interpret":
+        return flash_attention_pallas(q, k, v, interpret=True, **kwargs)
+    raise ValueError(f"unknown attention impl {impl!r}")

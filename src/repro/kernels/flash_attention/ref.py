@@ -1,0 +1,69 @@
+"""Pure-jnp oracle for flash attention.
+
+Deliberately the most naive correct implementation: materialises the full
+(q_len, kv_len) score matrix in fp32. Used as the allclose reference for
+both the Pallas kernel and the chunked XLA path in ``ops.py``.
+
+Supports: GQA (n_q_heads a multiple of n_kv_heads), causal masking,
+sliding-window masking, attention-logit softcapping, explicit positions
+(for decode with a KV cache) and a KV validity mask.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import jax
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (batch, q_len, n_q_heads, head_dim)
+    k: jnp.ndarray,  # (batch, kv_len, n_kv_heads, head_dim)
+    v: jnp.ndarray,  # (batch, kv_len, n_kv_heads, head_dim)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_positions: Optional[jnp.ndarray] = None,  # (batch, q_len)
+    kv_positions: Optional[jnp.ndarray] = None,  # (batch, kv_len)
+    kv_mask: Optional[jnp.ndarray] = None,  # (batch, kv_len) bool
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    b, qlen, nq, hd = q.shape
+    _, kvlen, nkv, _ = k.shape
+    assert nq % nkv == 0, (nq, nkv)
+    group = nq // nkv
+    scale = scale if scale is not None else hd ** -0.5
+
+    if q_positions is None:
+        # default: q occupies the last qlen positions of the kv axis
+        q_positions = jnp.broadcast_to(
+            jnp.arange(kvlen - qlen, kvlen), (b, qlen))
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(kvlen), (b, kvlen))
+
+    kh = jnp.repeat(k, group, axis=2)  # (b, kv, nq, hd)
+    vh = jnp.repeat(v, group, axis=2)
+
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), kh.astype(jnp.float32)
+    ) * scale
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+
+    qp = q_positions[:, None, :, None]  # (b,1,q,1)
+    kp = kv_positions[:, None, None, :]  # (b,1,1,kv)
+    mask = jnp.ones_like(logits, dtype=bool)
+    if causal:
+        mask &= qp >= kp
+    if window:
+        mask &= qp - kp < window
+    if kv_mask is not None:
+        mask &= kv_mask[:, None, None, :]
+    logits = jnp.where(mask, logits, -jnp.inf)
+
+    probs = jax.nn.softmax(logits, axis=-1)
+    # rows that are fully masked produce NaN -> zero them
+    probs = jnp.where(jnp.any(mask, axis=-1, keepdims=True), probs, 0.0)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vh.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,5 @@
+from .ops import grouped_gemm
+from .ref import grouped_gemm_ref
+from .grouped_gemm import grouped_gemm_pallas
+
+__all__ = ["grouped_gemm", "grouped_gemm_ref", "grouped_gemm_pallas"]

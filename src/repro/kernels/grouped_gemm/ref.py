@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the grouped GEMM (MoE expert matmul).
+
+out[i] = lhs[i] @ rhs[group_of_row(i)] where rows of lhs are sorted by
+group and group_sizes gives the contiguous group lengths. Equivalent to
+jax.lax.ragged_dot; written as an explicit masked-dense loop so it is an
+independent reference.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def grouped_gemm_ref(lhs: jnp.ndarray, rhs: jnp.ndarray,
+                     group_sizes: jnp.ndarray) -> jnp.ndarray:
+    m, k = lhs.shape
+    g, _, n = rhs.shape
+    starts = jnp.concatenate([jnp.zeros(1, group_sizes.dtype),
+                              jnp.cumsum(group_sizes)])
+    rows = jnp.arange(m)
+    out = jnp.zeros((m, n), jnp.promote_types(lhs.dtype, rhs.dtype))
+    for gi in range(g):
+        mask = (rows >= starts[gi]) & (rows < starts[gi + 1])
+        contrib = (lhs * mask[:, None]).astype(jnp.float32) @ \
+            rhs[gi].astype(jnp.float32)
+        out = out + contrib.astype(out.dtype) * mask[:, None]
+    return out

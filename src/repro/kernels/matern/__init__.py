@@ -1,0 +1,5 @@
+from .ops import matern52
+from .ref import matern52_ref
+from .matern import matern52_pallas
+
+__all__ = ["matern52", "matern52_ref", "matern52_pallas"]

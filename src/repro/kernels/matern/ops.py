@@ -1,0 +1,18 @@
+"""Dispatcher for the Matern-5/2 pairwise kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .ref import matern52_ref
+from .matern import matern52_pallas
+
+
+def matern52(a: jnp.ndarray, b: jnp.ndarray, *, impl: str = "xla"
+             ) -> jnp.ndarray:
+    if impl == "xla":
+        return matern52_ref(a, b)
+    if impl == "pallas":
+        return matern52_pallas(a, b, interpret=False)
+    if impl == "pallas_interpret":
+        return matern52_pallas(a, b, interpret=True)
+    raise ValueError(f"unknown matern impl {impl!r}")

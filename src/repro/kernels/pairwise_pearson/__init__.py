@@ -1,0 +1,4 @@
+from .ops import pairwise_pearson
+from .ref import pairwise_pearson_ref
+
+__all__ = ["pairwise_pearson", "pairwise_pearson_ref"]

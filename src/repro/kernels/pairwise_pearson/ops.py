@@ -1,0 +1,46 @@
+"""Dispatcher for pairwise Pearson correlation."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import pairwise_pearson_ref
+from .pairwise_pearson import _pearson_kernel
+
+
+def _pallas(a, b, *, block: int = 256, interpret: bool = False):
+    m, d = a.shape
+    n, _ = b.shape
+    bm, bn = min(block, m), min(block, n)
+    pm, pn = (-m) % bm, (-n) % bn
+    pd = (-d) % 128 if not interpret else 0
+    if pm or pd:
+        a = jnp.pad(a, ((0, pm), (0, pd)))
+    if pn or pd:
+        b = jnp.pad(b, ((0, pn), (0, pd)))
+    out = pl.pallas_call(
+        functools.partial(_pearson_kernel, d_valid=d),
+        grid=((m + pm) // bm, (n + pn) // bn),
+        in_specs=[
+            pl.BlockSpec((bm, a.shape[1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, b.shape[1]), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m + pm, n + pn), jnp.float32),
+        interpret=interpret,
+    )(a, b)
+    return out[:m, :n]
+
+
+def pairwise_pearson(a: jnp.ndarray, b: jnp.ndarray, *, impl: str = "xla"
+                     ) -> jnp.ndarray:
+    if impl == "xla":
+        return pairwise_pearson_ref(a, b)
+    if impl == "pallas":
+        return _pallas(a, b, interpret=False)
+    if impl == "pallas_interpret":
+        return _pallas(a, b, interpret=True)
+    raise ValueError(f"unknown pairwise_pearson impl {impl!r}")

@@ -1,0 +1,4 @@
+from .ops import ranking_loss
+from .ref import ranking_loss_ref
+
+__all__ = ["ranking_loss", "ranking_loss_ref"]

@@ -1,0 +1,45 @@
+"""Dispatcher for the RGPE ranking loss."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import ranking_loss_ref
+from .ranking_loss import _rank_kernel
+
+
+def _pallas(preds: jnp.ndarray, y: jnp.ndarray, *, block_s: int = 128,
+            interpret: bool = False) -> jnp.ndarray:
+    s, n = preds.shape
+    bs = min(block_s, s)
+    ps = (-s) % bs
+    pn = (-n) % 128 if not interpret else 0
+    if ps or pn:
+        preds = jnp.pad(preds, ((0, ps), (0, pn)))
+    yp = jnp.pad(y, (0, pn))[None, :] if pn else y[None, :]
+    out = pl.pallas_call(
+        functools.partial(_rank_kernel, n_valid=n),
+        grid=((s + ps) // bs,),
+        in_specs=[
+            pl.BlockSpec((bs, preds.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((1, yp.shape[1]), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s + ps, 1), jnp.int32),
+        interpret=interpret,
+    )(preds, yp)
+    return out[:s, 0]
+
+
+def ranking_loss(preds: jnp.ndarray, y: jnp.ndarray, *, impl: str = "xla"
+                 ) -> jnp.ndarray:
+    if impl == "xla":
+        return ranking_loss_ref(preds, y)
+    if impl == "pallas":
+        return _pallas(preds, y, interpret=False)
+    if impl == "pallas_interpret":
+        return _pallas(preds, y, interpret=True)
+    raise ValueError(f"unknown ranking_loss impl {impl!r}")

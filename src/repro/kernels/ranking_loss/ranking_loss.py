@@ -1,0 +1,29 @@
+"""Pallas TPU kernel: batched pairwise ranking loss.
+
+At repository scale the RGPE weighting evaluates S x (m+1) models x n^2
+pairs; this kernel tiles the MC-sample axis into VMEM blocks of bs
+samples and evaluates all n^2 comparisons per block on the VPU (n <= 128
+observations per profiling search, so an (bs, n, n) bool tile fits VMEM
+comfortably; n is padded to the lane boundary by the wrapper with +inf
+sentinels that never flip a comparison asymmetrically — padded entries
+contribute XOR(False, False) = 0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rank_kernel(p_ref, y_ref, o_ref, *, n_valid: int):
+    p = p_ref[...].astype(jnp.float32)          # (bs, n)
+    y = y_ref[...].astype(jnp.float32)          # (1, n)
+    n = p.shape[1]
+    valid = (jnp.arange(n) < n_valid)
+    pl_ = p[:, :, None] < p[:, None, :]         # (bs, n, n)
+    yl = (y[0][:, None] < y[0][None, :])[None]
+    both = jnp.logical_and(valid[:, None], valid[None, :])[None]
+    xor = jnp.logical_xor(pl_, yl) & both
+    o_ref[...] = jnp.sum(xor.astype(jnp.int32), axis=(1, 2))[:, None]

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle: RGPE ranking loss.
+
+loss(s) = sum_{j,k} 1[ (pred_s[j] < pred_s[k]) XOR (y[j] < y[k]) ]
+for every MC sample s — the number of misranked pairs (paper §III-B).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ranking_loss_ref(preds: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """preds: (S, n) posterior samples; y: (n,) -> (S,) pair misrank counts."""
+    p = preds.astype(jnp.float32)
+    yf = y.astype(jnp.float32)
+    pl_ = p[:, :, None] < p[:, None, :]          # (S, n, n)
+    yl = (yf[:, None] < yf[None, :])[None]       # (1, n, n)
+    return jnp.sum(jnp.logical_xor(pl_, yl), axis=(1, 2)).astype(jnp.int32)

@@ -1,0 +1,114 @@
+"""Dispatching wrapper for the SSD scan.
+
+impl:
+  - ``xla``              chunked SSD in pure jnp (lax.scan over chunks,
+                         quadratic within chunk). Default on CPU/dry-run.
+  - ``xla_sequential``   the ref oracle (per-step scan).
+  - ``pallas``           the TPU Pallas kernel.
+  - ``pallas_interpret`` the Pallas kernel in interpret mode (CPU tests).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .ref import ssm_scan_ref
+from .ssm_scan import ssm_scan_pallas
+
+_CHUNK = 128
+
+
+def _xla_chunked(x, dt, decay, B, C, initial_state, chunk=_CHUNK):
+    b, s, h, hd = x.shape
+    n = B.shape[-1]
+    per_head = B.ndim == 4
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        bc_pad = ((0, 0), (0, pad), (0, 0), (0, 0)) if per_head else \
+            ((0, 0), (0, pad), (0, 0))
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        decay = jnp.pad(decay, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        B = jnp.pad(B, bc_pad)
+        C = jnp.pad(C, bc_pad)
+    sp = s + pad
+    nc = sp // chunk
+
+    xf = x.astype(jnp.float32).reshape(b, nc, chunk, h, hd)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, chunk, h)
+    ld = jnp.log(jnp.maximum(decay.astype(jnp.float32), 1e-37)
+                 ).reshape(b, nc, chunk, h)
+    bc_shape = (b, nc, chunk, h, n) if per_head else (b, nc, chunk, n)
+    Bf = B.astype(jnp.float32).reshape(bc_shape)
+    Cf = C.astype(jnp.float32).reshape(bc_shape)
+
+    if initial_state is None:
+        S0 = jnp.zeros((b, h, hd, n), jnp.float32)
+    else:
+        S0 = initial_state.astype(jnp.float32)
+
+    tri = jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :]
+
+    def chunk_step(S, inp):
+        xc, dtc, ldc, Bc, Cc = inp  # (b, chunk, ...)
+        cum = jnp.cumsum(ldc, axis=1)                       # (b, t, h)
+        gamma = cum[:, :, None, :] - cum[:, None, :, :]     # (b, i, j, h)
+        # mask BEFORE exp: the upper triangle is exp(+large) = inf, and
+        # where(tri, inf, 0) poisons gradients with inf * 0 = NaN
+        m = jnp.exp(jnp.where(tri[None, :, :, None], gamma, -1e30))
+        if per_head:
+            scores = jnp.einsum("bihn,bjhn->bijh", Cc, Bc)
+        else:
+            scores = jnp.einsum("bin,bjn->bij", Cc, Bc)[..., None]
+        w = scores * m * dtc[:, None, :, :]                 # (b,i,j,h)
+        y_intra = jnp.einsum("bijh,bjhd->bihd", w, xc)
+        pt = jnp.exp(cum)                                   # (b, t, h)
+        if per_head:
+            y_inter = jnp.einsum("bihn,bhdn->bihd", Cc, S) * pt[..., None]
+        else:
+            y_inter = jnp.einsum("bin,bhdn->bihd", Cc, S) * pt[..., None]
+        y = y_intra + y_inter
+        coeff = jnp.exp(cum[:, -1:, :] - cum) * dtc         # (b, t, h)
+        if per_head:
+            upd = jnp.einsum("bthd,bthn->bhdn", xc * coeff[..., None], Bc)
+        else:
+            upd = jnp.einsum("bthd,btn->bhdn", xc * coeff[..., None], Bc)
+        S = S * pt[:, -1, :, None, None] + upd
+        return S, y
+
+    tp_bc = (1, 0, 2, 3, 4) if per_head else (1, 0, 2, 3)
+    inps = (xf.transpose(1, 0, 2, 3, 4), dtf.transpose(1, 0, 2, 3),
+            ld.transpose(1, 0, 2, 3), Bf.transpose(*tp_bc),
+            Cf.transpose(*tp_bc))
+    S, ys = jax.lax.scan(chunk_step, S0, inps)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, sp, h, hd)[:, :s]
+    return y.astype(x.dtype), S
+
+
+def ssm_scan(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    decay: jnp.ndarray,
+    B: jnp.ndarray,
+    C: jnp.ndarray,
+    *,
+    initial_state: Optional[jnp.ndarray] = None,
+    impl: str = "xla",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if impl == "xla_sequential":
+        return ssm_scan_ref(x, dt, decay, B, C, initial_state)
+    if impl == "xla":
+        # sequential ref is cheaper for decode (s == 1)
+        if x.shape[1] == 1:
+            return ssm_scan_ref(x, dt, decay, B, C, initial_state)
+        return _xla_chunked(x, dt, decay, B, C, initial_state)
+    if impl == "pallas":
+        return ssm_scan_pallas(x, dt, decay, B, C, initial_state,
+                               interpret=False)
+    if impl == "pallas_interpret":
+        return ssm_scan_pallas(x, dt, decay, B, C, initial_state,
+                               interpret=True)
+    raise ValueError(f"unknown ssm_scan impl {impl!r}")

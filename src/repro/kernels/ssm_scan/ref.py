@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for the Mamba2/SSD selective state-space scan.
+
+Sequential lax.scan over time — the obviously-correct reference.
+
+Recurrence (per batch b, head h, with state S in R^{head_dim x n}):
+    S_t = decay_t * S_{t-1} + dt_t * (x_t outer B_t)
+    y_t = S_t @ C_t
+B and C are shared across heads (n_groups = 1, as in Mamba2 defaults).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(
+    x: jnp.ndarray,      # (b, s, h, hd)
+    dt: jnp.ndarray,     # (b, s, h)
+    decay: jnp.ndarray,  # (b, s, h)  = exp(dt * A), in (0, 1]
+    B: jnp.ndarray,      # (b, s, n) shared across heads, or (b, s, h, n)
+    C: jnp.ndarray,      # (b, s, n) or (b, s, h, n)
+    initial_state: Optional[jnp.ndarray] = None,  # (b, h, hd, n)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, s, h, hd = x.shape
+    n = B.shape[-1]
+    if B.ndim == 3:  # broadcast shared B/C over heads
+        B = jnp.broadcast_to(B[:, :, None, :], (b, s, h, n))
+        C = jnp.broadcast_to(C[:, :, None, :], (b, s, h, n))
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    af = decay.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+
+    if initial_state is None:
+        S0 = jnp.zeros((b, h, hd, n), jnp.float32)
+    else:
+        S0 = initial_state.astype(jnp.float32)
+
+    def step(S, inp):
+        xt, dtt, at, Bt, Ct = inp
+        # S: (b, h, hd, n); Bt/Ct: (b, h, n)
+        upd = jnp.einsum("bhd,bhn->bhdn", xt * dtt[..., None], Bt)
+        S = S * at[..., None, None] + upd
+        yt = jnp.einsum("bhdn,bhn->bhd", S, Ct)
+        return S, yt
+
+    xs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+          af.transpose(1, 0, 2), Bf.transpose(1, 0, 2, 3),
+          Cf.transpose(1, 0, 2, 3))
+    S_final, ys = jax.lax.scan(step, S0, xs)
+    y = ys.transpose(1, 0, 2, 3)  # (b, s, h, hd)
+    return y.astype(x.dtype), S_final

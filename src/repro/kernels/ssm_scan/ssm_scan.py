@@ -1,0 +1,164 @@
+"""Pallas TPU kernel for the chunked Mamba2/SSD scan.
+
+TPU-native blocking: the time axis is split into chunks of ``block_t``;
+the grid is (batch, heads, n_chunks) with the chunk axis innermost and
+sequential, so the running state S (head_dim x n) lives in VMEM scratch
+across chunk steps — the HBM->VMEM traffic per chunk is just the chunk's
+x/B/C/dt blocks. Within a chunk the computation is two MXU matmuls
+(scores = C @ B^T masked by the decay segsum, y_intra = scores @ x) plus
+rank-1 state updates, mirroring the SSD "quadratic-within-chunk,
+recurrent-across-chunks" algorithm.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _segsum(logdecay: jnp.ndarray) -> jnp.ndarray:
+    """logdecay: (t,) -> Gamma[i, j] = sum_{u in (j, i]} logdecay[u], j<=i."""
+    t = logdecay.shape[0]
+    cum = jnp.cumsum(logdecay)
+    diff = cum[:, None] - cum[None, :]  # (t, t): sum over (j, i]
+    mask = jnp.arange(t)[:, None] >= jnp.arange(t)[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _ssd_kernel(x_ref, dt_ref, ld_ref, b_ref, c_ref, s0_ref,
+                y_ref, sfin_ref, state_ref, *, n_chunks: int, block_t: int,
+                per_head: bool):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, 0].astype(jnp.float32)        # (t, hd)
+    dt = dt_ref[0, 0].astype(jnp.float32)      # (t, 1) -> squeeze
+    ld = ld_ref[0, 0].astype(jnp.float32)      # (t, 1)
+    if per_head:
+        B = b_ref[0, 0].astype(jnp.float32)    # (t, n)
+        C = c_ref[0, 0].astype(jnp.float32)
+    else:
+        B = b_ref[0].astype(jnp.float32)       # (t, n)
+        C = c_ref[0].astype(jnp.float32)
+    dt = dt[:, 0]
+    ld = ld[:, 0]
+
+    S = state_ref[...]                          # (hd, n)
+
+    # within-chunk quadratic term
+    gamma = _segsum(ld)                         # (t, t)
+    scores = jax.lax.dot_general(
+        C, B, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)     # (t, t) = C_i . B_j
+    m = jnp.exp(gamma)                          # masked: 0 above diagonal
+    m = jnp.where(jnp.isfinite(gamma), m, 0.0)
+    w = scores * m * dt[None, :]                # weight on x_j for y_i
+    y_intra = jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)     # (t, hd)
+
+    # contribution of the carried-in state
+    cumld = jnp.cumsum(ld)
+    pt = jnp.exp(cumld)                         # (t,)
+    y_inter = jax.lax.dot_general(
+        C, S, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * pt[:, None]  # (t, hd)
+
+    y_ref[0, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: S' = P_T * S + sum_j (P_T / P_j) dt_j x_j B_j^T
+    total = pt[-1]
+    coeff = jnp.exp(cumld[-1] - cumld) * dt     # (t,)
+    upd = jax.lax.dot_general(
+        x * coeff[:, None], B, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)     # (hd, n)
+    state_ref[...] = S * total + upd
+
+    @pl.when(ci == n_chunks - 1)
+    def _fin():
+        sfin_ref[0, 0] = state_ref[...].astype(sfin_ref.dtype)
+
+
+def ssm_scan_pallas(
+    x: jnp.ndarray,      # (b, s, h, hd)
+    dt: jnp.ndarray,     # (b, s, h)
+    decay: jnp.ndarray,  # (b, s, h)
+    B: jnp.ndarray,      # (b, s, n) shared, or (b, s, h, n) per-head
+    C: jnp.ndarray,      # same shape as B
+    initial_state: Optional[jnp.ndarray] = None,
+    *,
+    block_t: int = 128,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, s, h, hd = x.shape
+    n = B.shape[-1]
+    per_head = B.ndim == 4
+    block_t = min(block_t, s)
+    pad = (-s) % block_t
+    if pad:
+        bc_pad = ((0, 0), (0, pad), (0, 0), (0, 0)) if per_head else \
+            ((0, 0), (0, pad), (0, 0))
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        # pad decay with 1.0 (log 0) so padded steps leave state untouched
+        decay = jnp.pad(decay, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=1.0)
+        B = jnp.pad(B, bc_pad)
+        C = jnp.pad(C, bc_pad)
+    sp = s + pad
+    n_chunks = sp // block_t
+
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, hd, n), jnp.float32)
+
+    logdecay = jnp.log(jnp.maximum(decay.astype(jnp.float32), 1e-37))
+
+    # layouts: (b, h, s, hd) for x/y; (b, h, s, 1) for dt/logdecay
+    xt = x.transpose(0, 2, 1, 3)
+    dtt = dt.transpose(0, 2, 1)[..., None]
+    ldt = logdecay.transpose(0, 2, 1)[..., None]
+    if per_head:
+        Bt = B.transpose(0, 2, 1, 3)  # (b, h, s, n)
+        Ct = C.transpose(0, 2, 1, 3)
+        bc_spec = pl.BlockSpec((1, 1, block_t, n),
+                               lambda bi, hi, ci: (bi, hi, ci, 0))
+    else:
+        Bt, Ct = B, C
+        bc_spec = pl.BlockSpec((1, block_t, n),
+                               lambda bi, hi, ci: (bi, ci, 0))
+
+    grid = (b, h, n_chunks)
+    kernel = functools.partial(_ssd_kernel, n_chunks=n_chunks,
+                               block_t=block_t, per_head=per_head)
+    y, sfin = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_t, hd), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, block_t, 1), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, block_t, 1), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            bc_spec,
+            bc_spec,
+            pl.BlockSpec((1, 1, hd, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_t, hd), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, hd, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, sp, hd), x.dtype),
+            jax.ShapeDtypeStruct((b, h, hd, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, n), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, ldt, Bt, Ct, initial_state)
+
+    y = y.transpose(0, 2, 1, 3)[:, :s]
+    return y, sfin

@@ -1,0 +1,280 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below runs with 512 placeholder devices -------------------
+import argparse
+import dataclasses
+import gzip
+import json
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ARCH_IDS, LONG_500K_SKIP, SHAPE_IDS, cells,
+                           get_config)
+from repro.configs.shapes import input_specs
+from repro.distributed import DistContext, use_context
+from repro.launch import hlo_stats
+from repro.launch.mesh import batch_axes_for, make_production_mesh
+from repro.launch.plans import LaunchPlan, get_plan, override
+from repro.launch.shardings import (batch_specs, cache_specs, opt_state_specs,
+                                    param_specs, to_shardings)
+from repro.models import build_model
+from repro.serve.step import make_decode_step, make_prefill_step
+from repro.train.optim import cosine_schedule, get_optimizer
+from repro.train.step import make_train_step
+
+
+def _microbatches_for(plan: LaunchPlan, mesh, global_batch: int) -> int:
+    """Clamp grad-accumulation so each microbatch still covers the batch
+    shards."""
+    bax = [a for a in ("pod", "data") if a in mesh.axis_names]
+    shards = 1
+    for a in bax:
+        shards *= mesh.shape[a]
+    mb = plan.microbatches
+    while mb > 1 and (global_batch % mb != 0
+                      or (global_batch // mb) % shards != 0):
+        mb //= 2
+    return max(mb, 1)
+
+
+def lower_cell(
+    arch: str,
+    shape_id: str,
+    *,
+    multi_pod: bool = False,
+    mesh=None,
+    plan: Optional[LaunchPlan] = None,
+    cfg_overrides: Optional[Dict[str, Any]] = None,
+) -> Tuple[Any, Dict[str, Any]]:
+    """Lower + compile one (arch x shape x mesh) cell; returns
+    (compiled, artifact_dict)."""
+    cfg = get_config(arch)
+    plan = plan or get_plan(arch)
+    cell_kind = "train" if shape_id.startswith("train") else "serve"
+    overrides = {"attn_impl": "xla",
+                 # remat is a backward-pass trade; serving never remats
+                 "remat": plan.remat if cell_kind == "train" else False}
+    overrides.update(cfg_overrides or {})
+    cfg = dataclasses.replace(cfg, **overrides)
+
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    bax = batch_axes_for(mesh)
+    ctx = DistContext(
+        mesh=mesh, batch_axes=bax,
+        ep_mode=plan.ep_mode if cfg.n_experts else "none",
+        fsdp_axis="data" if plan.fsdp_experts else None)
+
+    cell = input_specs(cfg, shape_id)
+    bundle = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    t0 = time.time()
+
+    with use_context(ctx):
+        params_shape = jax.eval_shape(bundle.init, key)
+        pspecs = param_specs(params_shape, cfg, mesh,
+                             fsdp_experts=plan.fsdp_experts)
+        pshard = to_shardings(pspecs, mesh)
+        bspecs = batch_specs(cell.batch, mesh, bax)
+        bshard = to_shardings(bspecs, mesh)
+
+        if cell.kind == "train":
+            opt = get_optimizer(plan.optimizer)
+            opt_shape = jax.eval_shape(opt.init, params_shape)
+            ospecs = opt_state_specs(opt_shape, mesh)
+            oshard = to_shardings(ospecs, mesh)
+            mb = _microbatches_for(plan, mesh, cell.global_batch)
+            gspecs = opt_state_specs(params_shape, mesh)  # fully sharded
+            gshard = to_shardings(gspecs, mesh) if mb > 1 else None
+            step_fn = make_train_step(
+                bundle, opt, cosine_schedule(plan.lr, 100, 10_000),
+                microbatches=mb, grad_shardings=gshard)
+            metrics_shard = jax.tree.map(
+                lambda _: NamedSharding(mesh, P()),
+                {"ce": 0, "aux": 0, "loss": 0, "grad_norm": 0, "lr": 0})
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(pshard, oshard, bshard,
+                              NamedSharding(mesh, P())),
+                out_shardings=(pshard, oshard, metrics_shard),
+                donate_argnums=(0, 1))
+            lowered = jitted.lower(
+                params_shape, opt_shape, cell.batch,
+                jax.ShapeDtypeStruct((), jnp.int32))
+            extra_meta = {"microbatches": mb, "optimizer": plan.optimizer}
+        else:
+            # serving cells: caches as explicit sharded arguments
+            extras = {}
+            if cfg.is_encoder_decoder:
+                extras["frame_embeds"] = jax.ShapeDtypeStruct(
+                    (cell.global_batch, cfg.n_audio_frames, cfg.d_model),
+                    jnp.bfloat16)
+            cache_shape = jax.eval_shape(
+                lambda p, e: bundle.init_cache(p, cell.global_batch,
+                                               cell.seq_len, batch=e),
+                params_shape, extras)
+            cspecs = cache_specs(cache_shape, cfg, mesh, bax,
+                                 batch_size=cell.global_batch)
+            cshard = to_shardings(cspecs, mesh)
+            if cell.kind == "prefill":
+                step_fn = make_prefill_step(bundle)
+                out_shardings = (None, cshard)
+            else:
+                step_fn = make_decode_step(bundle)
+                out_shardings = (None, None, cshard)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(pshard, cshard, bshard["tokens"],
+                              bshard["positions"]),
+                out_shardings=out_shardings,
+                donate_argnums=(1,))
+            lowered = jitted.lower(params_shape, cache_shape,
+                                   cell.batch["tokens"],
+                                   cell.batch["positions"])
+            extra_meta = {"cache_len": cell.seq_len}
+
+        lower_s = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t1
+
+    mem = compiled.memory_analysis()
+    try:
+        cost = dict(compiled.cost_analysis())
+    except Exception:
+        cost = {}
+    text = compiled.as_text()
+    stats = hlo_stats.analyze(text)
+
+    import math
+    n_devices = mesh.devices.size
+    param_count = sum(math.prod(x.shape)
+                      for x in jax.tree.leaves(params_shape))
+    param_bytes = sum(math.prod(x.shape) * x.dtype.itemsize
+                      for x in jax.tree.leaves(params_shape))
+
+    artifact = {
+        "status": "ok",
+        "arch": arch,
+        "shape": shape_id,
+        "mesh": "multi" if multi_pod else "single",
+        "mesh_shape": dict(zip(mesh.axis_names,
+                               [int(mesh.shape[a])
+                                for a in mesh.axis_names])),
+        "n_devices": int(n_devices),
+        "kind": cell.kind,
+        "global_batch": cell.global_batch,
+        "seq_len": cell.seq_len,
+        "param_count": int(param_count),
+        "param_bytes_global": int(param_bytes),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "cost_analysis_flops_unrolled_once": float(cost.get("flops", 0.0)),
+        "hlo": stats,
+        "timing": {"lower_s": lower_s, "compile_s": compile_s},
+        "plan": {"optimizer": plan.optimizer, "ep_mode": plan.ep_mode,
+                 "fsdp_experts": plan.fsdp_experts, "remat": plan.remat},
+        **extra_meta,
+    }
+    return compiled, artifact, text
+
+
+def run_cell(arch, shape_id, multi_pod, out_dir, save_hlo=False, plan=None,
+             cfg_overrides=None, tag="", optimized=False):
+    name = f"{arch}__{shape_id}__{'multi' if multi_pod else 'single'}"
+    if tag:
+        name += f"__{tag}"
+    mesh = None
+    if optimized:
+        from repro.launch.plans import get_optimized
+        plan, layout, opt_cfg = get_optimized(arch, shape_id)
+        cfg_overrides = dict(opt_cfg, **(cfg_overrides or {}))
+        if layout is not None:
+            shape = ((2,) + layout) if multi_pod else layout
+            axes = ("pod", "data", "model") if multi_pod else \
+                ("data", "model")
+            mesh = jax.make_mesh(shape, axes)
+            name += f"__opt{layout[0]}x{layout[1]}"
+    print(f"[dryrun] {name} ...", flush=True)
+    try:
+        compiled, artifact, text = lower_cell(
+            arch, shape_id, multi_pod=multi_pod, plan=plan, mesh=mesh,
+            cfg_overrides=cfg_overrides)
+        artifact["status"] = "ok"
+        if save_hlo:
+            with gzip.open(os.path.join(out_dir, name + ".hlo.gz"),
+                           "wt") as f:
+                f.write(text)
+        del compiled, text
+    except Exception as e:  # record the failure, keep the batch going
+        import traceback
+        artifact = {"arch": arch, "shape": shape_id,
+                    "mesh": "multi" if multi_pod else "single",
+                    "status": "error", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]}
+        print(f"[dryrun] FAILED {name}: {e}", flush=True)
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, name + ".json"), "w") as f:
+        json.dump(artifact, f, indent=1)
+    ok = artifact.get("status") == "ok"
+    if ok:
+        t = artifact["timing"]
+        print(f"[dryrun] OK {name} lower={t['lower_s']:.1f}s "
+              f"compile={t['compile_s']:.1f}s "
+              f"temp={artifact['memory']['temp_bytes']/2**30:.2f}GiB",
+              flush=True)
+    return ok
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply hillclimb-optimized layouts (plans.OPTIMIZED)")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    todo = []
+    if args.all:
+        for arch, shape in cells():
+            for mp in meshes:
+                todo.append((arch, shape, mp))
+    else:
+        assert args.arch and args.shape
+        for mp in meshes:
+            todo.append((args.arch, args.shape, mp))
+
+    n_ok = 0
+    for arch, shape, mp in todo:
+        name = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+        path = os.path.join(args.out, name + ".json")
+        if args.skip_existing and os.path.exists(path):
+            with open(path) as f:
+                if json.load(f).get("status") == "ok":
+                    print(f"[dryrun] skip existing {name}", flush=True)
+                    n_ok += 1
+                    continue
+        n_ok += run_cell(arch, shape, mp, args.out,
+                         save_hlo=args.save_hlo, optimized=args.optimized)
+    print(f"[dryrun] {n_ok}/{len(todo)} cells OK", flush=True)
+
+
+if __name__ == "__main__":
+    main()

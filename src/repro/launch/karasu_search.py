@@ -1,0 +1,285 @@
+"""Karasu-driven TPU mesh-configuration search (the hardware adaptation).
+
+The "workload" is an (architecture x input shape) cell; the "resource
+configuration" is a mesh/launch layout: (pods, data x model layout,
+microbatch count, remat policy, EP mode, sequence parallelism). The
+black-box profiling run is either
+
+  - ``compile``  : lower + compile the cell on the candidate mesh (the
+                   real dry-run) and evaluate the 3-term roofline ->
+                   step-time bound, chip-seconds cost, energy; or
+  - ``analytic`` : a closed-form roofline estimator (fast; tests and
+                   benchmarks).
+
+Measures: runtime (projected step time), cost (chip-hours $), energy
+(kWh) — constraint: HBM fit (hbm_gib <= 16). The compact metric vector
+shared with collaborators is the utilisation profile
+(mxu_idle, hbm_occupancy, collective_frac, memory_frac, useful_ratio,
+remat_overhead) — the TPU analogue of the paper's six sar metrics.
+
+Collaboration: repository entries from OTHER (arch x shape) searches
+transfer through RGPE exactly as in the paper — similar workloads prefer
+similar layouts.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import os
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES
+from repro.core import (BOConfig, Constraint, Objective, Repository,
+                        RunRecord, run_search, tpu_search_space)
+from repro.launch.mesh import MESH_HARDWARE
+from repro.launch.plans import get_plan, override
+
+
+def _metrics_vector(util: Dict[str, float]) -> np.ndarray:
+    """(6, 3) compact metric matrix from the utilisation profile."""
+    vals = np.array([
+        100.0 * (1.0 - util["mxu_util"]),      # mxu idle %
+        100.0 * util["hbm_occupancy"],
+        100.0 * util["collective_frac"],
+        100.0 * util["memory_frac"],
+        100.0 * util["useful_ratio"],
+        100.0 * util["remat_overhead"],
+    ])
+    vals = np.clip(vals, 0.0, 100.0)
+    return np.outer(vals, np.array([0.9, 1.0, 1.1])).clip(0, 100)
+
+
+def _measures_from_terms(terms: Dict[str, float], chips: int,
+                         hbm_gib: float) -> Dict[str, float]:
+    hw = MESH_HARDWARE
+    step = max(terms["compute_s"], terms["memory_s"],
+               terms["collective_s"])
+    util = terms["useful_time"] / step if step > 0 else 0.0
+    watts = hw["chip_watts_idle"] + \
+        (hw["chip_watts_peak"] - hw["chip_watts_idle"]) * util
+    return {
+        "runtime": step,
+        "cost": chips * step / 3600.0 * hw["usd_per_chip_hour"],
+        "energy": chips * watts * step / 3600.0 / 1000.0,  # kWh
+        "hbm_gib": hbm_gib,
+        "mfu": util,
+    }
+
+
+def _utilisation(terms, hbm_gib, useful_ratio):
+    step = max(terms["compute_s"], terms["memory_s"],
+               terms["collective_s"])
+    return {
+        "mxu_util": terms["useful_time"] / step if step else 0.0,
+        "hbm_occupancy": min(hbm_gib / 16.0, 1.0),
+        "collective_frac": terms["collective_s"] / step if step else 0.0,
+        "memory_frac": terms["memory_s"] / step if step else 0.0,
+        "useful_ratio": min(useful_ratio, 1.0),
+        "remat_overhead": max(0.0, 1.0 - useful_ratio)
+        if useful_ratio <= 1.0 else 0.0,
+    }
+
+
+# ---------------------------------------------------------------------------
+# analytic black box
+# ---------------------------------------------------------------------------
+
+
+def analytic_profile(arch: str, shape_id: str, config: Mapping
+                     ) -> Tuple[Dict[str, float], np.ndarray]:
+    """Closed-form roofline estimate for a candidate layout."""
+    hw = MESH_HARDWARE
+    cfg = get_config(arch)
+    meta = SHAPES[shape_id]
+    b, s = meta["global_batch"], meta["seq_len"]
+    pods, dp, mp = (int(config["pods"]), int(config["data"]),
+                    int(config["model"]))
+    mb = int(config["microbatches"])
+    chips = pods * dp * mp
+
+    # rough param/active counts
+    n = cfg.param_count()
+    if cfg.n_experts:
+        n_attn = sum(1 for k in cfg.layer_kinds
+                     if k in ("attn", "local_attn"))
+        ep_params = 3 * cfg.d_model * cfg.moe_d_ff * cfg.n_experts * n_attn
+        n_active = n - ep_params + ep_params * cfg.top_k // cfg.n_experts
+    else:
+        n_active = n
+
+    train = meta["kind"] == "train"
+    tokens = b * s if meta["kind"] != "decode" else b
+    factor = 6.0 if train else 2.0
+    useful_flops = factor * n_active * tokens / chips
+    remat_f = 4.0 / 3.0 if (train and config.get("remat", True)) else 1.0
+    compute_s = useful_flops * remat_f / hw["peak_flops_bf16"]
+    useful_time = useful_flops / hw["peak_flops_bf16"]
+
+    # memory traffic: params once per microbatch (+grads) + activations
+    pbytes_local = 2.0 * n / (mp * (dp if cfg.n_experts else 1))
+    act = tokens / (pods * dp) * cfg.d_model * 2.0 * cfg.n_layers \
+        * (4.0 if train else 1.5)
+    mem_bytes = pbytes_local * (3.0 if train else 1.0) * mb + act
+    memory_s = mem_bytes / hw["hbm_bw"]
+
+    # collectives: TP activation ARs + DP grad AR + EP terms
+    toks_local = tokens / (pods * dp)
+    n_ar = 4 if train else 2
+    seqp = 0.5 if config.get("seq_parallel") else 1.0
+    tp_bytes = n_ar * cfg.n_layers * toks_local * cfg.d_model * 2.0 \
+        * 2.0 * (mp - 1) / mp * seqp * (1.5 if train else 1.0)
+    dp_bytes = (2.0 * 2.0 * n / mp * (dp - 1) / dp) if train else 0.0
+    ep_bytes = 0.0
+    if cfg.n_experts and train:
+        if config.get("ep_mode") == "a2a":
+            ep_bytes = 2 * cfg.n_layers * toks_local * cfg.top_k / mp \
+                * cfg.d_model * 2.0 * 3.0
+        else:
+            ep_bytes = 2 * cfg.n_layers * toks_local * cfg.d_model * 2.0 \
+                * 2.0 * 3.0
+    collective_s = (tp_bytes + dp_bytes + ep_bytes) / hw["ici_bw"]
+
+    # HBM occupancy
+    opt_f = 3.0 if train else 1.25   # fp32 master+moments (ZeRO'd) or KV
+    hbm = 2.0 * n / mp / (dp if cfg.n_experts else 1) \
+        + (4.0 * n / (mp * dp) * opt_f if train else 0.0) \
+        + act / max(mb, 1) * 2.0
+    hbm_gib = hbm / 2 ** 30
+
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s, "useful_time": useful_time}
+    measures = _measures_from_terms(terms, chips, hbm_gib)
+    util = _utilisation(terms, hbm_gib, 1.0 / remat_f)
+    return measures, _metrics_vector(util)
+
+
+# ---------------------------------------------------------------------------
+# compile black box (the real dry-run)
+# ---------------------------------------------------------------------------
+
+
+def compile_profile(arch: str, shape_id: str, config: Mapping,
+                    out_dir: Optional[str] = None
+                    ) -> Tuple[Dict[str, float], np.ndarray]:
+    import jax
+    from repro.launch.dryrun import lower_cell
+    from repro.launch.roofline import roofline_from_artifact
+
+    pods, dp, mp = (int(config["pods"]), int(config["data"]),
+                    int(config["model"]))
+    if pods > 1:
+        mesh = jax.make_mesh((pods, dp, mp), ("pod", "data", "model"))
+    else:
+        mesh = jax.make_mesh((dp, mp), ("data", "model"))
+    plan = override(get_plan(arch),
+                    microbatches=int(config["microbatches"]),
+                    ep_mode=str(config.get("ep_mode", get_plan(arch).ep_mode)),
+                    remat=bool(config.get("remat", True)))
+    cfg_overrides = {}
+    if config.get("remat_policy"):
+        cfg_overrides["remat_policy"] = config["remat_policy"]
+    if config.get("seq_parallel"):
+        cfg_overrides["seq_shard_activations"] = True
+    if config.get("moe_impl"):
+        cfg_overrides["moe_impl"] = config["moe_impl"]
+    compiled, artifact, _ = lower_cell(
+        arch, shape_id, mesh=mesh, plan=plan, cfg_overrides=cfg_overrides)
+    del compiled
+    r = roofline_from_artifact(artifact)
+    terms = {"compute_s": r.compute_s, "memory_s": r.memory_s,
+             "collective_s": r.collective_s,
+             "useful_time": (r.model_flops / artifact["n_devices"])
+             / MESH_HARDWARE["peak_flops_bf16"]}
+    measures = _measures_from_terms(terms, artifact["n_devices"],
+                                    r.hbm_gib)
+    util = _utilisation(terms, r.hbm_gib, r.useful_ratio)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"p{pods}d{dp}m{mp}mb{config['microbatches']}" \
+              f"{'sp' if config.get('seq_parallel') else ''}" \
+              f"{config.get('remat_policy') or ''}" \
+              f"{config.get('ep_mode') or ''}"
+        with open(os.path.join(
+                out_dir, f"{arch}__{shape_id}__{tag}.json"), "w") as f:
+            json.dump(dict(artifact, layout=dict(config)), f, indent=1)
+    return measures, _metrics_vector(util)
+
+
+# ---------------------------------------------------------------------------
+# the search driver
+# ---------------------------------------------------------------------------
+
+
+def search_mesh_config(
+    arch: str,
+    shape_id: str,
+    *,
+    mode: str = "analytic",            # analytic | compile
+    repository: Optional[Repository] = None,
+    max_iters: int = 10,
+    seed: int = 0,
+    hbm_limit: float = 16.0,
+    out_dir: Optional[str] = None,
+    space=None,
+):
+    space = space or tpu_search_space()
+
+    def profile_fn(config):
+        if mode == "compile":
+            return compile_profile(arch, shape_id, config, out_dir)
+        return analytic_profile(arch, shape_id, config)
+
+    method = "karasu" if repository is not None and len(repository) \
+        else "naive"
+    return run_search(
+        space, profile_fn, Objective("runtime"),
+        [Constraint("hbm_gib", hbm_limit)],
+        method=method, repository=repository,
+        bo_config=BOConfig(max_iters=max_iters, n_init=3, n_support=3),
+        seed=seed)
+
+
+def result_to_records(result, shared_id: str) -> list:
+    return [RunRecord(shared_id, o.config, o.metrics, o.measures)
+            for o in result.observations]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mode", default="analytic",
+                    choices=["analytic", "compile"])
+    ap.add_argument("--iters", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--repo", default=None,
+                    help="path to a saved Repository json")
+    ap.add_argument("--out", default="artifacts/karasu_search")
+    args = ap.parse_args()
+
+    repo = Repository.load(args.repo) if args.repo else None
+    res = search_mesh_config(args.arch, args.shape, mode=args.mode,
+                             repository=repo, max_iters=args.iters,
+                             seed=args.seed, out_dir=args.out)
+    best = res.best_index_per_iter[-1]
+    print("profiled configs:")
+    for i, o in enumerate(res.observations):
+        star = "*" if i == best else " "
+        print(f" {star} {dict(o.config)} -> step={o.measures['runtime']:.4f}s"
+              f" hbm={o.measures['hbm_gib']:.1f}GiB"
+              f" mfu={o.measures.get('mfu', 0):.3f}")
+    if best >= 0:
+        print("best:", dict(res.observations[best].config))
+
+
+if __name__ == "__main__":
+    # NOTE: --mode compile needs the 512-placeholder-device flag BEFORE
+    # jax initialises; run as
+    #   XLA_FLAGS=--xla_force_host_platform_device_count=512 \
+    #     python -m repro.launch.karasu_search --mode compile ...
+    main()

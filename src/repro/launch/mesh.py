@@ -1,0 +1,39 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — jax locks the device count on
+first backend initialisation, and only ``launch/dryrun.py`` installs the
+512-placeholder-device XLA flag.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 (data, model) single pod; 2x16x16 (pod, data, model) for two
+    pods. 256 chips per pod (TPU v5e-256 topology)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_dev_mesh(n_data: int = 1, n_model: int = 1):
+    """Small mesh for CPU tests (requires host-device override by caller)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def batch_axes_for(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+MESH_HARDWARE = {
+    # TPU v5e hardware constants used by the roofline model
+    "peak_flops_bf16": 197e12,   # per chip
+    "hbm_bw": 819e9,             # bytes/s per chip
+    "ici_bw": 50e9,              # bytes/s per link (~per-direction)
+    "hbm_per_chip": 16 * 1024**3,
+    "chip_watts_idle": 70.0,
+    "chip_watts_peak": 250.0,
+    "usd_per_chip_hour": 1.2,
+}

@@ -1,0 +1,82 @@
+"""Per-arch launch plans: optimizer, microbatching, EP mode, FSDP.
+
+These are the *baseline* production choices recorded in EXPERIMENTS.md
+§Roofline; the Karasu mesh search (launch/karasu_search.py) explores the
+same knobs as its resource-configuration space.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchPlan:
+    arch: str
+    optimizer: str = "adamw"
+    microbatches: int = 1           # grad-accumulation steps (train)
+    ep_mode: str = "none"           # none | allgather | a2a (MoE archs)
+    fsdp_experts: bool = False      # FSDP expert weights over data axis
+    remat: bool = True
+    lr: float = 3e-4
+    # overridable mesh logical layout (data, model); None = mesh default
+    layout: Optional[tuple] = None
+
+
+_PLANS = {
+    "minitron-8b": LaunchPlan("minitron-8b", microbatches=4),
+    "h2o-danube-1.8b": LaunchPlan("h2o-danube-1.8b", microbatches=2),
+    "gemma3-4b": LaunchPlan("gemma3-4b", microbatches=2),
+    "gemma2-27b": LaunchPlan("gemma2-27b", microbatches=8),
+    "zamba2-1.2b": LaunchPlan("zamba2-1.2b", microbatches=2),
+    "qwen3-moe-235b-a22b": LaunchPlan(
+        "qwen3-moe-235b-a22b", optimizer="adafactor", microbatches=16,
+        ep_mode="allgather", fsdp_experts=True),
+    "arctic-480b": LaunchPlan(
+        "arctic-480b", optimizer="adafactor", microbatches=16,
+        ep_mode="allgather", fsdp_experts=True),
+    "xlstm-125m": LaunchPlan("xlstm-125m", microbatches=1),
+    "whisper-large-v3": LaunchPlan("whisper-large-v3", microbatches=2),
+    "phi-3-vision-4.2b": LaunchPlan("phi-3-vision-4.2b", microbatches=2),
+}
+
+
+def get_plan(arch: str) -> LaunchPlan:
+    return _PLANS[arch]
+
+
+def override(plan: LaunchPlan, **kwargs) -> LaunchPlan:
+    return dataclasses.replace(plan, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Optimized layouts found by the §Perf hillclimbs (EXPERIMENTS.md):
+# (data, model) logical layout + plan/config overrides per (arch, shape).
+# The defaults above stay paper-faithful; `--optimized` opts in.
+# ---------------------------------------------------------------------------
+
+OPTIMIZED = {
+    # verified by compile-in-the-loop probes (EXPERIMENTS.md §Perf)
+    ("minitron-8b", "train_4k"): dict(layout=(32, 8), microbatches=16),
+    ("gemma3-4b", "train_4k"): dict(layout=(64, 4), microbatches=16),
+    # extrapolated from the verified cells (same dense-TP scaling law);
+    # re-verify with `dryrun --optimized` before production use
+    ("gemma2-27b", "train_4k"): dict(layout=(32, 8), microbatches=16),
+    ("h2o-danube-1.8b", "train_4k"): dict(layout=(64, 4), microbatches=8),
+    ("phi-3-vision-4.2b", "train_4k"): dict(layout=(64, 4),
+                                            microbatches=8),
+}
+
+
+def get_optimized(arch: str, shape: str):
+    """(plan, layout, cfg_overrides) with hillclimb results applied."""
+    plan = get_plan(arch)
+    opt = OPTIMIZED.get((arch, shape))
+    if not opt:
+        return plan, None, {}
+    plan = override(plan, microbatches=opt.get("microbatches",
+                                               plan.microbatches))
+    cfg_overrides = {}
+    if opt.get("seq_parallel"):
+        cfg_overrides["seq_shard_activations"] = True
+    return plan, opt.get("layout"), cfg_overrides

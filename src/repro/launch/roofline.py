@@ -1,0 +1,158 @@
+"""Roofline assembly from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Terms (per device, per step), TPU v5e constants from launch.mesh:
+    compute_s    = HLO dot flops / peak_bf16
+    memory_s     = HLO dot operand+result bytes / HBM bandwidth
+    collective_s = collective link bytes / ICI bandwidth
+HLO quantities come from launch.hlo_stats (trip-count-weighted static
+analysis of the compiled module — jax's cost_analysis() visits loop
+bodies once, so it cannot be used directly; dot-operand bytes are an
+HBM-traffic proxy that ignores fusion reuse, i.e. an upper bound).
+
+MODEL_FLOPS uses the standard 6·N·D (train) / 2·N·D (inference) with
+N = active parameters (MoE counts top-k experts only).
+
+Projected MFU ("roofline fraction") = useful-compute time / max(term):
+what fraction of peak the step would sustain if the dominant roofline
+term were the wall clock.
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import get_config
+from repro.launch.mesh import MESH_HARDWARE
+from repro.models.common import ModelConfig
+
+
+def active_param_fraction(cfg: ModelConfig) -> float:
+    if not cfg.n_experts:
+        return 1.0
+    total = expert = 0
+    # expert weights per layer: 3 * d * moe_d_ff * n_experts
+    per_layer_expert = 3 * cfg.d_model * cfg.moe_d_ff * cfg.n_experts
+    n_attn = sum(1 for k in cfg.layer_kinds if k in ("attn", "local_attn"))
+    expert = per_layer_expert * n_attn
+    return expert  # raw count; fraction handled in model_flops
+
+
+def model_flops_per_step(cfg: ModelConfig, artifact: Dict) -> float:
+    """Global useful flops per step (6ND train, 2ND decode/prefill)."""
+    n_total = artifact["param_count"]
+    if cfg.n_experts:
+        n_attn = sum(1 for k in cfg.layer_kinds
+                     if k in ("attn", "local_attn"))
+        expert_params = 3 * cfg.d_model * cfg.moe_d_ff * cfg.n_experts \
+            * n_attn
+        n_active = n_total - expert_params \
+            + expert_params * cfg.top_k // cfg.n_experts
+    else:
+        n_active = n_total
+    kind = artifact["kind"]
+    if kind == "train":
+        tokens = artifact["global_batch"] * artifact["seq_len"]
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = artifact["global_batch"] * artifact["seq_len"]
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * artifact["global_batch"]
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops_per_dev: float
+    useful_ratio: float          # MODEL_FLOPS / (HLO flops * devices)
+    projected_mfu: float         # useful compute time / max term
+    fits_hbm: bool
+    hbm_gib: float
+    note: str = ""
+
+    def as_row(self) -> List:
+        return [self.arch, self.shape, self.mesh,
+                f"{self.compute_s*1e3:.2f}", f"{self.memory_s*1e3:.2f}",
+                f"{self.collective_s*1e3:.2f}", self.dominant,
+                f"{self.useful_ratio:.2f}", f"{self.projected_mfu:.3f}",
+                f"{self.hbm_gib:.1f}", "yes" if self.fits_hbm else "NO"]
+
+
+def roofline_from_artifact(artifact: Dict) -> Optional[Roofline]:
+    if artifact.get("status") != "ok":
+        return None
+    hw = MESH_HARDWARE
+    cfg = get_config(artifact["arch"])
+    h = artifact["hlo"]
+    nd = artifact["n_devices"]
+
+    compute_s = h["dot_flops"] / hw["peak_flops_bf16"]
+    memory_s = h["dot_bytes"] / hw["hbm_bw"]
+    # prefer the TPU-equivalent collective volume when available (XLA-CPU
+    # promotes bf16 collectives to f32; see hlo_stats.analyze)
+    coll_bytes = h.get("collective_bytes_bf16eq", h["collective_bytes"])
+    collective_s = coll_bytes / hw["ici_bw"]
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    mf = model_flops_per_step(cfg, artifact)
+    hlo_total = h["dot_flops"] * nd
+    useful = mf / hlo_total if hlo_total else 0.0
+    useful_time = (mf / nd) / hw["peak_flops_bf16"]
+    bound = max(terms.values())
+    mfu = useful_time / bound if bound > 0 else 0.0
+
+    mem = artifact["memory"]
+    hbm = (mem["argument_bytes"] + mem["temp_bytes"]
+           + mem["output_bytes"] - mem.get("alias_bytes", 0))
+    hbm_gib = hbm / 2 ** 30
+    return Roofline(
+        arch=artifact["arch"], shape=artifact["shape"],
+        mesh=artifact["mesh"], compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, dominant=dominant, model_flops=mf,
+        hlo_flops_per_dev=h["dot_flops"], useful_ratio=useful,
+        projected_mfu=mfu, fits_hbm=hbm_gib <= 16.0, hbm_gib=hbm_gib)
+
+
+def load_artifacts(out_dir: str) -> List[Dict]:
+    arts = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            arts.append(json.load(f))
+    return arts
+
+
+HEADER = ["arch", "shape", "mesh", "compute_ms", "memory_ms",
+          "collective_ms", "dominant", "useful", "proj_MFU", "HBM_GiB",
+          "fits"]
+
+
+def table(out_dir: str, mesh: str = "single") -> str:
+    rows = [HEADER]
+    for a in load_artifacts(out_dir):
+        if a.get("mesh") != mesh:
+            continue
+        r = roofline_from_artifact(a)
+        if r:
+            rows.append([str(c) for c in r.as_row()])
+    widths = [max(len(r[i]) for r in rows) for i in range(len(rows[0]))]
+    return "\n".join(
+        " | ".join(c.ljust(w) for c, w in zip(r, widths)) for r in rows)
+
+
+if __name__ == "__main__":
+    import sys
+    out = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun"
+    mesh = sys.argv[2] if len(sys.argv) > 2 else "single"
+    print(table(out, mesh))

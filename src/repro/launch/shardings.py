@@ -1,0 +1,238 @@
+"""Sharding rules: parameters, optimizer state (ZeRO-1), caches, batches.
+
+Param specs are architecture-informed (vocab/heads/ff over ``model``);
+optimizer state uses a divisibility-driven auto-spec that additionally
+spreads over ``data`` (ZeRO-1). Cache specs implement flash-decoding KV
+parallelism for the long-context cells (sequence over ``data`` when the
+batch is too small to shard).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _axis_size(mesh: Mesh, axis: str) -> int:
+    return mesh.shape[axis] if axis in mesh.axis_names else 1
+
+
+def batch_axes_that_divide(mesh: Mesh, b: int, axes: Tuple[str, ...]
+                           ) -> Tuple[str, ...]:
+    """Longest prefix of `axes` whose product divides b."""
+    out, prod = [], 1
+    for a in axes:
+        prod *= _axis_size(mesh, a)
+        if b % prod == 0:
+            out.append(a)
+        else:
+            break
+    return tuple(out)
+
+
+def auto_spec(shape: Tuple[int, ...], mesh: Mesh,
+              axes_pref: Tuple[str, ...] = ("data", "model")) -> P:
+    """Greedy divisibility-driven spec: assign each preferred mesh axis to
+    the largest still-unassigned dim it divides."""
+    assign: dict = {}
+    taken = set()
+    for ax in axes_pref:
+        size = _axis_size(mesh, ax)
+        if size == 1:
+            continue
+        dims = sorted(range(len(shape)), key=lambda d: -shape[d])
+        for d in dims:
+            if d not in taken and shape[d] % size == 0 and shape[d] >= size:
+                assign[d] = ax
+                taken.add(d)
+                break
+    return P(*[assign.get(d) for d in range(len(shape))])
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+_COL = ("wq/w", "wk/w", "wv/w", "gate/w", "up/w", "up_gate/w", "in_proj/w",
+        "wi/w", "wf/w", "w_in/w", "lm_head/w")
+_ROW = ("wo/w", "down/w", "out_proj/w")
+
+
+def _base_param_spec(path: str, shape: Tuple[int, ...], ndim: int,
+                     mesh: Mesh, fsdp_experts: bool) -> P:
+    msize = _axis_size(mesh, "model")
+
+    def div(d):  # dim divisible by model axis
+        return shape[d] % msize == 0 and shape[d] >= msize
+
+    if path.endswith("embed/table"):
+        return P("model", None) if div(0) else P(None, None)
+    # MoE expert tensors (3D: experts, in, out)
+    if re.search(r"moe/(gate|up)$", path) and ndim == 3:
+        f = "data" if fsdp_experts else None
+        return P("model" if div(0) else None, None, f)
+    if re.search(r"moe/down$", path) and ndim == 3:
+        f = "data" if fsdp_experts else None
+        return P("model" if div(0) else None, f, None)
+    if path.endswith("moe/router"):
+        return P(None, None)
+    if "slstm" in path:
+        return P(*([None] * ndim))  # sequential recurrent block: replicate
+    for suffix in _COL:
+        if path.endswith(suffix):
+            return P(None, "model") if div(1) else P(None, None)
+    for suffix in _ROW:
+        if path.endswith(suffix):
+            return P("model", None) if div(0) else P(None, None)
+    if path.endswith("conv_w"):  # (k, channels) depthwise
+        return P(None, "model") if div(1) else P(None, None)
+    if path.endswith("conv_b"):
+        return P("model") if div(0) else P(None)
+    # everything else (norm scales, small biases, lora, A_log, D, ...)
+    return P(*([None] * ndim))
+
+
+_STACK_PREFIXES = ("units", "enc_blocks", "dec_blocks")
+
+
+def param_specs(params_shape: Any, cfg: ModelConfig, mesh: Mesh,
+                *, fsdp_experts: bool = False) -> Any:
+    """PartitionSpec pytree matching params (works on ShapeDtypeStructs)."""
+
+    def spec_for(path, leaf):
+        pstr = _path_str(path)
+        stacked = any(pstr.startswith(s) for s in _STACK_PREFIXES)
+        shape = leaf.shape
+        if stacked:
+            base = _base_param_spec(pstr, shape[1:], leaf.ndim - 1, mesh,
+                                    fsdp_experts)
+            return P(None, *base)
+        return _base_param_spec(pstr, shape, leaf.ndim, mesh, fsdp_experts)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# optimizer state specs (ZeRO-1)
+# ---------------------------------------------------------------------------
+
+
+def opt_state_specs(opt_shape: Any, mesh: Mesh) -> Any:
+    """Divisibility-driven specs for optimizer state; shards over data AND
+    model wherever possible (ZeRO-1 + tensor-parallel alignment)."""
+
+    def spec_for(leaf):
+        if leaf.ndim == 0:
+            return P()
+        return auto_spec(leaf.shape, mesh)
+
+    return jax.tree.map(spec_for, opt_shape)
+
+
+# ---------------------------------------------------------------------------
+# batch + cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(batch_shape: Any, mesh: Mesh,
+                batch_axes: Tuple[str, ...]) -> Any:
+    def spec_for(leaf):
+        b = leaf.shape[0]
+        bax = batch_axes_that_divide(mesh, b, batch_axes)
+        lead = bax if bax else None
+        return P(lead, *([None] * (leaf.ndim - 1)))
+    return jax.tree.map(spec_for, batch_shape)
+
+
+def cache_specs(cache_shape: Any, cfg: ModelConfig, mesh: Mesh,
+                batch_axes: Tuple[str, ...], *, batch_size: int) -> Any:
+    """KV/state cache specs.
+
+    Large-batch decode: batch over (pod, data), heads/head_dim over model.
+    batch=1 long-context decode: cache *sequence* over data (flash-
+    decoding KV parallelism), heads/head_dim over model.
+    """
+    import math as _math
+    bax = batch_axes_that_divide(mesh, batch_size, batch_axes)
+    seq_parallel = not bax  # cannot shard batch -> shard cache sequence
+    msize = _axis_size(mesh, "model")
+    dsize = _axis_size(mesh, "data")
+    bax_size = _math.prod(_axis_size(mesh, a) for a in bax) if bax else 1
+
+    def spec_for(path, leaf):
+        pstr = _path_str(path)
+        shape = leaf.shape
+        # every cache leaf from init_decode_cache / init_encdec_cache is
+        # stacked over units/layers: first dim is the layer axis
+        stacked = True
+        lead: Tuple = (None,) if stacked else ()
+        body = shape[1:] if stacked else shape
+        bdim = 0  # batch dim within body
+        spec = [None] * len(body)
+        if len(body) == 0:
+            return P(*lead)
+        if bax and body[bdim] % bax_size == 0:
+            spec[bdim] = bax
+        # kv caches: (b, S, kvh, hd); pos: (b, S).
+        # policy: heads over model when divisible; otherwise flash-
+        # decoding style sequence sharding over model (partial softmax
+        # stats + small all-reduce instead of gathering the cache).
+        if pstr.endswith(("/k", "/v", "kv/k", "kv/v")) or \
+                re.search(r"cross_[kv]$", pstr):
+            if len(body) == 4:
+                _, S, kvh, hd = body
+                seq_axes = []
+                if seq_parallel and S % dsize == 0:
+                    seq_axes.append("data")
+                if kvh % msize == 0:
+                    spec[2] = "model"
+                elif S % (msize * (dsize if seq_axes else 1)) == 0:
+                    seq_axes.append("model")
+                if seq_axes:
+                    spec[1] = tuple(seq_axes)
+            return P(*lead, *spec)
+        if pstr.endswith("pos"):
+            if len(body) == 2:
+                S = body[1]
+                seq_axes = []
+                if seq_parallel and S % dsize == 0:
+                    seq_axes.append("data")
+                if cfg.n_kv_heads % msize != 0 and \
+                        S % (msize * (dsize if seq_axes else 1)) == 0:
+                    seq_axes.append("model")
+                if seq_axes:
+                    spec[1] = tuple(seq_axes)
+            return P(*lead, *spec)
+        # ssm / conv / lstm states: shard trailing big dims over model
+        rest = auto_spec(body[1:], mesh, axes_pref=("model",))
+        return P(*lead, spec[0], *rest)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shape)
+
+
+def to_shardings(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

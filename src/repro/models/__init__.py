@@ -1,0 +1,4 @@
+from .common import ModelConfig
+from .registry import ModelBundle, build_model
+
+__all__ = ["ModelConfig", "ModelBundle", "build_model"]

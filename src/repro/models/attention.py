@@ -1,0 +1,153 @@
+"""GQA attention block with RoPE, sliding window, softcap, QK-norm.
+
+Supports three call modes:
+  - training / prefill: full-sequence self-attention (causal or not)
+  - decode: single (or few) new token(s) against a preallocated KV cache
+  - cross-attention (whisper decoder): kv comes from the encoder output
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+from .common import ModelConfig, Params, apply_rope, dense, init_dense, init_rmsnorm, rmsnorm
+
+
+def init_attention(key, cfg: ModelConfig, *, cross: bool = False) -> Params:
+    hd = cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    p = {
+        "wq": init_dense(kq, cfg.d_model, cfg.n_heads * hd, dt, cfg.use_bias),
+        "wk": init_dense(kk, cfg.d_model, cfg.n_kv_heads * hd, dt, cfg.use_bias),
+        "wv": init_dense(kv, cfg.d_model, cfg.n_kv_heads * hd, dt, cfg.use_bias),
+        "wo": init_dense(ko, cfg.n_heads * hd, cfg.d_model, dt, cfg.use_bias,
+                         scale=1.0 / math.sqrt(cfg.n_heads * hd)),
+    }
+    if cfg.use_qk_norm and not cross:
+        p["q_norm"] = init_rmsnorm(hd, dt)
+        p["k_norm"] = init_rmsnorm(hd, dt)
+    return p
+
+
+def _project_kv(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                positions: Optional[jnp.ndarray], *, use_rope: bool) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    hd = cfg.resolved_head_dim
+    b, s, _ = x.shape
+    k = dense(p["wk"], x).reshape(b, s, cfg.n_kv_heads, hd)
+    v = dense(p["wv"], x).reshape(b, s, cfg.n_kv_heads, hd)
+    if "k_norm" in p:
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if use_rope and positions is not None:
+        k = apply_rope(k, positions, _theta(cfg))
+    return k, v
+
+
+def _theta(cfg: ModelConfig, is_global: bool = False) -> float:
+    if is_global and cfg.rope_theta_global:
+        return cfg.rope_theta_global
+    return cfg.rope_theta
+
+
+def attention(
+    p: Params,
+    x: jnp.ndarray,                       # (b, s, d)
+    cfg: ModelConfig,
+    *,
+    window: int = 0,                       # 0 = full attention
+    causal: bool = True,
+    positions: Optional[jnp.ndarray] = None,      # (b, s)
+    kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,  # cross-attn KV
+    cache: Optional[Dict[str, jnp.ndarray]] = None,        # decode KV cache
+    use_rope: bool = True,
+    is_global: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Returns (output, updated_cache)."""
+    hd = cfg.resolved_head_dim
+    b, s, _ = x.shape
+    q = dense(p["wq"], x).reshape(b, s, cfg.n_heads, hd)
+    if "q_norm" in p:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+
+    theta = _theta(cfg, is_global)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    if use_rope:
+        q = apply_rope(q, positions, theta)
+
+    new_cache = None
+    if kv is not None:
+        # cross attention: fixed kv, no cache update, no causal mask
+        kc, vc = kv
+        out = flash_attention(q, kc, vc, causal=False, window=0,
+                              softcap=cfg.attn_logit_softcap,
+                              impl=cfg.attn_impl)
+    elif cache is not None:
+        # scatter new kv into the ring/linear cache
+        k_new = dense(p["wk"], x).reshape(b, s, cfg.n_kv_heads, hd)
+        v_new = dense(p["wv"], x).reshape(b, s, cfg.n_kv_heads, hd)
+        if "k_norm" in p:
+            k_new = rmsnorm(p["k_norm"], k_new, cfg.norm_eps)
+        if use_rope:
+            k_new = apply_rope(k_new, positions, theta)
+        cache_len = cache["k"].shape[1]
+        # slot index: absolute position for linear cache, modulo for window
+        slots = positions % cache_len if window else positions
+        k_buf = _scatter_cache(cache["k"], k_new, slots)
+        v_buf = _scatter_cache(cache["v"], v_new, slots)
+        kv_pos = _scatter_positions(cache["pos"], positions, slots)
+        new_cache = {"k": k_buf, "v": v_buf, "pos": kv_pos}
+        if s > 8:
+            # prefill-from-scratch: attend the fresh segment only (the
+            # cache is write-only here) — keeps attention free of cache
+            # resharding and matches production prefill engines.
+            out = flash_attention(
+                q, k_new, v_new, causal=causal, window=window,
+                softcap=cfg.attn_logit_softcap, q_positions=positions,
+                kv_positions=positions, impl=cfg.attn_impl)
+        else:
+            kv_mask = kv_pos >= 0
+            out = flash_attention(
+                q, k_buf, v_buf, causal=causal, window=window,
+                softcap=cfg.attn_logit_softcap, q_positions=positions,
+                kv_positions=jnp.maximum(kv_pos, 0), kv_mask=kv_mask,
+                impl=cfg.attn_impl)
+    else:
+        # full self-attention over x
+        k, v = _project_kv(p, x, cfg, positions, use_rope=use_rope)
+        out = flash_attention(q, k, v, causal=causal, window=window,
+                              softcap=cfg.attn_logit_softcap,
+                              q_positions=positions, kv_positions=positions,
+                              impl=cfg.attn_impl)
+
+    out = out.reshape(b, s, cfg.n_heads * hd)
+    return dense(p["wo"], out), new_cache
+
+
+def _scatter_cache(buf: jnp.ndarray, new: jnp.ndarray, slots: jnp.ndarray) -> jnp.ndarray:
+    """buf: (b, cache, h, d); new: (b, s, h, d); slots: (b, s)."""
+    b = buf.shape[0]
+    bidx = jnp.arange(b)[:, None]
+    return buf.at[bidx, slots].set(new.astype(buf.dtype))
+
+
+def _scatter_positions(pos_buf: jnp.ndarray, positions: jnp.ndarray,
+                       slots: jnp.ndarray) -> jnp.ndarray:
+    bidx = jnp.arange(pos_buf.shape[0])[:, None]
+    return pos_buf.at[bidx, slots].set(positions.astype(pos_buf.dtype))
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+                  window: int = 0, dtype=jnp.bfloat16) -> Dict[str, jnp.ndarray]:
+    """Linear cache for full/global attention; ring cache for windowed."""
+    hd = cfg.resolved_head_dim
+    size = min(window, max_len) if window else max_len
+    return {
+        "k": jnp.zeros((batch, size, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, size, cfg.n_kv_heads, hd), dtype),
+        "pos": jnp.full((batch, size), -1, jnp.int32),
+    }

@@ -1,0 +1,251 @@
+"""Common building blocks for the pure-JAX model zoo.
+
+No flax/haiku dependency: parameters are nested dicts of jnp arrays,
+initialised by explicit ``init_*`` functions and consumed by pure
+``apply``-style functions. Layer stacks are built by vmapping the unit
+initialiser over a leading ``layer`` axis and scanning the unit body, so
+the lowered HLO contains a single unit body regardless of depth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # nested dict pytree of jnp arrays
+
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One config to describe every architecture in the assigned pool.
+
+    Block kinds (``block_pattern`` entries, repeated cyclically over
+    ``n_layers``):
+      - ``attn``         full-attention transformer block
+      - ``local_attn``   sliding-window attention block
+      - ``mamba2``       Mamba2 SSD block
+      - ``mlstm``        xLSTM matrix-LSTM block
+      - ``slstm``        xLSTM scalar-LSTM block
+      - ``shared_attn``  weight-tied global attention block (zamba-style)
+    """
+
+    name: str = "model"
+    family: str = "dense"  # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    d_ff: int = 256
+    vocab: int = 512
+    block_pattern: Tuple[str, ...] = ("attn",)
+    # attention
+    window: int = 0  # sliding-window size for local_attn blocks (0 = full)
+    attn_logit_softcap: float = 0.0
+    final_logit_softcap: float = 0.0
+    rope_theta: float = 10_000.0
+    rope_theta_global: float = 0.0  # 0 -> same as rope_theta
+    use_qk_norm: bool = False
+    use_post_norm: bool = False  # gemma-style sandwich norm
+    use_bias: bool = False
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    dense_residual: bool = False  # arctic: dense MLP branch parallel to MoE
+    moe_capacity_factor: float = 2.0  # EP modes drop slots beyond capacity
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    # zamba-style shared block
+    shared_period: int = 0  # apply shared_attn every N backbone layers
+    shared_lora_rank: int = 0
+    # encoder-decoder (whisper)
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    n_audio_frames: int = 1500
+    # vlm stub
+    n_image_patches: int = 0
+    # numerics / embeddings
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    tie_embeddings: bool = True
+    scale_embeddings: bool = False  # gemma multiplies embeds by sqrt(d)
+    norm_eps: float = 1e-6
+    # training-time knobs (can be overridden per launch config)
+    remat: bool = True
+    remat_policy: str = "full"  # full | dots (dots_with_no_batch_dims)
+    seq_shard_activations: bool = False  # Megatron-style sequence parallel
+    attn_impl: str = "xla"  # xla | pallas | pallas_interpret
+    moe_impl: str = "ragged"  # ragged | dense
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """The per-layer block kinds for the full depth."""
+        pat = self.block_pattern
+        return tuple(pat[i % len(pat)] for i in range(self.n_layers))
+
+    @property
+    def unit_size(self) -> int:
+        """Layers per scan unit (= len(block_pattern), padded to divide)."""
+        return len(self.block_pattern)
+
+    @property
+    def n_units(self) -> int:
+        if self.n_layers % self.unit_size != 0:
+            raise ValueError(
+                f"{self.name}: n_layers={self.n_layers} not divisible by "
+                f"block_pattern length {self.unit_size}"
+            )
+        return self.n_layers // self.unit_size
+
+    def param_count(self) -> int:
+        """Parameter count via shape-only init (no allocation)."""
+        from .registry import build_model  # lazy: avoid circular import
+        shapes = jax.eval_shape(build_model(self).init,
+                                jax.random.PRNGKey(0))
+        return sum(int(math.prod(x.shape)) for x in jax.tree.leaves(shapes))
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE counts top_k of n_experts)."""
+        total = self.param_count()
+        if self.n_experts and self.top_k:
+            # expert weights: 3 matrices per expert per moe layer
+            n_moe_layers = sum(1 for k in self.layer_kinds if k == "attn" or k == "local_attn")
+            expert_params = n_moe_layers * self.n_experts * 3 * self.d_model * self.moe_d_ff
+            active_expert = expert_params * self.top_k // self.n_experts
+            return total - expert_params + active_expert
+        return total
+
+
+# ---------------------------------------------------------------------------
+# Initialisers
+# ---------------------------------------------------------------------------
+
+
+def _normal(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_dense(key, d_in: int, d_out: int, dtype, use_bias: bool = False,
+               scale: Optional[float] = None) -> Params:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": _normal(key, (d_in, d_out), scale, dtype)}
+    if use_bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def init_rmsnorm(d: int, dtype) -> Params:
+    return {"scale": jnp.zeros((d,), dtype)}  # (1 + scale) parametrisation
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + p["scale"].astype(jnp.float32))).astype(dtype)
+
+
+def init_embedding(key, vocab: int, d: int, dtype) -> Params:
+    return {"table": _normal(key, (vocab, d), 1.0, dtype)}
+
+
+def embed(p: Params, ids: jnp.ndarray, compute_dtype) -> jnp.ndarray:
+    return jnp.take(p["table"], ids, axis=0).astype(compute_dtype)
+
+
+def unembed(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    # einsum (not x @ table.T): the explicit contraction keeps GSPMD from
+    # all-gathering grad_logits over the vocab axis in the backward pass
+    return jnp.einsum("bsd,vd->bsv", x, p["table"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # (head_dim/2,)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    freqs = rope_frequencies(x.shape[-1], theta)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype, use_bias: bool = False) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_dense(k1, d_model, d_ff, dtype, use_bias),
+        "up": init_dense(k2, d_model, d_ff, dtype, use_bias),
+        "down": init_dense(k3, d_ff, d_model, dtype, use_bias,
+                           scale=1.0 / math.sqrt(d_ff)),
+    }
+
+
+def mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return dense(p["down"], jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x))
+
+
+# ---------------------------------------------------------------------------
+# Stacked-layer helpers
+# ---------------------------------------------------------------------------
+
+
+def stack_init(init_fn, key, n: int) -> Params:
+    """vmap an initialiser over a leading layer axis."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def scan_blocks(body, carry, stacked_params, *, remat: bool, length: int):
+    """lax.scan over stacked layer params with optional full remat."""
+    fn = jax.checkpoint(body, prevent_cse=False) if remat else body
+    return jax.lax.scan(fn, carry, stacked_params, length=length)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def take_layer(stacked: Params, i) -> Params:
+    return jax.tree.map(lambda x: x[i], stacked)

@@ -1,0 +1,129 @@
+"""Mamba2 (SSD) block.
+
+Parallel (training/prefill) mode uses the chunked SSD algorithm:
+within-chunk quadratic attention-like term + across-chunk recurrent state
+passing (lax.scan over chunks). The Pallas kernel in
+``repro.kernels.ssm_scan`` implements the same chunked algorithm with VMEM
+tiling; ``ops.ssm_scan(..., impl=...)`` dispatches, and this module calls
+through it so the dry-run sees the XLA path while TPU runs the kernel.
+
+Decode mode carries (conv_state, ssm_state) and costs O(1) per token —
+this is what makes the long_500k cells runnable for SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan import ssm_scan
+from .common import ModelConfig, Params, _normal, dense, init_dense, init_rmsnorm, rmsnorm
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads
+
+
+def init_mamba2(key, cfg: ModelConfig) -> Params:
+    d_inner, n_heads = _dims(cfg)
+    n, hd = cfg.ssm_state, cfg.ssm_head_dim
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    dt = cfg.param_dtype
+    # in_proj -> [z (gate), x, B, C, dt] fused as in the reference impl
+    d_proj = 2 * d_inner + 2 * n + n_heads
+    p = {
+        "in_proj": init_dense(k1, cfg.d_model, d_proj, dt),
+        "conv_w": _normal(k2, (cfg.ssm_conv, d_inner + 2 * n),
+                          1.0 / math.sqrt(cfg.ssm_conv), dt),
+        "conv_b": jnp.zeros((d_inner + 2 * n,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "norm": init_rmsnorm(d_inner, dt),
+        "out_proj": init_dense(k3, d_inner, cfg.d_model, dt,
+                               scale=1.0 / math.sqrt(d_inner)),
+    }
+    return p
+
+
+def _split_proj(proj: jnp.ndarray, cfg: ModelConfig):
+    d_inner, n_heads = _dims(cfg)
+    n = cfg.ssm_state
+    z, xBC, dt = jnp.split(proj, [d_inner, 2 * d_inner + 2 * n], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv1d. xBC: (b, s, c); w: (k, c).
+
+    Returns (out, new_state) where state caches the last k-1 inputs.
+    """
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xBC.shape[0], k - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = state.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)  # (b, s+k-1, c)
+    out = jnp.zeros_like(xBC)
+    for i in range(k):
+        out = out + xp[:, i:i + xBC.shape[1]] * w[i].astype(xBC.dtype)
+    out = out + b.astype(xBC.dtype)
+    new_state = xp[:, xp.shape[1] - (k - 1):]
+    return jax.nn.silu(out), new_state
+
+
+def mamba2(
+    p: Params,
+    x: jnp.ndarray,  # (b, s, d_model)
+    cfg: ModelConfig,
+    *,
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    d_inner, n_heads = _dims(cfg)
+    n, hd = cfg.ssm_state, cfg.ssm_head_dim
+    b, s, _ = x.shape
+
+    proj = dense(p["in_proj"], x)
+    z, xBC, dt_raw = _split_proj(proj, cfg)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"])            # (b, s, heads)
+    A = -jnp.exp(p["A_log"])                         # (heads,)
+
+    conv_state = cache.get("conv") if cache is not None else None
+    xBC, new_conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"],
+                                       conv_state)
+    xs, B, C = jnp.split(xBC, [d_inner, d_inner + n], axis=-1)
+    xs = xs.reshape(b, s, n_heads, hd)
+    # B, C shared across heads (n_groups=1)
+    decay = jnp.exp(dt * A[None, None, :])           # (b, s, heads)
+
+    ssm_prev = cache.get("ssm") if cache is not None else None
+    y, ssm_state = ssm_scan(
+        xs, dt, decay, B, C,
+        initial_state=ssm_prev,
+        impl=cfg.attn_impl if cfg.attn_impl.startswith("pallas") else "xla",
+    )
+    y = y + xs * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(b, s, d_inner)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = dense(p["out_proj"], y)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv_state.astype(cache["conv"].dtype),
+                     "ssm": ssm_state.astype(cache["ssm"].dtype)}
+    return out, new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    d_inner, n_heads = _dims(cfg)
+    n = cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, d_inner + 2 * n), dtype),
+        "ssm": jnp.zeros((batch, n_heads, cfg.ssm_head_dim, n), dtype),
+    }

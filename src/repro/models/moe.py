@@ -1,0 +1,283 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+Routing: softmax over all experts -> top-k -> renormalised combine weights
+(qwen3 style; arctic uses the same with k=2 plus a dense residual branch).
+
+Compute paths:
+  - ``dense``   every expert on every token (einsum). Oracle for tests.
+  - ``ragged``  sort-by-expert + jax.lax.ragged_dot (dropless grouped GEMM,
+                the TPU-native analogue of megablocks). Default.
+
+Expert parallelism (installed DistContext, ep_mode != "none"):
+  - ``allgather``  shard_map over the model axis: every model shard sees
+                   the full local-batch token set (activations arrive
+                   replicated over `model`, GSPMD inserts the all-gather),
+                   compacts the slots routed to its E/ep local experts into
+                   a capacity-bounded buffer, runs the grouped GEMM, and
+                   scatter-adds partial outputs combined with one psum.
+  - ``a2a``        capacity-bounded all_to_all dispatch: each shard sends
+                   only the tokens routed to remote experts (2 all_to_alls
+                   of ~(tokens*topk/ep, d_model)). Beyond-paper
+                   optimisation for the collective-bound MoE cells.
+
+Capacity semantics: slots beyond ``moe_capacity_factor * expected`` per
+shard are dropped (their combine weight contributes nothing) — standard
+capacity-based MoE behaviour; the dense/ragged local paths are dropless.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import get_context
+from .common import ModelConfig, Params, _normal, init_mlp, mlp
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    ke, kr, kd = jax.random.split(key, 3)
+    dt = cfg.param_dtype
+    d, dff = cfg.d_model, cfg.moe_d_ff
+    ne = cfg.n_experts
+    k1, k2, k3 = jax.random.split(ke, 3)
+    p = {
+        "router": _normal(kr, (d, ne), 1.0 / math.sqrt(d), jnp.float32),
+        "gate": _normal(k1, (ne, d, dff), 1.0 / math.sqrt(d), dt),
+        "up": _normal(k2, (ne, d, dff), 1.0 / math.sqrt(d), dt),
+        "down": _normal(k3, (ne, dff, d), 1.0 / math.sqrt(dff), dt),
+    }
+    if cfg.dense_residual:
+        p["dense_mlp"] = init_mlp(kd, d, cfg.d_ff, dt, cfg.use_bias)
+    return p
+
+
+def _route(router: jnp.ndarray, x: jnp.ndarray, top_k: int):
+    """x: (T, d) -> (weights (T, k), idx (T, k), aux_loss)."""
+    logits = x.astype(jnp.float32) @ router  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, top_k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    # switch-style load balancing aux loss
+    ne = router.shape[1]
+    density = jnp.mean(jax.nn.one_hot(idx, ne, dtype=jnp.float32), axis=(0, 1))
+    density_proxy = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * density_proxy) * ne
+    return weights, idx, aux
+
+
+def _experts_dense(p: Params, x: jnp.ndarray, weights, idx, top_k: int):
+    """Every expert on every token; combine with routing weights."""
+    ne = p["gate"].shape[0]
+    xg = jnp.einsum("td,edf->tef", x, p["gate"].astype(x.dtype))
+    xu = jnp.einsum("td,edf->tef", x, p["up"].astype(x.dtype))
+    h = jax.nn.silu(xg) * xu
+    y = jnp.einsum("tef,efd->ted", h, p["down"].astype(x.dtype))  # (T,E,d)
+    combine = jnp.zeros((x.shape[0], ne), x.dtype)
+    combine = combine.at[jnp.arange(x.shape[0])[:, None], idx].set(
+        weights.astype(x.dtype))
+    return jnp.einsum("ted,te->td", y, combine)
+
+
+def _grouped_gemm(gate, up, down, xs, group_sizes, dtype,
+                  impl: str = "ragged"):
+    from repro.kernels.grouped_gemm import grouped_gemm as gmm
+    hg = gmm(xs, gate.astype(dtype), group_sizes, impl=impl)
+    hu = gmm(xs, up.astype(dtype), group_sizes, impl=impl)
+    return gmm(jax.nn.silu(hg) * hu, down.astype(dtype), group_sizes,
+               impl=impl)
+
+
+def _experts_ragged(gate, up, down, x, weights, idx, top_k, n_experts,
+                    impl: str = "ragged"):
+    """Dropless: sort-by-expert + grouped GEMM over all T*k slots."""
+    t, d = x.shape
+    flat_idx = idx.reshape(-1)                       # (T*k,)
+    order = jnp.argsort(flat_idx)
+    token_of = order // top_k
+    xs = jnp.take(x, token_of, axis=0)               # sorted by expert
+    group_sizes = jnp.bincount(flat_idx, length=n_experts).astype(jnp.int32)
+    ys = _grouped_gemm(gate, up, down, xs, group_sizes, x.dtype, impl=impl)
+    w_sorted = jnp.take(weights.reshape(-1), order)
+    out = jnp.zeros((t, d), ys.dtype).at[token_of].add(
+        ys * w_sorted[:, None].astype(ys.dtype))
+    return out
+
+
+def _moe_local(p: Params, x2: jnp.ndarray, cfg: ModelConfig):
+    weights, idx, aux = _route(p["router"], x2, cfg.top_k)
+    if cfg.moe_impl == "dense":
+        out = _experts_dense(p, x2, weights, idx, cfg.top_k)
+    else:
+        impl = "xla" if cfg.moe_impl == "gmm" else "ragged"
+        out = _experts_ragged(p["gate"], p["up"], p["down"], x2, weights,
+                              idx, cfg.top_k, cfg.n_experts, impl=impl)
+    return out, aux
+
+
+def _compact_by_expert(local_expert_id, valid, e_local, cap):
+    """Sort (slot -> local expert) placing invalid slots last; keep `cap`.
+
+    Returns (perm (cap,), group_sizes (e_local,), kept (cap,) bool).
+    """
+    sort_key = jnp.where(valid, local_expert_id, e_local)
+    perm_full = jnp.argsort(sort_key)                # valid groups first
+    perm = perm_full[:cap]
+    counts = jnp.bincount(sort_key, length=e_local + 1)[:e_local]
+    # clip group sizes so their cumsum never exceeds cap
+    cum = jnp.cumsum(counts)
+    cum_clipped = jnp.minimum(cum, cap)
+    group_sizes = jnp.diff(jnp.concatenate([jnp.zeros(1, cum.dtype),
+                                            cum_clipped])).astype(jnp.int32)
+    kept_rank = jnp.arange(cap)
+    kept = kept_rank < cum_clipped[-1]
+    return perm, group_sizes, kept
+
+
+def _expert_specs(ctx):
+    """(gate/up, down) PartitionSpecs incl. optional FSDP on the ff dim."""
+    axis, fsdp = ctx.model_axis, ctx.fsdp_axis
+    if fsdp:
+        return P(axis, None, fsdp), P(axis, fsdp, None)
+    return P(axis), P(axis)
+
+
+def _unshard_experts(ctx, gate, up, down):
+    """All-gather FSDP-sharded expert weights inside the shard_map body."""
+    if ctx.fsdp_axis:
+        gate = jax.lax.all_gather(gate, ctx.fsdp_axis, axis=2, tiled=True)
+        up = jax.lax.all_gather(up, ctx.fsdp_axis, axis=2, tiled=True)
+        down = jax.lax.all_gather(down, ctx.fsdp_axis, axis=1, tiled=True)
+    return gate, up, down
+
+
+def _moe_allgather_ep(p: Params, x2: jnp.ndarray, cfg: ModelConfig):
+    """shard_map body: local experts, full local-batch tokens, psum combine."""
+    ctx = get_context()
+    axis = ctx.model_axis
+    ep = ctx.model_size
+    e_local = cfg.n_experts // ep
+
+    def body(router, gate, up, down, xb):
+        t, d = xb.shape
+        gate, up, down = _unshard_experts(ctx, gate, up, down)
+        weights, idx, aux = _route(router, xb, cfg.top_k)
+        shard = jax.lax.axis_index(axis)
+        lo = shard * e_local
+        flat_idx = idx.reshape(-1)
+        local = (flat_idx >= lo) & (flat_idx < lo + e_local)
+        cap = max(8, int(math.ceil(t * cfg.top_k / ep
+                                   * cfg.moe_capacity_factor)))
+        cap = min(cap, t * cfg.top_k)
+        perm, group_sizes, kept = _compact_by_expert(
+            flat_idx - lo, local, e_local, cap)
+        token_of = perm // cfg.top_k
+        xs = jnp.take(xb, token_of, axis=0)          # (cap, d)
+        ys = _grouped_gemm(gate, up, down, xs, group_sizes, xb.dtype,
+                          impl="xla" if cfg.moe_impl == "gmm"
+                          else "ragged")
+        w = jnp.take(weights.reshape(-1), perm) * kept
+        out = jnp.zeros((t, d), ys.dtype).at[token_of].add(
+            ys * w[:, None].astype(ys.dtype))
+        out = jax.lax.psum(out, axis)
+        aux = jax.lax.pmean(aux, axis)
+        for a in ctx.batch_axes:
+            aux = jax.lax.pmean(aux, a)
+        return out, aux
+
+    bspec = P(ctx.batch_axes)
+    gspec, dspec = _expert_specs(ctx)
+    return jax.shard_map(
+        body, mesh=ctx.mesh,
+        in_specs=(P(), gspec, gspec, dspec, bspec),
+        out_specs=(bspec, P()),
+    )(p["router"], p["gate"], p["up"], p["down"], x2)
+
+
+def _moe_a2a_ep(p: Params, x2: jnp.ndarray, cfg: ModelConfig):
+    """shard_map body: capacity-bounded all_to_all expert dispatch."""
+    ctx = get_context()
+    axis = ctx.model_axis
+    ep = ctx.model_size
+    e_local = cfg.n_experts // ep
+
+    def body(router, gate, up, down, xb):
+        t, d = xb.shape
+        gate, up, down = _unshard_experts(ctx, gate, up, down)
+        weights, idx, aux = _route(router, xb, cfg.top_k)
+        flat_idx = idx.reshape(-1)                   # (T*k,)
+        dest = flat_idx // e_local                   # destination shard
+        cap = max(8, int(math.ceil(t * cfg.top_k / ep
+                                   * cfg.moe_capacity_factor)))
+        # rank of each slot within its destination group
+        order = jnp.argsort(dest)
+        sorted_dest = dest[order]
+        rank = jnp.arange(t * cfg.top_k) - jnp.searchsorted(
+            sorted_dest, sorted_dest, side="left")
+        keep = rank < cap
+        # slot in the send buffer; dropped slots write to a trash row
+        slot = jnp.where(keep, sorted_dest * cap + rank, ep * cap)
+        nbuf = ep * cap + 1
+        src_token = order // cfg.top_k
+        send_x = jnp.zeros((nbuf, d), xb.dtype).at[slot].set(
+            jnp.take(xb, src_token, axis=0))
+        send_e = jnp.zeros((nbuf,), jnp.int32).at[slot].set(
+            flat_idx[order] % e_local)
+        send_valid = jnp.zeros((nbuf,), bool).at[slot].set(keep)
+
+        rx = jax.lax.all_to_all(send_x[:-1].reshape(ep, cap, d),
+                                axis, 0, 0).reshape(ep * cap, d)
+        re_ = jax.lax.all_to_all(send_e[:-1].reshape(ep, cap),
+                                 axis, 0, 0).reshape(ep * cap)
+        rv = jax.lax.all_to_all(send_valid[:-1].reshape(ep, cap),
+                                axis, 0, 0).reshape(ep * cap)
+
+        perm, group_sizes, kept = _compact_by_expert(
+            re_, rv, e_local, ep * cap)
+        rx_s = jnp.take(rx, perm, axis=0)
+        ys = _grouped_gemm(gate, up, down, rx_s, group_sizes, rx.dtype,
+                          impl="xla" if cfg.moe_impl == "gmm"
+                          else "ragged")
+        ys = ys * kept[:, None]
+        y = jnp.zeros((ep * cap, d), ys.dtype).at[perm].set(ys)
+
+        back = jax.lax.all_to_all(y.reshape(ep, cap, d),
+                                  axis, 0, 0).reshape(ep * cap, d)
+        back = jnp.concatenate([back, jnp.zeros((1, d), back.dtype)], 0)
+        w_sorted = jnp.take(weights.reshape(-1), order)
+        contrib = back[slot] * jnp.where(keep, w_sorted, 0.0)[:, None].astype(back.dtype)
+        out = jnp.zeros((t, d), back.dtype).at[src_token].add(contrib)
+        aux = jax.lax.pmean(aux, axis)
+        for a in ctx.batch_axes:
+            aux = jax.lax.pmean(aux, a)
+        return out, aux
+
+    bspec = P(ctx.batch_axes)
+    gspec, dspec = _expert_specs(ctx)
+    # the two all_to_alls make the (mathematically model-replicated)
+    # outputs unprovable for the varying-axes checker: disable it
+    return jax.shard_map(
+        body, mesh=ctx.mesh,
+        in_specs=(P(), gspec, gspec, dspec, bspec),
+        out_specs=(bspec, P()),
+        check_vma=False,
+    )(p["router"], p["gate"], p["up"], p["down"], x2)
+
+
+def moe(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (b, s, d) -> (out (b, s, d), aux_loss scalar)."""
+    b, s, d = x.shape
+    x2 = x.reshape(b * s, d)
+    ctx = get_context()
+    if ctx.mesh is not None and ctx.ep_mode == "allgather":
+        out, aux = _moe_allgather_ep(p, x2, cfg)
+    elif ctx.mesh is not None and ctx.ep_mode == "a2a":
+        out, aux = _moe_a2a_ep(p, x2, cfg)
+    else:
+        out, aux = _moe_local(p, x2, cfg)
+    out = out.reshape(b, s, d).astype(x.dtype)
+    if cfg.dense_residual:
+        out = out + mlp(p["dense_mlp"], x)
+    return out, aux

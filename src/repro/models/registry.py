@@ -1,0 +1,84 @@
+"""Unified model bundle API over the zoo.
+
+Every architecture exposes the same four entry points so the training
+loop, serving engine, and dry-run launcher are architecture-agnostic:
+
+    bundle.init(key)                          -> params
+    bundle.train_logits(params, batch)        -> (logits, aux_loss)
+    bundle.init_cache(params, batch_size, max_len, batch) -> caches
+    bundle.decode_step(params, caches, tokens, positions) -> (logits, caches)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, Params
+from . import transformer as tf
+from . import whisper as wh
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ModelConfig
+    init: Callable[[Any], Params]
+    train_logits: Callable[[Params, Dict[str, jnp.ndarray]], Any]
+    init_cache: Callable[..., Params]
+    decode_step: Callable[..., Any]
+
+
+def _lm_bundle(cfg: ModelConfig) -> ModelBundle:
+    def init(key):
+        return tf.init_lm(key, cfg)
+
+    def train_logits(params, batch):
+        logits, _, aux = tf.lm_forward(
+            params, batch["tokens"], cfg,
+            image_embeds=batch.get("image_embeds"),
+            image_mask=batch.get("image_mask"))
+        return logits, aux
+
+    def init_cache(params, batch_size, max_len, batch=None,
+                   dtype=jnp.bfloat16):
+        return tf.init_decode_cache(cfg, batch_size, max_len, dtype=dtype)
+
+    def decode_step(params, caches, tokens, positions):
+        logits, new_caches, _ = tf.lm_forward(
+            params, tokens, cfg, positions=positions, caches=caches)
+        return logits, new_caches
+
+    return ModelBundle(cfg, init, train_logits, init_cache, decode_step)
+
+
+def _encdec_bundle(cfg: ModelConfig) -> ModelBundle:
+    def init(key):
+        return wh.init_encdec(key, cfg)
+
+    def train_logits(params, batch):
+        enc_out = wh.encode(params, batch["frame_embeds"], cfg)
+        logits, _ = wh.decode(params, batch["tokens"], enc_out, cfg)
+        return logits, jnp.zeros((), jnp.float32)
+
+    def init_cache(params, batch_size, max_len, batch=None,
+                   dtype=jnp.bfloat16):
+        assert batch is not None and "frame_embeds" in batch, \
+            "encoder-decoder cache needs frame_embeds to precompute cross KV"
+        enc_out = wh.encode(params, batch["frame_embeds"], cfg)
+        return wh.init_encdec_cache(params, enc_out, cfg, batch_size,
+                                    max_len, dtype=dtype)
+
+    def decode_step(params, caches, tokens, positions):
+        logits, new_caches = wh.decode(params, tokens, None, cfg,
+                                       positions=positions, caches=caches)
+        return logits, new_caches
+
+    return ModelBundle(cfg, init, train_logits, init_cache, decode_step)
+
+
+def build_model(cfg: ModelConfig) -> ModelBundle:
+    if cfg.is_encoder_decoder:
+        return _encdec_bundle(cfg)
+    return _lm_bundle(cfg)

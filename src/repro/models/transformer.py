@@ -1,0 +1,321 @@
+"""Universal decoder-only LM assembly.
+
+One ``init_lm`` / ``lm_forward`` pair covers the dense, MoE, SSM, hybrid
+and VLM-backbone architectures: the per-layer behaviour is selected by
+``cfg.block_pattern`` (repeated cyclically), and the whole depth is a
+``lax.scan`` over stacked "units" (one unit = one pass over the pattern),
+so the HLO contains a single unit body regardless of depth.
+
+Zamba-style weight-tied shared blocks live outside the scanned stack and
+are applied inside the unit body with per-unit LoRA deltas.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import get_context
+from .attention import attention, init_attention, init_kv_cache
+from .common import (ModelConfig, Params, dense, embed, init_dense,
+                     init_embedding, init_mlp, init_rmsnorm, mlp, rmsnorm,
+                     softcap, unembed, _normal)
+from .mamba import init_mamba2, init_mamba_cache, mamba2
+from .moe import init_moe, moe
+from .xlstm import (init_mlstm, init_mlstm_cache, init_slstm,
+                    init_slstm_cache, mlstm, slstm)
+
+
+def _shard_activations(x: jnp.ndarray, *, seq_parallel: bool = False
+                       ) -> jnp.ndarray:
+    ctx = get_context()
+    if ctx.mesh is None:
+        return x
+    # shard batch over the longest batch-axis prefix that divides it
+    from jax.sharding import NamedSharding
+    prod, axes = 1, []
+    for a in ctx.batch_axes:
+        prod *= ctx.mesh.shape[a]
+        if x.shape[0] % prod == 0:
+            axes.append(a)
+        else:
+            break
+    # Megatron-style sequence parallelism: between blocks the residual
+    # stream is additionally sharded over `model` on the sequence axis,
+    # turning per-block all-reduces into reduce-scatter/all-gather pairs
+    # (half the on-wire bytes, and the stream stays sharded at rest).
+    seq_spec = None
+    if seq_parallel and x.ndim >= 3 and x.shape[1] % ctx.model_size == 0:
+        seq_spec = ctx.model_axis
+    spec = P(tuple(axes) if axes else None, seq_spec,
+             *([None] * (x.ndim - 2)))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, kind: str, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    dt = cfg.param_dtype
+    p: Dict[str, Any] = {"pre_norm": init_rmsnorm(cfg.d_model, dt)}
+    if kind in ("attn", "local_attn"):
+        p["attn"] = init_attention(ks[0], cfg)
+        if cfg.use_post_norm:
+            p["post_norm"] = init_rmsnorm(cfg.d_model, dt)
+        p["pre_mlp_norm"] = init_rmsnorm(cfg.d_model, dt)
+        if cfg.n_experts:
+            p["moe"] = init_moe(ks[1], cfg)
+        else:
+            p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, dt, cfg.use_bias)
+        if cfg.use_post_norm:
+            p["post_mlp_norm"] = init_rmsnorm(cfg.d_model, dt)
+    elif kind == "mamba2":
+        p["mamba"] = init_mamba2(ks[0], cfg)
+    elif kind == "mlstm":
+        p["mlstm"] = init_mlstm(ks[0], cfg)
+    elif kind == "slstm":
+        p["slstm"] = init_slstm(ks[0], cfg)
+    elif kind == "shared_attn":
+        r = max(cfg.shared_lora_rank, 1)
+        p["lora_a"] = _normal(ks[0], (2 * cfg.d_model, r),
+                              1.0 / math.sqrt(2 * cfg.d_model), dt)
+        p["lora_b"] = jnp.zeros((r, cfg.d_model), dt)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    return p
+
+
+def _init_shared(key, cfg: ModelConfig) -> Params:
+    """Zamba-style shared transformer block (weight-tied across uses)."""
+    ks = jax.random.split(key, 3)
+    dt = cfg.param_dtype
+    return {
+        "in_norm": init_rmsnorm(2 * cfg.d_model, dt),
+        "in_proj": init_dense(ks[0], 2 * cfg.d_model, cfg.d_model, dt),
+        "attn": init_attention(ks[1], cfg),
+        "pre_mlp_norm": init_rmsnorm(cfg.d_model, dt),
+        "mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff, dt, cfg.use_bias),
+    }
+
+
+def _apply_block(
+    bp: Params,
+    kind: str,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    layer_in_pattern: int,
+    shared: Optional[Params],
+    embeds0: Optional[jnp.ndarray],
+    positions: Optional[jnp.ndarray],
+    cache: Optional[Params],
+    aux: jnp.ndarray,
+):
+    new_cache = None
+    if kind in ("attn", "local_attn"):
+        window = cfg.window if kind == "local_attn" else 0
+        h = rmsnorm(bp["pre_norm"], x, cfg.norm_eps)
+        h, new_kv = attention(bp["attn"], h, cfg, window=window,
+                              positions=positions,
+                              cache=None if cache is None else cache["kv"],
+                              is_global=(kind == "attn"))
+        if cfg.use_post_norm:
+            h = rmsnorm(bp["post_norm"], h, cfg.norm_eps)
+        x = x + h
+        h = rmsnorm(bp["pre_mlp_norm"], x, cfg.norm_eps)
+        if cfg.n_experts:
+            h, aux_l = moe(bp["moe"], h, cfg)
+            aux = aux + aux_l
+        else:
+            h = mlp(bp["mlp"], h)
+        if cfg.use_post_norm:
+            h = rmsnorm(bp["post_mlp_norm"], h, cfg.norm_eps)
+        x = x + h
+        if new_kv is not None:
+            new_cache = {"kv": new_kv}
+    elif kind == "mamba2":
+        h = rmsnorm(bp["pre_norm"], x, cfg.norm_eps)
+        h, new_cache = mamba2(bp["mamba"], h, cfg, cache=cache)
+        x = x + h
+    elif kind == "mlstm":
+        h = rmsnorm(bp["pre_norm"], x, cfg.norm_eps)
+        h, new_cache = mlstm(bp["mlstm"], h, cfg, cache=cache)
+        x = x + h
+    elif kind == "slstm":
+        h = rmsnorm(bp["pre_norm"], x, cfg.norm_eps)
+        h, new_cache = slstm(bp["slstm"], h, cfg, cache=cache)
+        x = x + h
+    elif kind == "shared_attn":
+        assert shared is not None and embeds0 is not None
+        xn = rmsnorm(bp["pre_norm"], x, cfg.norm_eps)
+        cat = jnp.concatenate([xn, embeds0], axis=-1)    # (b, s, 2d)
+        cat = rmsnorm(shared["in_norm"], cat, cfg.norm_eps)
+        h = dense(shared["in_proj"], cat)
+        # per-unit LoRA delta on the input projection
+        h = h + (cat @ bp["lora_a"].astype(cat.dtype)) @ \
+            bp["lora_b"].astype(cat.dtype)
+        a, new_kv = attention(shared["attn"], h, cfg, window=0,
+                              positions=positions,
+                              cache=None if cache is None else cache["kv"])
+        h = h + a
+        m = mlp(shared["mlp"], rmsnorm(shared["pre_mlp_norm"], h,
+                                       cfg.norm_eps))
+        x = x + h + m
+        if new_kv is not None:
+            new_cache = {"kv": new_kv}
+    else:
+        raise ValueError(kind)
+    x = _shard_activations(x, seq_parallel=cfg.seq_shard_activations)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init / forward
+# ---------------------------------------------------------------------------
+
+
+def init_lm(key, cfg: ModelConfig) -> Params:
+    k_embed, k_units, k_shared, k_head = jax.random.split(key, 4)
+
+    def unit_init(k):
+        kb = jax.random.split(k, len(cfg.block_pattern))
+        return {f"b{i}": _init_block(kb[i], kind, cfg)
+                for i, kind in enumerate(cfg.block_pattern)}
+
+    keys = jax.random.split(k_units, cfg.n_units)
+    params: Dict[str, Any] = {
+        "embed": init_embedding(k_embed, cfg.vocab, cfg.d_model,
+                                cfg.param_dtype),
+        "units": jax.vmap(unit_init)(keys),
+        "final_norm": init_rmsnorm(cfg.d_model, cfg.param_dtype),
+    }
+    if "shared_attn" in cfg.block_pattern:
+        params["shared"] = _init_shared(k_shared, cfg)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_dense(k_head, cfg.d_model, cfg.vocab,
+                                       cfg.param_dtype)
+    return params
+
+
+def _merge_image_embeds(embeds, image_embeds, image_mask):
+    """Scatter precomputed patch embeddings over masked token positions."""
+    if image_embeds is None:
+        return embeds
+    idx = jnp.cumsum(image_mask.astype(jnp.int32), axis=1) - 1
+    idx = jnp.clip(idx, 0, image_embeds.shape[1] - 1)
+    gathered = jnp.take_along_axis(
+        image_embeds.astype(embeds.dtype), idx[..., None], axis=1)
+    return jnp.where(image_mask[..., None], gathered, embeds)
+
+
+def lm_forward(
+    params: Params,
+    tokens: jnp.ndarray,                    # (b, s) int32
+    cfg: ModelConfig,
+    *,
+    positions: Optional[jnp.ndarray] = None,
+    caches: Optional[Params] = None,        # stacked over units
+    image_embeds: Optional[jnp.ndarray] = None,
+    image_mask: Optional[jnp.ndarray] = None,
+    input_embeds: Optional[jnp.ndarray] = None,  # bypass embedding (audio)
+) -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
+    """Returns (logits, new_caches, aux_loss)."""
+    if input_embeds is not None:
+        x = input_embeds.astype(cfg.compute_dtype)
+    else:
+        x = embed(params["embed"], tokens, cfg.compute_dtype)
+    x = _merge_image_embeds(x, image_embeds, image_mask)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    x = _shard_activations(x)
+    embeds0 = x if "shared" in params else None
+    shared = params.get("shared")
+
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def unit_body(carry, scanned):
+        x, aux = carry
+        unit_params, unit_caches = scanned
+        new_unit_caches = {} if caches is not None else None
+        for i, kind in enumerate(cfg.block_pattern):
+            bc = None if caches is None else unit_caches[f"b{i}"]
+            x, nc, aux = _apply_block(
+                unit_params[f"b{i}"], kind, x, cfg,
+                layer_in_pattern=i, shared=shared, embeds0=embeds0,
+                positions=positions, cache=bc, aux=aux)
+            if caches is not None:
+                new_unit_caches[f"b{i}"] = nc if nc is not None else bc
+        return (x, aux), new_unit_caches
+
+    body = unit_body
+    if cfg.remat:
+        policy = None
+        if cfg.remat_policy == "dots":
+            policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        body = jax.checkpoint(unit_body, prevent_cse=False, policy=policy)
+    (x, aux), new_caches = jax.lax.scan(
+        body, (x, aux0), (params["units"], caches), length=cfg.n_units)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = dense(params["lm_head"], x)
+    logits = softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+    logits = _shard_logits(logits)
+    return logits, new_caches, aux
+
+
+def _shard_logits(logits: jnp.ndarray) -> jnp.ndarray:
+    """Pin logits to (batch over data axes, vocab over model): keeps the
+    CE loss and its backward local to the vocab shards."""
+    ctx = get_context()
+    if ctx.mesh is None:
+        return logits
+    from jax.sharding import NamedSharding
+    prod, axes = 1, []
+    for a in ctx.batch_axes:
+        prod *= ctx.mesh.shape[a]
+        if logits.shape[0] % prod == 0:
+            axes.append(a)
+        else:
+            break
+    vspec = ctx.model_axis if logits.shape[-1] % ctx.model_size == 0 \
+        else None
+    spec = P(tuple(axes) if axes else None, None, vspec)
+    return jax.lax.with_sharding_constraint(
+        logits, NamedSharding(ctx.mesh, spec))
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> Params:
+    """Per-unit caches, stacked over units (leading axis n_units)."""
+
+    def one_block(kind: str):
+        if kind == "attn":
+            return {"kv": init_kv_cache(cfg, batch, max_len, dtype=dtype)}
+        if kind == "local_attn":
+            return {"kv": init_kv_cache(cfg, batch, max_len,
+                                        window=cfg.window, dtype=dtype)}
+        if kind == "shared_attn":
+            return {"kv": init_kv_cache(cfg, batch, max_len, dtype=dtype)}
+        if kind == "mamba2":
+            return init_mamba_cache(cfg, batch)
+        if kind == "mlstm":
+            return init_mlstm_cache(cfg, batch)
+        if kind == "slstm":
+            return init_slstm_cache(cfg, batch)
+        raise ValueError(kind)
+
+    unit = {f"b{i}": one_block(kind)
+            for i, kind in enumerate(cfg.block_pattern)}
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_units,) + x.shape).copy(),
+        unit)

@@ -1,0 +1,158 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings (batch, n_audio_frames, d_model).
+The encoder is a non-causal transformer over frames with learned
+(sinusoidal-initialised) positions; the decoder is a causal transformer
+with cross-attention into the encoder output.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention, init_attention, init_kv_cache
+from .common import (ModelConfig, Params, dense, embed, init_dense,
+                     init_embedding, init_mlp, init_rmsnorm, mlp, rmsnorm,
+                     unembed)
+from .transformer import _shard_activations
+
+
+def _sinusoid(n: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(n)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    inv = jnp.exp(-math.log(10000.0) * dim / (d // 2))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _init_enc_block(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    dt = cfg.param_dtype
+    return {
+        "pre_norm": init_rmsnorm(cfg.d_model, dt),
+        "attn": init_attention(k1, cfg),
+        "pre_mlp_norm": init_rmsnorm(cfg.d_model, dt),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, dt, cfg.use_bias),
+    }
+
+
+def _init_dec_block(key, cfg: ModelConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = cfg.param_dtype
+    return {
+        "pre_norm": init_rmsnorm(cfg.d_model, dt),
+        "attn": init_attention(k1, cfg),
+        "cross_norm": init_rmsnorm(cfg.d_model, dt),
+        "cross_attn": init_attention(k2, cfg, cross=True),
+        "pre_mlp_norm": init_rmsnorm(cfg.d_model, dt),
+        "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, dt, cfg.use_bias),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig) -> Params:
+    ke, kd, kt, kp = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ke, cfg.n_encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    return {
+        "embed": init_embedding(kt, cfg.vocab, cfg.d_model, cfg.param_dtype),
+        "enc_pos": _sinusoid(cfg.n_audio_frames, cfg.d_model
+                             ).astype(cfg.param_dtype),
+        "enc_blocks": jax.vmap(lambda k: _init_enc_block(k, cfg))(enc_keys),
+        "enc_norm": init_rmsnorm(cfg.d_model, cfg.param_dtype),
+        "dec_blocks": jax.vmap(lambda k: _init_dec_block(k, cfg))(dec_keys),
+        "final_norm": init_rmsnorm(cfg.d_model, cfg.param_dtype),
+    }
+
+
+def encode(params: Params, frame_embeds: jnp.ndarray, cfg: ModelConfig
+           ) -> jnp.ndarray:
+    """frame_embeds: (b, frames, d) precomputed by the stub frontend."""
+    x = frame_embeds.astype(cfg.compute_dtype)
+    x = x + params["enc_pos"][None, :x.shape[1]].astype(x.dtype)
+    x = _shard_activations(x)
+
+    def body(x, bp):
+        h = rmsnorm(bp["pre_norm"], x, cfg.norm_eps)
+        h, _ = attention(bp["attn"], h, cfg, causal=False, use_rope=False)
+        x = x + h
+        h = mlp(bp["mlp"], rmsnorm(bp["pre_mlp_norm"], x, cfg.norm_eps))
+        return _shard_activations(x + h), None
+
+    body_fn = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_blocks"])
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _cross_kv(bp: Params, enc_out: jnp.ndarray, cfg: ModelConfig):
+    hd = cfg.resolved_head_dim
+    b, f, _ = enc_out.shape
+    k = dense(bp["cross_attn"]["wk"], enc_out).reshape(b, f, cfg.n_kv_heads, hd)
+    v = dense(bp["cross_attn"]["wv"], enc_out).reshape(b, f, cfg.n_kv_heads, hd)
+    return k, v
+
+
+def decode(
+    params: Params,
+    tokens: jnp.ndarray,               # (b, s)
+    enc_out: Optional[jnp.ndarray],    # (b, frames, d) or None if cached
+    cfg: ModelConfig,
+    *,
+    positions: Optional[jnp.ndarray] = None,
+    caches: Optional[Params] = None,   # {"self": stacked kv, "cross_k/v"}
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    x = embed(params["embed"], tokens, cfg.compute_dtype)
+    x = _shard_activations(x)
+
+    cross_k = caches["cross_k"] if caches is not None else None
+    cross_v = caches["cross_v"] if caches is not None else None
+
+    def body(x, scanned):
+        bp, self_cache, ck, cv = scanned
+        h = rmsnorm(bp["pre_norm"], x, cfg.norm_eps)
+        h, new_kv = attention(bp["attn"], h, cfg, positions=positions,
+                              cache=None if self_cache is None else
+                              self_cache["kv"])
+        x = x + h
+        if ck is None:
+            ckv = _cross_kv(bp, enc_out, cfg)
+        else:
+            ckv = (ck, cv)
+        h = rmsnorm(bp["cross_norm"], x, cfg.norm_eps)
+        h, _ = attention(bp["cross_attn"], h, cfg, kv=ckv, use_rope=False)
+        x = x + h
+        h = mlp(bp["mlp"], rmsnorm(bp["pre_mlp_norm"], x, cfg.norm_eps))
+        x = _shard_activations(x + h)
+        new_cache = {"kv": new_kv} if new_kv is not None else self_cache
+        return x, new_cache
+
+    body_fn = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+    scanned = (params["dec_blocks"],
+               None if caches is None else caches["self"],
+               cross_k, cross_v)
+    x, new_self = jax.lax.scan(body_fn, x, scanned)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x).astype(jnp.float32)
+    new_caches = None
+    if caches is not None:
+        new_caches = {"self": new_self, "cross_k": cross_k,
+                      "cross_v": cross_v}
+    return logits, new_caches
+
+
+def init_encdec_cache(params: Params, enc_out: jnp.ndarray,
+                      cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> Params:
+    """Self-attn KV caches + precomputed cross KV for every layer."""
+    unit = {"kv": init_kv_cache(cfg, batch, max_len, dtype=dtype)}
+    self_caches = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape).copy(),
+        unit)
+    ck, cv = jax.vmap(
+        lambda bp: _cross_kv(bp, enc_out, cfg))(params["dec_blocks"])
+    return {"self": self_caches, "cross_k": ck.astype(dtype),
+            "cross_v": cv.astype(dtype)}

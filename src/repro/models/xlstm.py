@@ -1,0 +1,206 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM is the paper's parallel-trainable cell:
+    C_t = f_t C_{t-1} + i_t v_t k_t^T ,   n_t = f_t n_{t-1} + i_t k_t
+    h_t = (C_t q_t) / max(|n_t . q_t|, 1)
+which is exactly the SSD recurrence with per-head B=k, C=q, x=v,
+decay=f, dt=i — so it reuses the chunked ``ssm_scan`` kernel (one call
+with hd=head_dim for the numerator, one with hd=1 for the normaliser).
+The paper's running-max stabiliser is omitted in the parallel path (gates
+are bounded here: f = sigmoid, i = exp(clip(ĩ))); noted in DESIGN.md.
+
+sLSTM has recurrent gate preactivations (R h_{t-1}) and is inherently
+sequential: lax.scan over time with block-diagonal (per-head) recurrence,
+exponential gating and the m-stabiliser from the paper.
+
+Block layout follows the official xLSTM blocks: mLSTM block is a
+pre-LN up-projection (pf=2) sandwich with causal conv + gating; sLSTM
+block is pre-LN with a gated (pf=4/3) FFN after the cell. d_ff=0 in the
+assigned config — the blocks own their projections.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan import ssm_scan
+from .common import (ModelConfig, Params, _normal, dense, init_dense,
+                     init_rmsnorm, rmsnorm)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    d_inner = 2 * d            # pf = 2 up-projection
+    hd = d_inner // h
+    ks = jax.random.split(key, 8)
+    dt = cfg.param_dtype
+    return {
+        "up": init_dense(ks[0], d, 2 * d_inner, dt),   # [x_inner, z gate]
+        "conv_w": _normal(ks[1], (4, d_inner), 0.5, dt),
+        "conv_b": jnp.zeros((d_inner,), dt),
+        "wq": init_dense(ks[2], d_inner, d_inner, dt),
+        "wk": init_dense(ks[3], d_inner, d_inner, dt),
+        "wv": init_dense(ks[4], d_inner, d_inner, dt),
+        "wi": init_dense(ks[5], d_inner, h, dt),       # input gate (exp)
+        "wf": init_dense(ks[6], d_inner, h, dt),       # forget gate (sigmoid)
+        "norm": init_rmsnorm(d_inner, dt),
+        "down": init_dense(ks[7], d_inner, d, dt,
+                           scale=1.0 / math.sqrt(d_inner)),
+    }
+
+
+def _conv4(x, w, b, state: Optional[jnp.ndarray]):
+    k = w.shape[0]
+    if state is None:
+        padding = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        padding = state.astype(x.dtype)
+    xp = jnp.concatenate([padding, x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+    new_state = xp[:, xp.shape[1] - (k - 1):]
+    return jax.nn.silu(out + b.astype(x.dtype)), new_state
+
+
+def mlstm(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+          cache: Optional[Dict[str, jnp.ndarray]] = None
+          ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    b, s, d = x.shape
+    h = cfg.n_heads
+    up = dense(p["up"], x)
+    xi, z = jnp.split(up, 2, axis=-1)          # (b, s, 2d) each
+    d_inner = xi.shape[-1]
+    hd = d_inner // h
+
+    conv_state = cache.get("conv") if cache is not None else None
+    xc, new_conv = _conv4(xi, p["conv_w"], p["conv_b"], conv_state)
+
+    q = dense(p["wq"], xc).reshape(b, s, h, hd)
+    k = dense(p["wk"], xc).reshape(b, s, h, hd) / math.sqrt(hd)
+    v = dense(p["wv"], xi).reshape(b, s, h, hd)
+    i_gate = jnp.exp(jnp.clip(dense(p["wi"], xc).astype(jnp.float32),
+                              -10.0, 10.0))    # (b, s, h)
+    f_gate = jax.nn.sigmoid(dense(p["wf"], xc).astype(jnp.float32))
+
+    num_prev = cache.get("num") if cache is not None else None
+    den_prev = cache.get("den") if cache is not None else None
+    impl = "xla"
+    # numerator: state (hd, hd_k); normaliser: state (1, hd_k)
+    y_num, num_state = ssm_scan(v, i_gate, f_gate, k, q,
+                                initial_state=num_prev, impl=impl)
+    ones = jnp.ones((b, s, h, 1), v.dtype)
+    y_den, den_state = ssm_scan(ones, i_gate, f_gate, k, q,
+                                initial_state=den_prev, impl=impl)
+    y = y_num / jnp.maximum(jnp.abs(y_den), 1.0).astype(y_num.dtype)
+    y = y.reshape(b, s, d_inner)
+
+    y = rmsnorm(p["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    out = dense(p["down"], y)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "num": num_state, "den": den_state}
+    return out, new_cache
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d_inner = 2 * cfg.d_model
+    h = cfg.n_heads
+    hd = d_inner // h
+    return {
+        "conv": jnp.zeros((batch, 3, d_inner), dtype),
+        "num": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "den": jnp.zeros((batch, h, 1, hd), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    ks = jax.random.split(key, 7)
+    dt = cfg.param_dtype
+    d_ff = int(d * 4 / 3)
+    return {
+        # fused input weights for gates [z, i, f, o]
+        "w_in": init_dense(ks[0], d, 4 * d, dt),
+        # block-diagonal recurrent weights, per head: (h, hd, 4*hd)
+        "r": _normal(ks[1], (h, hd, 4 * hd), 1.0 / math.sqrt(hd), dt),
+        "norm": init_rmsnorm(d, dt),
+        "up_gate": init_dense(ks[2], d, d_ff, dt),
+        "up": init_dense(ks[3], d, d_ff, dt),
+        "down": init_dense(ks[4], d_ff, d, dt, scale=1.0 / math.sqrt(d_ff)),
+    }
+
+
+def slstm(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+          cache: Optional[Dict[str, jnp.ndarray]] = None
+          ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    w = dense(p["w_in"], x).astype(jnp.float32)  # (b, s, 4d)
+    r = p["r"].astype(jnp.float32)
+
+    if cache is not None:
+        state0 = (cache["h"].astype(jnp.float32),
+                  cache["c"].astype(jnp.float32),
+                  cache["n"].astype(jnp.float32),
+                  cache["m"].astype(jnp.float32))
+    else:
+        zero = jnp.zeros((b, h, hd), jnp.float32)
+        state0 = (zero, zero, zero, jnp.full((b, h, 1), -10.0, jnp.float32))
+
+    def step(state, wt):
+        hp, cp, np_, mp = state  # (b, h, hd) each; mp: (b, h, 1)
+        rec = jnp.einsum("bhd,hde->bhe", hp, r)            # (b, h, 4hd)
+        pre = wt.reshape(b, h, 4 * hd) + rec
+        zt, it, ft, ot = jnp.split(pre, 4, axis=-1)
+        zt = jnp.tanh(zt)
+        ot = jax.nn.sigmoid(ot)
+        # exponential gating with stabiliser (per paper): scalar per head
+        it_ = jnp.mean(it, axis=-1, keepdims=True)
+        ft_ = jnp.mean(ft, axis=-1, keepdims=True)
+        mt = jnp.maximum(ft_ + mp, it_)
+        i_s = jnp.exp(it_ - mt)
+        f_s = jnp.exp(ft_ + mp - mt)
+        ct = f_s * cp + i_s * zt
+        nt = f_s * np_ + i_s
+        ht = ot * ct / jnp.maximum(nt, 1e-6)
+        return (ht, ct, nt, mt), ht
+
+    (hT, cT, nT, mT), ys = jax.lax.scan(step, state0, w.transpose(1, 0, 2))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    out = dense(p["down"], jax.nn.silu(dense(p["up_gate"], y))
+                * dense(p["up"], y))
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": hT, "c": cT, "n": nT, "m": mT}
+    return out, new_cache
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    h = cfg.n_heads
+    hd = cfg.d_model // h
+    zero = jnp.zeros((batch, h, hd), jnp.float32)
+    return {"h": zero, "c": zero, "n": zero,
+            "m": jnp.full((batch, h, 1), -10.0, jnp.float32)}

@@ -1,0 +1,106 @@
+"""Continuous-batching serving engine.
+
+A request is (prompt tokens, max_new_tokens). The engine keeps a fixed
+pool of decode slots backed by one shared KV/state cache; finished
+sequences free their slot, and queued requests are admitted by a prefill
+that writes into the freed slot's cache rows. One decode step advances
+every active slot (the classic iteration-level scheduling of Orca/vLLM,
+mapped to fixed-shape JAX: slot count and cache length are static, slot
+occupancy is a mask).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import ModelBundle
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (prompt_len,) int32
+    max_new_tokens: int
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: List[int]
+
+
+class ServeEngine:
+    def __init__(self, bundle: ModelBundle, params, *, slots: int = 4,
+                 max_len: int = 512, extras: Optional[Dict] = None):
+        self.bundle = bundle
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.caches = bundle.init_cache(params, slots, max_len,
+                                        batch=extras or {},
+                                        dtype=jnp.float32)
+        self._decode = jax.jit(bundle.decode_step)
+        self.free: List[int] = list(range(slots))
+        self.active: Dict[int, dict] = {}     # slot -> request state
+        self.queue: List[Request] = []
+        self.done: List[Completion] = []
+
+    # -- request lifecycle ---------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        while self.queue and self.free:
+            req = self.queue.pop(0)
+            slot = self.free.pop(0)
+            # prefill into an isolated batch-1 view of this slot's cache
+            # rows, then write the updated rows back — other slots' caches
+            # are untouched (slot isolation).
+            prompt = jnp.asarray(req.prompt.astype(np.int32))[None, :]
+            positions = jnp.arange(prompt.shape[1], dtype=jnp.int32)[None]
+            sub = jax.tree.map(lambda x: x[:, slot:slot + 1], self.caches)
+            logits, sub = self._decode(self.params, sub, prompt, positions)
+            self.caches = jax.tree.map(
+                lambda full, s: full.at[:, slot:slot + 1].set(s),
+                self.caches, sub)
+            next_tok = int(np.asarray(jnp.argmax(logits[0, -1])))
+            self.active[slot] = {
+                "req": req, "generated": [next_tok],
+                "pos": int(prompt.shape[1]),
+            }
+
+    def _step_decode(self) -> None:
+        if not self.active:
+            return
+        tokens = np.zeros((self.slots, 1), np.int32)
+        positions = np.zeros((self.slots, 1), np.int32)
+        for slot, st in self.active.items():
+            tokens[slot, 0] = st["generated"][-1]
+            positions[slot, 0] = st["pos"]
+        logits, self.caches = self._decode(
+            self.params, self.caches, jnp.asarray(tokens),
+            jnp.asarray(positions))
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        finished = []
+        for slot, st in self.active.items():
+            st["generated"].append(int(nxt[slot]))
+            st["pos"] += 1
+            if (len(st["generated"]) >= st["req"].max_new_tokens
+                    or st["pos"] >= self.max_len - 1):
+                finished.append(slot)
+        for slot in finished:
+            st = self.active.pop(slot)
+            self.done.append(Completion(st["req"].rid, st["generated"]))
+            self.free.append(slot)
+
+    def run(self, max_steps: int = 1000) -> List[Completion]:
+        steps = 0
+        while (self.queue or self.active) and steps < max_steps:
+            self._admit()
+            self._step_decode()
+            steps += 1
+        return self.done

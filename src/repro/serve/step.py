@@ -1,0 +1,35 @@
+"""Serving step factories: prefill (cache build) and decode.
+
+prefill_step consumes the full prompt, writes the KV/state caches and
+returns last-position logits; decode_step consumes one new token per
+sequence against the cache and returns (next_token, logits, caches).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import ModelBundle
+
+
+def make_prefill_step(bundle: ModelBundle):
+    def prefill_step(params, caches, tokens, positions):
+        logits, new_caches = bundle.decode_step(params, caches, tokens,
+                                                positions)
+        return logits[:, -1:], new_caches
+    return prefill_step
+
+
+def make_decode_step(bundle: ModelBundle, *, temperature: float = 0.0):
+    def decode_step(params, caches, tokens, positions, rng=None):
+        logits, new_caches = bundle.decode_step(params, caches, tokens,
+                                                positions)
+        last = logits[:, -1]
+        if temperature > 0.0 and rng is not None:
+            next_tok = jax.random.categorical(rng, last / temperature)
+        else:
+            next_tok = jnp.argmax(last, axis=-1)
+        return next_tok.astype(jnp.int32), last, new_caches
+    return decode_step

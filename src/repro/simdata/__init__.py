@@ -1,0 +1,7 @@
+from .scout_like import (WORKLOADS, ScoutEmulator, WorkloadSpec,
+                         make_emulator)
+from .prices import ON_DEMAND_USD_PER_HOUR
+from .power import energy_kwh, node_watts
+
+__all__ = ["WORKLOADS", "ScoutEmulator", "WorkloadSpec", "make_emulator",
+           "ON_DEMAND_USD_PER_HOUR", "energy_kwh", "node_watts"]

@@ -1,0 +1,29 @@
+"""Teads-engineering-style linear power model (paper §IV-A).
+
+Energy is derived from a linear profile depending only on CPU load,
+bounded by the idle and full-load wattage of the instance; xlarge and
+2xlarge draw 2x and 4x the power of large.
+"""
+from __future__ import annotations
+
+# (idle W, peak W) for the '.large' size per family
+_LARGE_WATTS = {
+    "c4": (6.0, 16.0),
+    "m4": (7.0, 19.0),
+    "r4": (8.5, 24.0),
+}
+_SIZE_SCALE = {"large": 1.0, "xlarge": 2.0, "2xlarge": 4.0}
+
+
+def node_watts(machine_type: str, cpu_util: float) -> float:
+    family, size = machine_type.split(".")
+    idle, peak = _LARGE_WATTS[family]
+    s = _SIZE_SCALE[size]
+    u = min(max(cpu_util, 0.0), 1.0)
+    return (idle + (peak - idle) * u) * s
+
+
+def energy_kwh(machine_type: str, node_count: int, runtime_s: float,
+               cpu_util: float) -> float:
+    return node_watts(machine_type, cpu_util) * node_count * runtime_s \
+        / 3600.0 / 1000.0

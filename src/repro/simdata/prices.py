@@ -1,0 +1,18 @@
+"""AWS on-demand prices (USD/hour, us-east-1, July-2023 era) for the
+scout-like machine types — per the paper's cost derivation (§IV-A)."""
+
+ON_DEMAND_USD_PER_HOUR = {
+    "c4.large": 0.100,
+    "c4.xlarge": 0.199,
+    "c4.2xlarge": 0.398,
+    "m4.large": 0.100,
+    "m4.xlarge": 0.200,
+    "m4.2xlarge": 0.400,
+    "r4.large": 0.133,
+    "r4.xlarge": 0.266,
+    "r4.2xlarge": 0.532,
+}
+
+
+def price_per_hour(machine_type: str) -> float:
+    return ON_DEMAND_USD_PER_HOUR[machine_type]

@@ -1,0 +1,128 @@
+"""Sharded checkpointing with atomic commit and elastic resharding.
+
+Format: one directory per step containing
+  - ``manifest.json``  : step, pytree structure, per-leaf shape/dtype,
+                         mesh metadata, commit marker
+  - ``shard_<i>.npz``  : leaf arrays (host-local values; on a real
+                         multi-host pod each host writes its addressable
+                         shards — here the single host holds everything)
+
+Fault-tolerance properties:
+  - atomic commit: data is written to ``<dir>.tmp`` and renamed only
+    after the manifest is fully flushed -> a crash mid-write never
+    corrupts the latest valid checkpoint;
+  - ``latest_checkpoint`` skips uncommitted/corrupt directories;
+  - elastic restore: ``restore`` takes the CURRENT mesh/shardings — the
+    stored global arrays are re-sharded on load, so a run checkpointed
+    on N pods restarts on M pods unchanged (ZeRO states included).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any
+
+
+def _leaf_key(i: int) -> str:
+    return f"leaf_{i:05d}"
+
+
+def save_checkpoint(directory: str, step: int, tree: Params,
+                    *, mesh_meta: Optional[Dict] = None) -> str:
+    """Write one atomic checkpoint under directory/step_<step>."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    leaves, treedef = jax.tree.flatten(tree)
+    arrays = {}
+    meta_leaves = []
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        logical_dtype = str(arr.dtype)
+        if arr.dtype.kind == "V" or logical_dtype == "bfloat16":
+            # numpy's npz cannot round-trip ml_dtypes (bf16 -> void2):
+            # store the raw bits as uint16 and restore via view()
+            arr = arr.view(np.uint16)
+        arrays[_leaf_key(i)] = arr
+        meta_leaves.append({"shape": list(arr.shape),
+                            "dtype": logical_dtype})
+    np.savez(os.path.join(tmp, "shard_0.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "treedef": jax.tree_util.tree_structure(tree).serialize_using_proto().hex(),
+        "leaves": meta_leaves,
+        "mesh": mesh_meta or {},
+        "committed": True,
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    return final
+
+
+def list_checkpoints(directory: str) -> List[Tuple[int, str]]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in sorted(os.listdir(directory)):
+        if not name.startswith("step_") or name.endswith(".tmp"):
+            continue
+        path = os.path.join(directory, name)
+        mpath = os.path.join(path, "manifest.json")
+        try:
+            with open(mpath) as f:
+                m = json.load(f)
+            if m.get("committed"):
+                out.append((int(m["step"]), path))
+        except Exception:
+            continue  # partial/corrupt checkpoint: skip
+    return sorted(out)
+
+
+def latest_checkpoint(directory: str) -> Optional[Tuple[int, str]]:
+    cps = list_checkpoints(directory)
+    return cps[-1] if cps else None
+
+
+def restore_checkpoint(path: str, target_tree: Params,
+                       shardings: Optional[Params] = None) -> Params:
+    """Restore into the structure of ``target_tree``; if ``shardings``
+    is given, leaves are placed with those shardings (elastic reshard —
+    the stored global array is valid on any mesh)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "shard_0.npz"))
+    leaves_t, treedef = jax.tree.flatten(target_tree)
+    assert len(leaves_t) == len(manifest["leaves"]), \
+        "checkpoint/target structure mismatch"
+    shard_leaves = jax.tree.leaves(shardings) if shardings is not None \
+        else [None] * len(leaves_t)
+    out = []
+    for i, (tgt, sh) in enumerate(zip(leaves_t, shard_leaves)):
+        arr = data[_leaf_key(i)]
+        logical = manifest["leaves"][i]["dtype"]
+        if str(arr.dtype) != logical:  # bit-stored exotic dtype (bf16)
+            arr = arr.view(jnp.dtype(logical))
+        expect = tuple(getattr(tgt, "shape", arr.shape))
+        assert tuple(arr.shape) == expect, (i, arr.shape, expect)
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jnp.asarray(arr))
+    return jax.tree.unflatten(treedef, out)

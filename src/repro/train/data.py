@@ -1,0 +1,81 @@
+"""Synthetic token data pipeline with background prefetch.
+
+Deterministic per (seed, step) — restart/elastic-rescale resumes the
+exact stream (the generator is indexed by global step, not by an
+internal cursor), which is what checkpoint-restart correctness needs.
+Prefetching runs on a worker thread with a bounded queue: the host
+produces batch t+k while step t executes (straggler hiding on the input
+side).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Dict, Iterator, Optional
+
+import numpy as np
+
+
+class SyntheticLM:
+    """Zipfian token stream + next-token labels."""
+
+    def __init__(self, vocab: int, seq_len: int, global_batch: int,
+                 seed: int = 0, extras: Optional[Callable[[np.random.Generator, int], Dict]] = None):
+        self.vocab = vocab
+        self.seq_len = seq_len
+        self.global_batch = global_batch
+        self.seed = seed
+        self.extras = extras
+        ranks = np.arange(1, vocab + 1, dtype=np.float64)
+        p = 1.0 / ranks ** 1.1
+        self._p = p / p.sum()
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng((self.seed, step))
+        tokens = rng.choice(self.vocab, size=(self.global_batch,
+                                              self.seq_len + 1), p=self._p)
+        batch = {
+            "tokens": tokens[:, :-1].astype(np.int32),
+            "labels": tokens[:, 1:].astype(np.int32),
+        }
+        if self.extras is not None:
+            batch.update(self.extras(rng, step))
+        return batch
+
+
+class Prefetcher:
+    """Bounded-queue background prefetch of batches [start, ...)."""
+
+    def __init__(self, source: SyntheticLM, start_step: int,
+                 depth: int = 2):
+        self._source = source
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._step = start_step
+        self._thread = threading.Thread(target=self._work, daemon=True)
+        self._thread.start()
+
+    def _work(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = self._source.batch_at(step)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def next(self) -> Dict[str, np.ndarray]:
+        step, batch = self._q.get()
+        return batch
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2.0)

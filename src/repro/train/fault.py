@@ -1,0 +1,118 @@
+"""Fault-tolerant training loop wrapper.
+
+On thousands of nodes the failure model is: a step either completes,
+hangs (straggler / dead host), or the process dies. This module provides
+the host-side control plane used by ``launch/train.py``:
+
+  - ``StepWatchdog``     per-step deadline; a step exceeding
+                         ``timeout_factor x`` the rolling median is
+                         flagged (on a real deployment this triggers the
+                         coordinator's slice-restart; here we record and
+                         surface it).
+  - ``run_resilient``    checkpoint every N steps, resume from the newest
+                         committed checkpoint after a (simulated or real)
+                         failure, with elastic mesh resharding on resume.
+  - ``FailureInjector``  deterministic fault injection for tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from .checkpoint import latest_checkpoint, restore_checkpoint, save_checkpoint
+
+
+class StepWatchdog:
+    def __init__(self, timeout_factor: float = 3.0, window: int = 20):
+        self.timeout_factor = timeout_factor
+        self._durations: List[float] = []
+        self.window = window
+        self.stragglers: List[int] = []
+
+    def observe(self, step: int, duration_s: float) -> bool:
+        """Returns True if this step counts as a straggler."""
+        med = float(np.median(self._durations[-self.window:])) \
+            if self._durations else duration_s
+        self._durations.append(duration_s)
+        is_straggler = len(self._durations) > 3 and \
+            duration_s > self.timeout_factor * med
+        if is_straggler:
+            self.stragglers.append(step)
+        return is_straggler
+
+
+class FailureInjector:
+    """Deterministically kill the loop at given steps (tests/demos)."""
+
+    def __init__(self, fail_at: Optional[List[int]] = None):
+        self.fail_at = set(fail_at or [])
+        self.injected: List[int] = []
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at:
+            self.fail_at.discard(step)
+            self.injected.append(step)
+            raise RuntimeError(f"injected node failure at step {step}")
+
+
+@dataclasses.dataclass
+class ResilientReport:
+    steps_done: int
+    restarts: int
+    stragglers: List[int]
+    losses: List[float]
+
+
+def run_resilient(
+    *,
+    init_state: Callable[[], Any],          # () -> (params, opt_state)
+    step_fn: Callable[..., Any],            # (params, opt, batch, step)
+    batch_at: Callable[[int], Dict],
+    total_steps: int,
+    ckpt_dir: str,
+    ckpt_every: int = 10,
+    shardings: Optional[Any] = None,        # (param_sh, opt_sh) for elastic
+    injector: Optional[FailureInjector] = None,
+    max_restarts: int = 10,
+    mesh_meta: Optional[Dict] = None,
+) -> ResilientReport:
+    """Run the training loop to completion across (injected) failures."""
+    watchdog = StepWatchdog()
+    restarts = 0
+    losses: List[float] = []
+
+    while True:
+        # --- (re)start: restore newest committed checkpoint ---------------
+        params, opt_state = init_state()
+        start = 0
+        latest = latest_checkpoint(ckpt_dir)
+        if latest is not None:
+            step0, path = latest
+            params, opt_state = restore_checkpoint(
+                path, (params, opt_state), shardings)
+            start = step0 + 1
+        try:
+            for step in range(start, total_steps):
+                if injector is not None:
+                    injector.maybe_fail(step)
+                t0 = time.time()
+                batch = batch_at(step)
+                params, opt_state, metrics = step_fn(
+                    params, opt_state, batch, step)
+                loss = float(metrics["loss"])
+                losses.append(loss)
+                watchdog.observe(step, time.time() - t0)
+                if (step + 1) % ckpt_every == 0 or step + 1 == total_steps:
+                    save_checkpoint(ckpt_dir, step, (params, opt_state),
+                                    mesh_meta=mesh_meta)
+            return ResilientReport(total_steps, restarts,
+                                   watchdog.stragglers, losses)
+        except RuntimeError as e:
+            if "injected" not in str(e):
+                raise
+            restarts += 1
+            if restarts > max_restarts:
+                raise RuntimeError("too many restarts") from e

@@ -1,0 +1,161 @@
+"""Optimizers: AdamW (fp32 master + moments) and Adafactor (factored
+second moment, no master copy) — pure-JAX pytree implementations.
+
+AdamW keeps a fp32 master copy of bf16 params so mixed-precision training
+is loss-free; the master + moments are the ZeRO-1 shardable state (see
+``launch.shardings.opt_state_specs``). Adafactor is used for the MoE
+giants (qwen3-235b, arctic-480b) where fp32 Adam state cannot fit the
+pod (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Params], Any]
+    update: Callable[..., Tuple[Params, Any]]  # (grads, state, params, lr)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        # copy=True: for fp32 params astype would alias the param buffer,
+        # breaking donation (same buffer donated twice)
+        f32 = lambda p: jnp.array(p, jnp.float32, copy=True)
+        return {
+            "master": jax.tree.map(f32, params),
+            "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                               params),
+            "nu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                               params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        cf = count.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** cf
+        bc2 = 1.0 - b2 ** cf
+
+        def upd(g, m, mu, nu):
+            g = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * jnp.square(g)
+            step = (mu / bc1) / (jnp.sqrt(nu / bc2) + eps)
+            if m.ndim >= 2:  # decoupled weight decay on matrices only
+                step = step + weight_decay * m
+            m = m - lr * step
+            return m, mu, nu
+
+        out = jax.tree.map(upd, grads, state["master"], state["mu"],
+                           state["nu"])
+        master = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+        nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+        new_params = jax.tree.map(
+            lambda m, p: m.astype(p.dtype), master, params)
+        return new_params, {"master": master, "mu": mu, "nu": nu,
+                            "count": count}
+
+    return Optimizer("adamw", init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor
+# ---------------------------------------------------------------------------
+
+
+def adafactor(eps: float = 1e-30, clip_threshold: float = 1.0,
+              weight_decay: float = 0.0) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern, 2018).
+
+    State per matrix param: two vectors (row/col second-moment stats)
+    instead of a full moment tensor; params are updated in their own
+    dtype (fp32 recommended for the giants).
+    """
+
+    def _stats(p):
+        if p.ndim >= 2:
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    def init(params):
+        # stats stored as a flat list aligned with jax.tree.leaves(params)
+        return {"stats": [_stats(p) for p in jax.tree.leaves(params)],
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        cf = count.astype(jnp.float32)
+        beta2 = 1.0 - cf ** -0.8  # per the paper's schedule
+
+        def upd(g, p, st):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if p.ndim >= 2:
+                vr = beta2 * st["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * st["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                    eps)
+                vhat = (vr[..., None] * vc[..., None, :]) / denom[..., None]
+                u = g * jax.lax.rsqrt(vhat + eps)
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * st["v"] + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                new_st = {"v": v}
+            # update clipping by RMS
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            pf = p.astype(jnp.float32)
+            if weight_decay and p.ndim >= 2:
+                u = u + weight_decay * pf
+            return (pf - lr * u).astype(p.dtype), new_st
+
+        g_leaves, treedef = jax.tree.flatten(grads)
+        p_leaves = jax.tree.leaves(params)
+        out = [upd(g, p, st) for g, p, st
+               in zip(g_leaves, p_leaves, state["stats"])]
+        new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+        return new_params, {"stats": [o[1] for o in out], "count": count}
+
+    return Optimizer("adafactor", init, update)
+
+
+def get_optimizer(name: str, **kwargs) -> Optimizer:
+    if name == "adamw":
+        return adamw(**kwargs)
+    if name == "adafactor":
+        return adafactor(**kwargs)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here on purpose — tests and benches see 1 CPU device;
+# only launch/dryrun.py installs the 512-placeholder-device flag.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

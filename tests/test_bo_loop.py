@@ -1,0 +1,74 @@
+"""BO loop integration: convergence, early stopping, Karasu >= NaiveBO
+with same-workload support data (the paper's core claim in miniature)."""
+import numpy as np
+import pytest
+
+from repro.core import (BOConfig, Constraint, Objective, Repository,
+                        run_search, scout_search_space)
+from repro.simdata import make_emulator
+
+EMU = make_emulator()
+SPACE = scout_search_space()
+WID = EMU.workload_ids()[6]   # spark1.5/terasort
+TARGET_RT = EMU.runtime_target(WID, 50)
+OPT = EMU.optimal_cost(WID, TARGET_RT)
+
+
+def _profile(seed):
+    rng = np.random.default_rng(seed)
+    return lambda c: EMU.run(WID, c, rng=rng)
+
+
+def _final_gap(result):
+    i = result.best_index_per_iter[-1]
+    assert i >= 0, "no feasible config found"
+    return result.observations[i].measures["cost"] / OPT - 1.0
+
+
+def test_naive_bo_converges():
+    r = run_search(SPACE, _profile(0), Objective("cost"),
+                   [Constraint("runtime", TARGET_RT)], method="naive",
+                   bo_config=BOConfig(max_iters=12), seed=0)
+    assert len(r.observations) == 12
+    assert _final_gap(r) < 0.5
+
+
+def test_early_stopping_triggers():
+    r = run_search(SPACE, _profile(0), Objective("cost"),
+                   [Constraint("runtime", TARGET_RT)], method="naive",
+                   bo_config=BOConfig(max_iters=20, early_stop=True),
+                   seed=0)
+    assert len(r.observations) <= 20
+    assert r.meta["n_profiled"] >= 6   # stopping needs >= 6 runs
+
+
+def test_karasu_uses_support_and_improves_early():
+    """Case D: repository holds another user's runs of the same workload;
+    Karasu's early-iteration incumbent should (weakly) dominate NaiveBO's
+    on average over seeds."""
+    repo = Repository()
+    rng = np.random.default_rng(99)
+    for u in range(2):
+        for ci in rng.choice(len(SPACE), 12, replace=False):
+            repo.add_run(EMU.make_record(f"anon-{u}", WID,
+                                         SPACE.configs[ci], rng))
+    gaps_n, gaps_k = [], []
+    for seed in range(2):
+        rn = run_search(SPACE, _profile(seed), Objective("cost"),
+                        [Constraint("runtime", TARGET_RT)], method="naive",
+                        bo_config=BOConfig(max_iters=8), seed=seed)
+        rk = run_search(SPACE, _profile(seed), Objective("cost"),
+                        [Constraint("runtime", TARGET_RT)],
+                        method="karasu", repository=repo,
+                        bo_config=BOConfig(max_iters=8), seed=seed)
+        assert rk.meta["selected"], "karasu never selected support models"
+        gaps_n.append(_final_gap(rn))
+        gaps_k.append(_final_gap(rk))
+    assert np.mean(gaps_k) <= np.mean(gaps_n) + 0.10, (gaps_k, gaps_n)
+
+
+def test_augmented_bo_runs():
+    r = run_search(SPACE, _profile(1), Objective("cost"),
+                   [Constraint("runtime", TARGET_RT)], method="augmented",
+                   bo_config=BOConfig(max_iters=8), seed=1)
+    assert len(r.observations) == 8

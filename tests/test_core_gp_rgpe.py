@@ -1,0 +1,83 @@
+"""GP + RGPE unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build_ensemble, compute_weights, ensemble_posterior, fit_gp
+from repro.core.gp import gp_loo_samples, gp_posterior, gp_posterior_raw, gp_sample
+
+
+def _surface(x):
+    return np.sin(3 * x[:, 0]) + 0.5 * x[:, 1]
+
+
+def test_gp_interpolates_and_ranks():
+    rng = np.random.default_rng(0)
+    x = rng.random((12, 2))
+    y = _surface(x)
+    gp = fit_gp(x, y, noise=0.01)
+    xq = rng.random((50, 2))
+    mu, _ = gp_posterior_raw(gp, xq)
+    corr = np.corrcoef(np.asarray(mu), _surface(xq))[0, 1]
+    assert corr > 0.8, corr
+
+
+def test_gp_posterior_variance_shrinks_at_observed():
+    rng = np.random.default_rng(1)
+    x = rng.random((8, 2))
+    y = _surface(x)
+    gp = fit_gp(x, y)
+    _, var_obs = gp_posterior(gp, x)
+    far = np.full((1, 2), 5.0)
+    _, var_far = gp_posterior(gp, far)
+    assert float(jnp.mean(var_obs)) < float(var_far[0])
+
+
+def test_gp_sample_shape_and_spread():
+    rng = np.random.default_rng(2)
+    x = rng.random((6, 2))
+    gp = fit_gp(x, _surface(x))
+    s = gp_sample(gp, rng.random((9, 2)), jax.random.PRNGKey(0), 64)
+    assert s.shape == (64, 9)
+    assert float(jnp.std(s)) > 0
+
+
+def test_rgpe_weights_prefer_related_model():
+    rng = np.random.default_rng(3)
+    xs = rng.random((30, 2))
+    related = fit_gp(xs, _surface(xs))                      # same surface
+    unrelated = fit_gp(xs, rng.normal(size=30))             # noise
+    x_t = rng.random((8, 2))
+    target = fit_gp(x_t, _surface(x_t))
+    w = np.asarray(compute_weights([related, unrelated], target,
+                                   jax.random.PRNGKey(0)))
+    assert w.shape == (3,)
+    np.testing.assert_allclose(w.sum(), 1.0, atol=1e-6)
+    assert np.all(w >= 0)
+    assert w[0] > w[1], w  # related model must outweigh noise model
+
+
+def test_rgpe_ensemble_posterior_improves_ranking():
+    rng = np.random.default_rng(4)
+    xs = rng.random((40, 2))
+    related = fit_gp(xs, _surface(xs))
+    x_t = rng.random((4, 2))     # very few target points
+    target = fit_gp(x_t, _surface(x_t))
+    ens = build_ensemble([related], target, jax.random.PRNGKey(1))
+    xq = rng.random((60, 2))
+    mu_e, _ = ensemble_posterior(ens, xq)
+    mu_t, _ = gp_posterior(target, xq)
+    truth = _surface(xq)
+    corr_e = np.corrcoef(np.asarray(mu_e), truth)[0, 1]
+    corr_t = np.corrcoef(np.asarray(mu_t), truth)[0, 1]
+    assert corr_e > corr_t - 0.05  # ensemble at least as informative
+
+
+def test_loo_samples_shape():
+    rng = np.random.default_rng(5)
+    x = rng.random((7, 2))
+    gp = fit_gp(x, _surface(x))
+    s = gp_loo_samples(gp, jax.random.PRNGKey(0), 32)
+    assert s.shape == (32, 7)
+    assert bool(jnp.all(jnp.isfinite(s)))

@@ -1,0 +1,56 @@
+"""Flash attention: xla + pallas(interpret) vs naive oracle, shape/dtype
+sweeps including non-divisible tails, GQA, SWA, softcap, decode path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+
+SHAPES = [
+    # (b, q, kv, nq, nkv, hd)
+    (1, 16, 16, 2, 2, 8),
+    (2, 67, 131, 8, 2, 32),      # GQA + ragged tails
+    (1, 128, 128, 4, 4, 64),
+    (2, 1, 160, 8, 4, 16),       # decode-style
+]
+
+
+def _mk(shape, dtype):
+    b, q, kv, nq, nkv, hd = shape
+    k = jax.random.PRNGKey(0)
+    qa = jax.random.normal(k, (b, q, nq, hd), dtype)
+    ka = jax.random.normal(jax.random.fold_in(k, 1), (b, kv, nkv, hd), dtype)
+    va = jax.random.normal(jax.random.fold_in(k, 2), (b, kv, nkv, hd), dtype)
+    return qa, ka, va
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("kwargs", [
+    dict(causal=True), dict(causal=False),
+    dict(causal=True, window=16), dict(causal=True, softcap=20.0),
+])
+def test_flash_vs_ref(shape, dtype, kwargs):
+    qa, ka, va = _mk(shape, dtype)
+    ref = attention_ref(qa, ka, va, **kwargs)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 3e-5
+    for impl in ["xla", "pallas_interpret"]:
+        out = flash_attention(qa, ka, va, impl=impl, **kwargs)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            atol=tol, rtol=tol, err_msg=f"{impl} {shape} {kwargs}")
+
+
+def test_decode_path_with_mask():
+    qa, ka, va = _mk((2, 1, 64, 8, 4, 16), jnp.float32)
+    kv_mask = jnp.arange(64)[None, :] < 40
+    kv_mask = jnp.broadcast_to(kv_mask, (2, 64))
+    qpos = jnp.full((2, 1), 39)
+    kpos = jnp.broadcast_to(jnp.arange(64), (2, 64))
+    ref = attention_ref(qa, ka, va, causal=True, q_positions=qpos,
+                        kv_positions=kpos, kv_mask=kv_mask)
+    out = flash_attention(qa, ka, va, causal=True, q_positions=qpos,
+                          kv_positions=kpos, kv_mask=kv_mask, impl="decode")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-5, rtol=3e-5)

@@ -1,0 +1,78 @@
+"""Grouped GEMM (MoE expert matmul): padded-bmm XLA path + megablox-style
+Pallas kernel vs the masked-dense oracle and lax.ragged_dot."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.grouped_gemm import grouped_gemm, grouped_gemm_ref
+
+
+def _sizes(key, m, g):
+    w = jax.random.dirichlet(key, jnp.ones(g)) * m
+    s = jnp.floor(w).astype(jnp.int32)
+    return s.at[-1].add(m - jnp.sum(s))
+
+
+@pytest.mark.parametrize("m,k,n,g", [
+    (64, 16, 24, 4), (200, 32, 48, 8), (37, 8, 8, 3), (128, 64, 128, 2),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("impl", ["xla", "ragged", "pallas_interpret"])
+def test_grouped_gemm_vs_oracle(m, k, n, g, dtype, impl):
+    key = jax.random.PRNGKey(0)
+    lhs = jax.random.normal(key, (m, k), dtype)
+    rhs = jax.random.normal(jax.random.fold_in(key, 1), (g, k, n), dtype)
+    sizes = _sizes(jax.random.fold_in(key, 2), m, g)
+    ref = grouped_gemm_ref(lhs, rhs, sizes)
+    out = grouped_gemm(lhs, rhs, sizes, impl=impl)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol,
+                               err_msg=f"{impl} {(m, k, n, g)}")
+
+
+def test_empty_groups_and_single_group():
+    key = jax.random.PRNGKey(3)
+    lhs = jax.random.normal(key, (32, 8))
+    rhs = jax.random.normal(jax.random.fold_in(key, 1), (4, 8, 16))
+    sizes = jnp.array([0, 32, 0, 0], jnp.int32)   # all rows in group 1
+    ref = grouped_gemm_ref(lhs, rhs, sizes)
+    for impl in ["xla", "pallas_interpret"]:
+        out = grouped_gemm(lhs, rhs, sizes, impl=impl)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-4, rtol=2e-4, err_msg=impl)
+
+
+def test_padded_bmm_flops_near_ideal():
+    """The reason this kernel exists: XLA-CPU's ragged_dot costs g x the
+    dropless ideal; the padded bmm stays within ~1.3x at realistic
+    group sizes."""
+    from repro.launch import hlo_stats
+    m, k, n, g = 4096, 64, 32, 8
+    c = jax.jit(lambda l, r, s: grouped_gemm(l, r, s, impl="xla")).lower(
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((g, k, n), jnp.float32),
+        jax.ShapeDtypeStruct((g,), jnp.int32)).compile()
+    s = hlo_stats.analyze(c.as_text())
+    ratio = s["dot_flops"] / (2 * m * k * n)
+    assert ratio < 1.4, ratio
+
+
+def test_grouped_gemm_differentiable():
+    key = jax.random.PRNGKey(4)
+    lhs = jax.random.normal(key, (48, 8))
+    rhs = jax.random.normal(jax.random.fold_in(key, 1), (4, 8, 12))
+    sizes = _sizes(jax.random.fold_in(key, 2), 48, 4)
+
+    def loss(impl):
+        return lambda l, r: jnp.sum(
+            grouped_gemm(l, r, sizes, impl=impl) ** 2)
+
+    gl_x, gr_x = jax.grad(loss("xla"), argnums=(0, 1))(lhs, rhs)
+    gl_r, gr_r = jax.grad(loss("ragged"), argnums=(0, 1))(lhs, rhs)
+    np.testing.assert_allclose(np.asarray(gl_x), np.asarray(gl_r),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(gr_x), np.asarray(gr_r),
+                               atol=2e-4, rtol=2e-4)

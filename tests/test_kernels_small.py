@@ -1,0 +1,55 @@
+"""matern / pairwise_pearson / ranking_loss kernels vs oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from scipy.stats import pearsonr
+
+from repro.kernels.matern import matern52, matern52_ref
+from repro.kernels.pairwise_pearson import pairwise_pearson
+from repro.kernels.ranking_loss import ranking_loss, ranking_loss_ref
+
+
+@pytest.mark.parametrize("m,n,d", [(5, 7, 3), (37, 53, 7), (130, 64, 18)])
+def test_matern_pallas_vs_ref(m, n, d):
+    a = jax.random.normal(jax.random.PRNGKey(0), (m, d))
+    b = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    r = matern52_ref(a, b)
+    p = matern52(a, b, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(p), np.asarray(r),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_matern_identity_diag():
+    a = jax.random.normal(jax.random.PRNGKey(0), (9, 4))
+    k = np.asarray(matern52_ref(a, a))
+    np.testing.assert_allclose(np.diagonal(k), 1.0, atol=1e-4)
+    assert np.all(k <= 1.0 + 1e-5) and np.all(k > 0)
+
+
+@pytest.mark.parametrize("m,n,d", [(4, 6, 18), (9, 13, 30), (70, 5, 18)])
+def test_pearson_vs_scipy(m, n, d):
+    rng = np.random.default_rng(0)
+    a, b = rng.normal(size=(m, d)), rng.normal(size=(n, d))
+    for impl in ["xla", "pallas_interpret"]:
+        r = np.asarray(pairwise_pearson(jnp.array(a), jnp.array(b),
+                                        impl=impl))
+        exp = np.array([[pearsonr(a[i], b[j])[0] for j in range(n)]
+                        for i in range(m)])
+        np.testing.assert_allclose(r, exp, atol=1e-5, err_msg=impl)
+
+
+@pytest.mark.parametrize("s,n", [(7, 5), (19, 11), (200, 20)])
+def test_ranking_loss_vs_bruteforce(s, n):
+    p = jax.random.normal(jax.random.PRNGKey(0), (s, n))
+    y = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    ref = np.asarray(ranking_loss_ref(p, y))
+    brute = np.zeros(s, int)
+    pn, yn = np.asarray(p), np.asarray(y)
+    for si in range(s):
+        for j in range(n):
+            for k in range(n):
+                brute[si] += (pn[si, j] < pn[si, k]) ^ (yn[j] < yn[k])
+    np.testing.assert_array_equal(ref, brute)
+    pi = np.asarray(ranking_loss(p, y, impl="pallas_interpret"))
+    np.testing.assert_array_equal(pi, brute)

@@ -1,0 +1,50 @@
+"""SSD scan: chunked xla + pallas(interpret) vs sequential oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ssm_scan import ssm_scan, ssm_scan_ref
+
+
+def _mk(b, s, h, hd, n, per_head, dtype=jnp.float32):
+    k = jax.random.PRNGKey(3)
+    x = jax.random.normal(k, (b, s, h, hd), dtype)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(k, 1),
+                                           (b, s, h)))
+    decay = jnp.exp(-dt * jnp.exp(jax.random.normal(
+        jax.random.fold_in(k, 2), (h,))))
+    shp = (b, s, h, n) if per_head else (b, s, n)
+    B = jax.random.normal(jax.random.fold_in(k, 3), shp, dtype)
+    C = jax.random.normal(jax.random.fold_in(k, 4), shp, dtype)
+    S0 = jax.random.normal(jax.random.fold_in(k, 5), (b, h, hd, n))
+    return x, dt, decay, B, C, S0
+
+
+@pytest.mark.parametrize("b,s,h,hd,n", [
+    (1, 32, 2, 8, 4), (2, 67, 3, 16, 8), (1, 200, 1, 8, 16),
+])
+@pytest.mark.parametrize("per_head", [False, True])
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+def test_ssm_scan_vs_ref(b, s, h, hd, n, per_head, impl):
+    x, dt, decay, B, C, S0 = _mk(b, s, h, hd, n, per_head)
+    yr, sr = ssm_scan_ref(x, dt, decay, B, C, S0)
+    y, sf = ssm_scan(x, dt, decay, B, C, initial_state=S0, impl=impl)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(sr),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_ssm_scan_state_chaining():
+    """Scanning two halves with carried state == scanning whole."""
+    x, dt, decay, B, C, _ = _mk(1, 64, 2, 8, 4, False)
+    y_full, s_full = ssm_scan(x, dt, decay, B, C, impl="xla")
+    y1, s1 = ssm_scan(x[:, :32], dt[:, :32], decay[:, :32], B[:, :32],
+                      C[:, :32], impl="xla")
+    y2, s2 = ssm_scan(x[:, 32:], dt[:, 32:], decay[:, 32:], B[:, 32:],
+                      C[:, 32:], initial_state=s1, impl="xla")
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               atol=2e-4, rtol=2e-4)

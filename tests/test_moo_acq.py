@@ -1,0 +1,59 @@
+"""Acquisition functions + multi-objective search."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.acquisition import (_hv_2d, expected_improvement, mc_ehvi,
+                                    pareto_front, probability_of_feasibility)
+from repro.core import (BOConfig, Constraint, Objective, run_search_moo,
+                        scout_search_space, pareto_of_result)
+from repro.simdata import make_emulator
+
+
+def test_ei_properties():
+    mu = jnp.array([0.0, 1.0, -1.0])
+    var = jnp.array([1.0, 1.0, 1e-8])
+    ei = np.asarray(expected_improvement(mu, var, best=0.0))
+    assert ei[2] > ei[0] > ei[1]          # lower mean -> higher EI
+    assert np.all(ei >= 0)
+
+
+def test_pof_monotone():
+    mu, var = jnp.array([0.0]), jnp.array([1.0])
+    lo = float(probability_of_feasibility(mu, var, -1.0)[0])
+    hi = float(probability_of_feasibility(mu, var, 1.0)[0])
+    assert lo < 0.5 < hi
+
+
+def test_hv_and_pareto():
+    pts = np.array([[1.0, 3.0], [2.0, 2.0], [3.0, 1.0], [3.0, 3.0]])
+    front = pareto_front(pts)
+    assert len(front) == 3                # (3,3) dominated
+    hv = _hv_2d(front, np.array([4.0, 4.0]))
+    assert hv == 3.0 + 2.0 + 1.0          # staircase area
+
+
+def test_mc_ehvi_prefers_dominating_point():
+    obs = np.array([[2.0, 2.0]])
+    ref = np.array([4.0, 4.0])
+    # candidate 0 dominates obs; candidate 1 is dominated
+    sa = np.tile(np.array([[1.0, 3.0]]), (16, 1))
+    sb = np.tile(np.array([[1.0, 3.0]]), (16, 1))
+    acq = mc_ehvi(sa, sb, obs, ref)
+    assert acq[0] > acq[1]
+
+
+def test_moo_search_runs_and_finds_pareto():
+    emu = make_emulator()
+    space = scout_search_space()
+    wid = emu.workload_ids()[8]
+    rng = np.random.default_rng(0)
+    target_rt = emu.runtime_target(wid, 75)
+    r = run_search_moo(space, lambda c: emu.run(wid, c, rng=rng),
+                       [Objective("cost"), Objective("energy")],
+                       [Constraint("runtime", target_rt)],
+                       method="naive", bo_config=BOConfig(max_iters=8),
+                       seed=0, n_mc=16)
+    assert len(r.observations) == 8
+    front = pareto_of_result(r, [Objective("cost"), Objective("energy")],
+                             [Constraint("runtime", target_rt)])
+    assert len(front) >= 1

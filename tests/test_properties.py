@@ -1,0 +1,99 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+import hypothesis.extra.numpy as hnp
+
+from repro.core.aggregation import aggregate_metrics
+from repro.core.encoding import scout_search_space
+from repro.core.selection import dist
+from repro.core.types import RunRecord
+from repro.kernels.ranking_loss import ranking_loss_ref
+from repro.kernels.pairwise_pearson import pairwise_pearson_ref
+
+_float = st.floats(min_value=-100, max_value=100, allow_nan=False,
+                   width=32)
+
+
+@settings(max_examples=30, deadline=None)
+@given(hnp.arrays(np.float32, (5, 8),
+                  elements=st.integers(-50, 50).map(float)),
+       hnp.arrays(np.float32, (8,), elements=_float))
+def test_ranking_loss_invariant_under_monotone_transform(p, y):
+    """The property RGPE relies on (paper §III-B): only rankings matter,
+    so any strictly increasing transform of predictions leaves the loss
+    unchanged. (Predictions drawn on an integer grid so the exp transform
+    cannot collapse distinct values in float32.)"""
+    base = np.asarray(ranking_loss_ref(jnp.array(p), jnp.array(y)))
+    transformed = np.asarray(ranking_loss_ref(
+        jnp.array(3.0 * p + 7.0), jnp.array(y)))
+    exp_t = np.asarray(ranking_loss_ref(jnp.array(np.exp(p * 0.05)),
+                                        jnp.array(y)))
+    np.testing.assert_array_equal(base, transformed)
+    np.testing.assert_array_equal(base, exp_t)
+
+
+@settings(max_examples=30, deadline=None)
+@given(hnp.arrays(np.float64, (4, 18),
+                  elements=st.floats(0, 100, allow_nan=False)),
+       hnp.arrays(np.float64, (3, 18),
+                  elements=st.floats(0, 100, allow_nan=False)))
+def test_pearson_symmetry_and_range(a, b):
+    r = np.asarray(pairwise_pearson_ref(jnp.array(a), jnp.array(b)))
+    assert np.all(r <= 1.0 + 1e-5) and np.all(r >= -1.0 - 1e-5)
+    rt = np.asarray(pairwise_pearson_ref(jnp.array(b), jnp.array(a)))
+    np.testing.assert_allclose(r, rt.T, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(hnp.arrays(np.float64, (6, 40),
+                  elements=st.floats(0, 100, allow_nan=False)))
+def test_agg_quantiles_contained_and_ordered(raw):
+    agg = aggregate_metrics(raw)
+    assert agg.shape == (6, 3)
+    for i in range(6):
+        assert raw[i].min() - 1e-9 <= agg[i, 0] <= agg[i, 1] <= agg[i, 2] \
+            <= raw[i].max() + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 64))
+def test_dist_scaling_factor_bounds(n1, n2):
+    """DIST scaling factor in (0, 1], = 1 iff equal node counts; score in
+    [0, 1]."""
+    rng = np.random.default_rng(0)
+    r1 = RunRecord("a", {"machine_type": "c4.large", "node_count": n1},
+                   rng.random((6, 3)), {"cost": 1.0})
+    r2 = RunRecord("b", {"machine_type": "c4.large", "node_count": n2},
+                   rng.random((6, 3)), {"cost": 1.0})
+    w, s = dist(r1, r2)
+    assert 0 < w <= 1.0
+    assert (w == 1.0) == (n1 == n2)
+    assert 0.0 <= s <= 1.0
+
+
+def test_encoder_deterministic_and_distinct():
+    space = scout_search_space()
+    assert len(space) == 69
+    X = space.all_encoded()
+    X2 = space.all_encoded()
+    np.testing.assert_array_equal(X, X2)
+    # all configs encode distinctly
+    assert len({tuple(row) for row in X}) == 69
+    assert np.all(np.isfinite(X))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 68), st.integers(0, 68))
+def test_rgpe_weights_simplex(i, j):
+    from repro.core import compute_weights, fit_gp
+    rng = np.random.default_rng(i * 100 + j)
+    x = rng.random((6, 3))
+    y = rng.random(6)
+    t = fit_gp(x, y)
+    b = fit_gp(rng.random((8, 3)), rng.random(8))
+    w = np.asarray(compute_weights([b], t, jax.random.PRNGKey(j),
+                                   n_samples=32))
+    assert np.all(w >= -1e-9)
+    np.testing.assert_allclose(w.sum(), 1.0, atol=1e-5)
