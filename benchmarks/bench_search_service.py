@@ -1,0 +1,102 @@
+"""Multi-tenant SearchService vs looped single-tenant run_search.
+
+The ROADMAP's serving scenario: N users each run a Karasu search against
+one shared repository. The baseline loops ``run_search`` per tenant
+(each search refits every target and support GP in Python loops); the
+service batches all tenants' target fits into one vmapped Cholesky per
+step and shares one incremental support-model store.
+
+Emits (CSV, benchmarks/run.py format):
+  search_service_loop     — looped baseline, us per tenant-iteration
+  search_service_batched  — SearchService,   us per tenant-iteration
+  search_service_speedup  — derived = loop_wall / service_wall
+                            (acceptance: >= 2.0 at 8 tenants on CPU)
+
+Scale: REPRO_BENCH_SCALE=ci (8 tenants x 10 iters) | full (16 x 20).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (BOConfig, Constraint, Objective, Repository,
+                        run_search)
+from repro.serve.search_service import SearchRequest, SearchService
+
+from . import common as C
+
+N_TENANTS = {"ci": 8, "mid": 8, "full": 16}
+MAX_ITERS = {"ci": 10, "mid": 12, "full": 20}
+
+
+def _setup(n_tenants: int):
+    emu = C.emulator()
+    sp = C.space()
+    wids = emu.workload_ids()
+    tenants = [wids[i % len(wids)] for i in range(n_tenants)]
+    # shared repository: uniformly profiled collaborator runs of the
+    # tenants' workloads (case-D-like, 12 runs each)
+    repo = C.random_profiled_repo(sorted(set(tenants)), 12, seed=7)
+    targets = {w: emu.runtime_target(w, 50) for w in set(tenants)}
+    return sp, tenants, repo, targets
+
+
+def _fresh_repo(repo: Repository) -> Repository:
+    # both paths mutate nothing, but rebuild anyway so neither inherits
+    # the other's version counters
+    out = Repository()
+    for z, rs in repo.all_runs().items():
+        out.add_runs(rs)
+    return out
+
+
+def _loop(sp, tenants, repo, targets, max_iters: int) -> float:
+    t0 = time.time()
+    for t, wid in enumerate(tenants):
+        run_search(sp, C.profile_fn(wid, t), Objective("cost"),
+                   [Constraint("runtime", targets[wid])], method="karasu",
+                   repository=repo,
+                   bo_config=BOConfig(max_iters=max_iters), seed=t)
+    return time.time() - t0
+
+
+def _service(sp, tenants, repo, targets, max_iters: int) -> float:
+    t0 = time.time()
+    svc = SearchService(repo, slots=len(tenants))
+    for t, wid in enumerate(tenants):
+        svc.submit(SearchRequest(sp, C.profile_fn(wid, t),
+                                 Objective("cost"),
+                                 [Constraint("runtime", targets[wid])],
+                                 method="karasu",
+                                 bo_config=BOConfig(max_iters=max_iters),
+                                 seed=t))
+    done = svc.run()
+    assert len(done) == len(tenants)
+    return time.time() - t0
+
+
+def main() -> None:
+    scale = C.SCALE
+    n_tenants = N_TENANTS.get(scale, 8)
+    max_iters = MAX_ITERS.get(scale, 10)
+    sp, tenants, repo, targets = _setup(n_tenants)
+    iters_total = n_tenants * max_iters
+
+    # untimed warmup (2 tenants, 5 iters) so both paths measure
+    # steady-state execution rather than first-call jit compilation
+    _loop(sp, tenants[:2], _fresh_repo(repo), targets, 5)
+    _service(sp, tenants[:2], _fresh_repo(repo), targets, 5)
+
+    loop_s = _loop(sp, tenants, _fresh_repo(repo), targets, max_iters)
+    svc_s = _service(sp, tenants, _fresh_repo(repo), targets, max_iters)
+
+    C.emit("search_service_loop", loop_s * 1e6 / iters_total,
+           f"{n_tenants}tenants")
+    C.emit("search_service_batched", svc_s * 1e6 / iters_total,
+           f"{n_tenants}tenants")
+    C.emit("search_service_speedup", 0.0, f"{loop_s / svc_s:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,22 +7,30 @@ Public API:
     fit_gp / build_ensemble       — the GP + RGPE machinery
 """
 from .aggregation import SAR_METRICS, aggregate_metrics
-from .bo import BOConfig, run_search
+from .bo import BOConfig, KarasuContext, run_search
 from .encoding import (SearchSpace, aws_search_space, scout_search_space,
                        tpu_search_space)
-from .gp import GP, fit_gp, gp_posterior, gp_posterior_raw
+from .gp import (GP, BatchedGP, batched_posterior, batched_sample, fit_gp,
+                 fit_gp_batched, gp_posterior, gp_posterior_raw, stack_gps)
 from .moo import pareto_of_result, run_search_moo
-from .repository import Repository
-from .rgpe import Ensemble, build_ensemble, compute_weights, ensemble_posterior
-from .selection import select_similar, select_similar_batched
+from .repository import Repository, SupportModelStore
+from .rgpe import (BatchedEnsemble, Ensemble, build_ensemble,
+                   build_ensemble_batched, compute_weights,
+                   compute_weights_batched, ensemble_posterior,
+                   ensemble_posterior_batched)
+from .selection import CandidateIndex, select_similar, select_similar_batched
 from .types import BOResult, Constraint, Objective, Observation, RunRecord
 
 __all__ = [
-    "SAR_METRICS", "aggregate_metrics", "BOConfig", "run_search",
-    "SearchSpace", "aws_search_space", "scout_search_space",
-    "tpu_search_space", "GP", "fit_gp", "gp_posterior", "gp_posterior_raw",
-    "pareto_of_result", "run_search_moo", "Repository", "Ensemble",
-    "build_ensemble", "compute_weights", "ensemble_posterior",
-    "select_similar", "select_similar_batched", "BOResult", "Constraint",
-    "Objective", "Observation", "RunRecord",
+    "SAR_METRICS", "aggregate_metrics", "BOConfig", "KarasuContext",
+    "run_search", "SearchSpace", "aws_search_space", "scout_search_space",
+    "tpu_search_space", "GP", "BatchedGP", "batched_posterior",
+    "batched_sample", "fit_gp", "fit_gp_batched", "gp_posterior",
+    "gp_posterior_raw", "stack_gps", "pareto_of_result", "run_search_moo",
+    "Repository", "SupportModelStore", "BatchedEnsemble", "Ensemble",
+    "build_ensemble", "build_ensemble_batched", "compute_weights",
+    "compute_weights_batched", "ensemble_posterior",
+    "ensemble_posterior_batched", "CandidateIndex", "select_similar",
+    "select_similar_batched", "BOResult", "Constraint", "Objective",
+    "Observation", "RunRecord",
 ]

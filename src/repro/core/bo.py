@@ -24,10 +24,11 @@ from .acquisition import (constrained_ei, expected_improvement,
                           probability_of_feasibility)
 from .encoding import SearchSpace
 from .extra_trees import fit_extra_trees
-from .gp import GP, fit_gp, gp_posterior
-from .repository import Repository
-from .rgpe import build_ensemble, ensemble_posterior, target_best
-from .selection import select_similar_batched
+from .gp import batched_posterior, fit_gp_batched, gp_posterior
+from .repository import Repository, SupportModelStore
+from .rgpe import (BatchedEnsemble, compute_weights_batched,
+                   ensemble_posterior_batched)
+from .selection import CandidateIndex
 from .types import BOResult, Constraint, Objective, Observation, RunRecord
 
 ProfileFn = Callable[[Mapping], Tuple[Dict[str, float], np.ndarray]]
@@ -65,57 +66,102 @@ def _best_index_so_far(observations, objective, constraints) -> int:
     return best_i
 
 
-class _SupportModelCache:
-    """GP per (workload, measure) fit on repository runs; reused across
-    iterations."""
-
-    def __init__(self, space: SearchSpace, noise: float):
-        self.space = space
-        self.noise = noise
-        self._cache: Dict[Tuple[str, str], Optional[GP]] = {}
-
-    def get(self, repo: Repository, z: str, measure: str) -> Optional[GP]:
-        k = (z, measure)
-        if k not in self._cache:
-            runs = repo.runs(z)
-            xs, ys = [], []
-            for r in runs:
-                if measure in r.measures:
-                    xs.append(self.space.encode(r.config))
-                    ys.append(r.measures[measure])
-            if len(ys) >= 3 and np.ptp(ys) > 0:
-                self._cache[k] = fit_gp(np.stack(xs), np.array(ys),
-                                        noise=self.noise)
-            else:
-                self._cache[k] = None
-        return self._cache[k]
+def _profile_into(space, xq_all, profile_fn, objective, constraints,
+                  observations, best_idx, profiled, ci: int) -> Observation:
+    """Execute one profiling run and record it — the bookkeeping shared
+    verbatim by run_search and SearchService sessions."""
+    config = space.configs[ci]
+    measures_out, metrics = profile_fn(config)
+    obs = Observation(config=config, x=xq_all[ci], measures=measures_out,
+                      metrics=metrics)
+    observations.append(obs)
+    profiled.add(ci)
+    best_idx.append(_best_index_so_far(observations, objective, constraints))
+    return obs
 
 
-def _model_posteriors_karasu(observations, space, repo, measures, cfg,
-                             cache, key, xq):
-    """RGPE ensemble posterior per measure + target scalers."""
-    target_runs = [RunRecord("__target__", o.config, o.metrics,
-                             o.measures) for o in observations
-                   if o.metrics is not None]
-    selected = select_similar_batched(
-        target_runs, repo.all_runs(), cfg.n_support, impl=cfg.kernel_impl)
+def _acquisition(post, observations, objective, constraints):
+    """Constrained EI over whatever grid ``post`` was evaluated on.
+    Shared by run_search and SearchService so the acquisition and its
+    incumbent handling cannot diverge. Returns (acq, best_raw, obj_post)."""
+    obj_post = post[objective.name]
+    best_raw = _best_feasible_value(observations, objective, constraints)
+    if best_raw is None:
+        best_raw = min(o.measures[objective.name] for o in observations)
+    best_std = (best_raw - obj_post["y_mean"]) / obj_post["y_std"]
+    cons_posts = []
+    for c in constraints:
+        cp = post[c.name]
+        ub_std = (c.upper_bound - cp["y_mean"]) / cp["y_std"]
+        cons_posts.append((cp["mu"], cp["var"], ub_std))
+    acq = np.asarray(constrained_ei(obj_post["mu"], obj_post["var"],
+                                    best_std, cons_posts))
+    return acq, best_raw, obj_post
+
+
+def _should_stop_early(cfg, n_obs: int, acq, obj_post, best_raw) -> bool:
+    """CherryPick stopping rule: max EI <= 10% of the incumbent, after at
+    least min_iters profiling runs."""
+    if not cfg.early_stop or n_obs < cfg.min_iters:
+        return False
+    ei_raw = float(np.max(acq)) * float(obj_post["y_std"])
+    return ei_raw <= cfg.ei_threshold * abs(best_raw)
+
+
+class KarasuContext:
+    """Per-search (or per-service, shared across tenants) Karasu state:
+    the incremental support-model store plus a repository-version-keyed
+    Algorithm-1 candidate index. Everything in here is derived purely
+    from repository contents, so N concurrent searches against the same
+    repository can (and should) share one context."""
+
+    def __init__(self, repository: Repository, space: SearchSpace, *,
+                 noise: float = 0.1,
+                 store: Optional[SupportModelStore] = None):
+        self.repo = repository
+        self.store = store or SupportModelStore(repository, space,
+                                                noise=noise)
+        self._index: Optional[CandidateIndex] = None
+        self._index_version = -1
+
+    def candidate_index(self) -> CandidateIndex:
+        v = self.repo.global_version()
+        if self._index is None or v != self._index_version:
+            self._index = CandidateIndex(self.repo.all_runs())
+            self._index_version = v
+        return self._index
+
+
+def _target_runs(observations) -> List[RunRecord]:
+    return [RunRecord("__target__", o.config, o.metrics, o.measures)
+            for o in observations if o.metrics is not None]
+
+
+def _model_posteriors_karasu(observations, measures, cfg,
+                             ctx: KarasuContext, key, xq):
+    """RGPE ensemble posterior per measure + target scalers.
+
+    All target GPs (one per measure) are fit in ONE vmapped batch; the
+    support models come stacked from the shared store, so each measure's
+    ensemble costs one batched posterior + one ranking-loss call."""
+    selected = ctx.candidate_index().query(
+        _target_runs(observations), cfg.n_support, impl=cfg.kernel_impl)
 
     out = {}
     x = np.stack([o.x for o in observations])
+    ys = [np.array([o.measures[m] for o in observations])
+          for m in measures]
+    tgts = fit_gp_batched([x] * len(measures), ys, noise=cfg.noise)
     for mi, m in enumerate(measures):
-        y = np.array([o.measures[m] for o in observations])
-        tgt = fit_gp(x, y, noise=cfg.noise)
-        bases = []
-        for z, _score in selected:
-            gp = cache.get(repo, z, m)
-            if gp is not None:
-                bases.append(gp)
-        if bases:
-            ens = build_ensemble(bases, tgt, jax.random.fold_in(key, mi),
-                                 n_samples=cfg.rgpe_samples,
-                                 impl=cfg.kernel_impl)
-            mu, var = ensemble_posterior(ens, xq)
-            w = np.asarray(ens.weights)
+        tgt = tgts.extract(mi)
+        bases, _ids = ctx.store.get_stacked([z for z, _ in selected], m)
+        if bases is not None:
+            w = compute_weights_batched(
+                bases, tgt, jax.random.fold_in(key, mi),
+                n_samples=cfg.rgpe_samples, impl=cfg.kernel_impl)
+            mu, var = ensemble_posterior_batched(
+                BatchedEnsemble(bases, tgt, w), xq)
+            w = np.asarray(w)
         else:
             mu, var = gp_posterior(tgt, xq)
             w = np.array([1.0])
@@ -125,15 +171,16 @@ def _model_posteriors_karasu(observations, space, repo, measures, cfg,
 
 
 def _model_posteriors_naive(observations, measures, cfg, xq):
-    out = {}
+    """All measures' GPs share the observed x, so they fit and query as
+    one BatchedGP — a single vmapped Cholesky instead of a measure loop."""
     x = np.stack([o.x for o in observations])
-    for m in measures:
-        y = np.array([o.measures[m] for o in observations])
-        gp = fit_gp(x, y, noise=cfg.noise)
-        mu, var = gp_posterior(gp, xq)
-        out[m] = {"mu": mu, "var": var, "y_mean": gp.y_mean,
-                  "y_std": gp.y_std}
-    return out
+    ys = [np.array([o.measures[m] for o in observations])
+          for m in measures]
+    b = fit_gp_batched([x] * len(measures), ys, noise=cfg.noise)
+    mu, var = batched_posterior(b, xq)
+    return {m: {"mu": mu[i], "var": var[i], "y_mean": b.y_mean[i],
+                "y_std": b.y_std[i]}
+            for i, m in enumerate(measures)}
 
 
 def _model_posteriors_augmented(observations, measures, cfg, xq, seed):
@@ -173,7 +220,8 @@ def run_search(
     rng = np.random.default_rng(seed)
     measures = [objective.name] + [c.name for c in constraints]
     xq_all = space.all_encoded()
-    cache = _SupportModelCache(space, cfg.noise)
+    ctx = (KarasuContext(repository, space, noise=cfg.noise)
+           if method == "karasu" and repository is not None else None)
 
     observations: List[Observation] = []
     best_idx: List[int] = []
@@ -182,14 +230,8 @@ def run_search(
     meta: Dict = {"method": method, "selected": []}
 
     def profile(ci: int):
-        config = space.configs[ci]
-        measures_out, metrics = profile_fn(config)
-        observations.append(Observation(
-            config=config, x=xq_all[ci], measures=measures_out,
-            metrics=metrics))
-        profiled.add(ci)
-        best_idx.append(_best_index_so_far(observations, objective,
-                                           constraints))
+        _profile_into(space, xq_all, profile_fn, objective, constraints,
+                      observations, best_idx, profiled, ci)
 
     # --- random initialisation (3 samples, paper §IV-B) -------------------
     init = rng.choice(len(space), size=min(cfg.n_init, len(space)),
@@ -206,7 +248,7 @@ def run_search(
 
         if method == "karasu" and repository is not None:
             post, selected = _model_posteriors_karasu(
-                observations, space, repository, measures, cfg, cache,
+                observations, measures, cfg, ctx,
                 jax.random.fold_in(key, it), xq)
             meta["selected"].append([z for z, _ in selected])
         elif method == "augmented":
@@ -216,26 +258,12 @@ def run_search(
             post = _model_posteriors_naive(observations, measures, cfg, xq)
 
         # objective EI on the model's standardised scale
-        obj_post = post[objective.name]
-        best_raw = _best_feasible_value(observations, objective, constraints)
-        if best_raw is None:
-            best_raw = min(o.measures[objective.name] for o in observations)
-        best_std = (best_raw - obj_post["y_mean"]) / obj_post["y_std"]
-        cons_posts = []
-        for c in constraints:
-            cp = post[c.name]
-            ub_std = (c.upper_bound - cp["y_mean"]) / cp["y_std"]
-            cons_posts.append((cp["mu"], cp["var"], ub_std))
-        acq = constrained_ei(obj_post["mu"], obj_post["var"], best_std,
-                             cons_posts)
-        acq = np.asarray(acq)
-
-        # CherryPick stopping rule: max EI <= 10% of incumbent
-        if cfg.early_stop and len(observations) >= cfg.min_iters:
-            ei_raw = float(np.max(acq)) * float(obj_post["y_std"])
-            if ei_raw <= cfg.ei_threshold * abs(best_raw):
-                stopped_at = it
-                break
+        acq, best_raw, obj_post = _acquisition(post, observations,
+                                               objective, constraints)
+        if _should_stop_early(cfg, len(observations), acq, obj_post,
+                              best_raw):
+            stopped_at = it
+            break
 
         profile(remaining[int(np.argmax(acq))])
 

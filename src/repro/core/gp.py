@@ -14,12 +14,23 @@ by Adam on the exact negative log marginal likelihood.
 Hot spot at repository scale: the kernel matrix. ``repro.kernels.matern``
 provides the Pallas-tiled pairwise Matern-5/2 kernel; this module calls
 through ``matern52`` which dispatches on size/impl.
+
+Two representations live here:
+
+  - ``GP``        — one model, exact shapes. The reference implementation.
+  - ``BatchedGP`` — m models stacked into padded ``(m, n_max, d)`` arrays
+    with a validity mask, fit and queried through ``vmap`` so that all
+    measures of one search, all support models of one ensemble, and all
+    tenants of a ``SearchService`` round share a single batched Cholesky
+    instead of a Python loop. Padding is exact: padded rows/columns are
+    masked out of the kernel and carry unit diagonal entries, so the
+    valid block of every factorisation equals the unbatched one.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -70,17 +81,11 @@ def _nlml(params: GPParams, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
             + 0.5 * n * jnp.log(2.0 * jnp.pi))
 
 
-@partial(jax.jit, static_argnames=("steps", "noise"))
-def _fit(x, y, key, steps: int = 120, noise: float = 0.1,
-         lr: float = 0.05):
-    d = x.shape[1]
+def _adam_nlml(loss, d: int, steps: int, lr: float):
+    """Shared Adam-on-NLML driver for both the single and batched fits —
+    identical update rule so batched fits reproduce unbatched ones."""
     p0 = {"ls": jnp.zeros((d,)), "sf": jnp.zeros(())}
-
-    def loss(p):
-        return _nlml(GPParams(p["ls"], p["sf"], noise), x, y)
-
     grad = jax.grad(loss)
-    # Adam
     mu0 = jax.tree.map(jnp.zeros_like, p0)
     nu0 = jax.tree.map(jnp.zeros_like, p0)
 
@@ -101,6 +106,17 @@ def _fit(x, y, key, steps: int = 120, noise: float = 0.1,
 
     (p, _, _), _ = jax.lax.scan(body, (p0, mu0, nu0), jnp.arange(steps))
     return p
+
+
+@partial(jax.jit, static_argnames=("steps", "noise"))
+def _fit(x, y, key, steps: int = 120, noise: float = 0.1,
+         lr: float = 0.05):
+    d = x.shape[1]
+
+    def loss(p):
+        return _nlml(GPParams(p["ls"], p["sf"], noise), x, y)
+
+    return _adam_nlml(loss, d, steps, lr)
 
 
 def fit_gp(x: np.ndarray, y: np.ndarray, *, noise: float = 0.1,
@@ -158,3 +174,213 @@ def gp_loo_samples(gp: GP, key: jax.Array, n_samples: int) -> jnp.ndarray:
     var_loo = jnp.maximum(1.0 / kinv_diag, 1e-10)
     eps = jax.random.normal(key, (n_samples, n))
     return mu_loo[None] + eps * jnp.sqrt(var_loo)[None]
+
+
+# ---------------------------------------------------------------------------
+# BatchedGP: m models in padded (m, n_max, d) arrays, vmapped throughout
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchedGP:
+    """m stacked GPs. Padded entries are masked out of every kernel and
+    carry a unit diagonal, so each model's valid block matches its
+    unbatched counterpart exactly."""
+    x: jnp.ndarray                 # (m, n_max, d), zero-padded
+    y: jnp.ndarray                 # (m, n_max) standardised, zero-padded
+    mask: jnp.ndarray              # (m, n_max) 1.0 valid / 0.0 pad
+    y_mean: jnp.ndarray            # (m,)
+    y_std: jnp.ndarray             # (m,)
+    log_lengthscales: jnp.ndarray  # (m, d)
+    log_signal: jnp.ndarray        # (m,)
+    noise: float
+    chol: jnp.ndarray              # (m, n_max, n_max)
+    alpha: jnp.ndarray             # (m, n_max)
+    counts: jnp.ndarray            # (m,) int32 valid observations
+
+    @property
+    def m(self) -> int:
+        return int(self.x.shape[0])
+
+    @property
+    def n_max(self) -> int:
+        return int(self.x.shape[1])
+
+    def extract(self, i: int) -> GP:
+        """Materialise model i as an unbatched GP (exact un-padding)."""
+        n = int(self.counts[i])
+        params = GPParams(self.log_lengthscales[i], self.log_signal[i],
+                          self.noise)
+        ys = self.y[i, :n]
+        return GP(self.x[i, :n], ys * self.y_std[i] + self.y_mean[i], ys,
+                  self.y_mean[i], self.y_std[i], params,
+                  self.chol[i, :n, :n], self.alpha[i, :n])
+
+
+def _masked_nlml(params: GPParams, x: jnp.ndarray, y: jnp.ndarray,
+                 mask: jnp.ndarray) -> jnp.ndarray:
+    """NLML over the valid block only. Padded rows/cols contribute a
+    parameter-independent constant, so gradients equal the unmasked
+    ``_nlml`` on the valid data."""
+    n_max = x.shape[0]
+    k = _kernel(params, x, x) * (mask[:, None] * mask[None, :])
+    k = k + (params.noise + JITTER) * jnp.eye(n_max) + jnp.diag(1.0 - mask)
+    chol = jnp.linalg.cholesky(k)
+    alpha = jax.scipy.linalg.cho_solve((chol, True), y)
+    n = jnp.sum(mask)
+    return (0.5 * y @ alpha
+            + jnp.sum(jnp.log(jnp.diagonal(chol)) * mask)
+            + 0.5 * n * jnp.log(2.0 * jnp.pi))
+
+
+@partial(jax.jit, static_argnames=("steps", "noise"))
+def _fit_batched(x, y, mask, steps: int = 120, noise: float = 0.1,
+                 lr: float = 0.05):
+    d = x.shape[-1]
+
+    def one(xi, yi, mi):
+        def loss(p):
+            return _masked_nlml(GPParams(p["ls"], p["sf"], noise),
+                                xi, yi, mi)
+        return _adam_nlml(loss, d, steps, lr)
+
+    return jax.vmap(one)(x, y, mask)
+
+
+@partial(jax.jit, static_argnames=("noise",))
+def _batched_chol_alpha(log_ls, log_sf, x, y, mask, noise: float):
+    def one(ls, sf, xi, yi, mi):
+        n_max = xi.shape[0]
+        params = GPParams(ls, sf, noise)
+        k = _kernel(params, xi, xi) * (mi[:, None] * mi[None, :])
+        k = k + (noise + JITTER) * jnp.eye(n_max) + jnp.diag(1.0 - mi)
+        chol = jnp.linalg.cholesky(k)
+        alpha = jax.scipy.linalg.cho_solve((chol, True), yi)
+        return chol, alpha
+
+    return jax.vmap(one)(log_ls, log_sf, x, y, mask)
+
+
+def fit_gp_batched(xs: Sequence[np.ndarray], ys: Sequence[np.ndarray], *,
+                   noise: float = 0.1, steps: int = 120,
+                   n_max: Optional[int] = None) -> BatchedGP:
+    """Fit m GPs in one vmapped Adam/Cholesky pass.
+
+    ``xs[i]``: (n_i, d), ``ys[i]``: (n_i,). All models must share d (and
+    the fixed noise); n_i may differ — shorter models are zero-padded to
+    ``n_max`` (callers may round n_max up to stabilise jit shapes;
+    padding never changes results)."""
+    m = len(xs)
+    if m == 0 or m != len(ys):
+        raise ValueError("fit_gp_batched needs >=1 model and len(xs)==len(ys)")
+    d = int(np.shape(xs[0])[1])
+    ns = [int(np.shape(y)[0]) for y in ys]
+    nm = max(ns) if n_max is None else int(n_max)
+    if nm < max(ns):
+        raise ValueError(f"n_max={nm} < largest model ({max(ns)})")
+
+    x = np.zeros((m, nm, d), np.float32)
+    ysd = np.zeros((m, nm), np.float32)
+    mask = np.zeros((m, nm), np.float32)
+    y_mean = np.zeros((m,), np.float32)
+    y_std = np.zeros((m,), np.float32)
+    for i, (xi, yi) in enumerate(zip(xs, ys)):
+        n = ns[i]
+        # standardise exactly as fit_gp does (same ops, same dtype)
+        yr = jnp.asarray(yi, jnp.float32)
+        mu = jnp.mean(yr)
+        sd = jnp.maximum(jnp.std(yr), 1e-8)
+        x[i, :n] = np.asarray(xi, np.float32)
+        ysd[i, :n] = np.asarray((yr - mu) / sd)
+        mask[i, :n] = 1.0
+        y_mean[i] = float(mu)
+        y_std[i] = float(sd)
+
+    xj = jnp.asarray(x)
+    yj = jnp.asarray(ysd)
+    mj = jnp.asarray(mask)
+    p = _fit_batched(xj, yj, mj, steps=steps, noise=noise)
+    chol, alpha = _batched_chol_alpha(p["ls"], p["sf"], xj, yj, mj, noise)
+    return BatchedGP(xj, yj, mj, jnp.asarray(y_mean), jnp.asarray(y_std),
+                     p["ls"], p["sf"], noise, chol, alpha,
+                     jnp.asarray(ns, jnp.int32))
+
+
+def stack_gps(gps: Sequence[GP], n_max: Optional[int] = None) -> BatchedGP:
+    """Stack already-fitted GPs into a BatchedGP without refitting — the
+    padded Cholesky is assembled block-diagonally from each model's own
+    factor, so posteriors are bit-identical to the unbatched ones."""
+    if not gps:
+        raise ValueError("stack_gps needs >=1 model")
+    d = int(gps[0].x.shape[1])
+    noise = float(gps[0].params.noise)
+    ns = [g.n for g in gps]
+    nm = max(ns) if n_max is None else int(n_max)
+    m = len(gps)
+
+    x = np.zeros((m, nm, d), np.float32)
+    y = np.zeros((m, nm), np.float32)
+    mask = np.zeros((m, nm), np.float32)
+    chol = np.zeros((m, nm, nm), np.float32)
+    alpha = np.zeros((m, nm), np.float32)
+    ls = np.zeros((m, d), np.float32)
+    sf = np.zeros((m,), np.float32)
+    y_mean = np.zeros((m,), np.float32)
+    y_std = np.zeros((m,), np.float32)
+    pad_diag = float(np.sqrt(1.0 + noise + JITTER))
+    for i, g in enumerate(gps):
+        n = ns[i]
+        x[i, :n] = np.asarray(g.x)
+        y[i, :n] = np.asarray(g.y)
+        mask[i, :n] = 1.0
+        chol[i, :n, :n] = np.asarray(g.chol)
+        for j in range(n, nm):
+            chol[i, j, j] = pad_diag
+        alpha[i, :n] = np.asarray(g.alpha)
+        ls[i] = np.asarray(g.params.log_lengthscales)
+        sf[i] = np.asarray(g.params.log_signal)
+        y_mean[i] = float(g.y_mean)
+        y_std[i] = float(g.y_std)
+    return BatchedGP(jnp.asarray(x), jnp.asarray(y), jnp.asarray(mask),
+                     jnp.asarray(y_mean), jnp.asarray(y_std),
+                     jnp.asarray(ls), jnp.asarray(sf), noise,
+                     jnp.asarray(chol), jnp.asarray(alpha),
+                     jnp.asarray(ns, jnp.int32))
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def _batched_posterior(log_ls, log_sf, x, mask, chol, alpha, xq,
+                       impl: str = "xla"):
+    def one(ls, sf, xi, mi, ci, ai, xqi):
+        params = GPParams(ls, sf, 0.0)
+        ks = _kernel(params, xqi, xi, impl=impl) * mi[None, :]  # (q, n_max)
+        mu = ks @ ai
+        v = jax.scipy.linalg.solve_triangular(ci, ks.T, lower=True)
+        var = jnp.maximum(jnp.exp(sf) - jnp.sum(v * v, axis=0), 1e-10)
+        return mu, var
+
+    return jax.vmap(one)(log_ls, log_sf, x, mask, chol, alpha, xq)
+
+
+def batched_posterior(bgp: BatchedGP, xq: jnp.ndarray, *, impl: str = "xla"
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Posterior mean/variance of every model, standardised scale.
+
+    xq: (q, d) shared across models, or (m, q, d) per-model. Returns
+    ((m, q), (m, q)). One vmapped triangular solve instead of m calls;
+    ``impl`` dispatches the pairwise Matern to Pallas where it wins."""
+    xq = jnp.asarray(xq, jnp.float32)
+    if xq.ndim == 2:
+        xq = jnp.broadcast_to(xq[None], (bgp.m,) + xq.shape)
+    return _batched_posterior(bgp.log_lengthscales, bgp.log_signal, bgp.x,
+                              bgp.mask, bgp.chol, bgp.alpha, xq, impl=impl)
+
+
+def batched_sample(bgp: BatchedGP, xq: jnp.ndarray, keys: jax.Array,
+                   n_samples: int, *, impl: str = "xla") -> jnp.ndarray:
+    """(m, n_samples, q) marginal-posterior draws; ``keys`` is one PRNG
+    key per model (so draws match per-model ``gp_sample`` exactly)."""
+    mu, var = batched_posterior(bgp, xq, impl=impl)
+    q = mu.shape[1]
+    eps = jax.vmap(lambda k: jax.random.normal(k, (n_samples, q)))(keys)
+    return mu[:, None, :] + eps * jnp.sqrt(var)[:, None, :]

@@ -17,8 +17,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from .acquisition import mc_ehvi, pareto_front, probability_of_feasibility
-from .bo import (BOConfig, ProfileFn, _model_posteriors_karasu,
-                 _model_posteriors_naive, _SupportModelCache, _feasible)
+from .bo import (BOConfig, KarasuContext, ProfileFn,
+                 _model_posteriors_karasu, _model_posteriors_naive,
+                 _feasible)
 from .encoding import SearchSpace
 from .repository import Repository
 from .types import BOResult, Constraint, Objective, Observation
@@ -42,7 +43,8 @@ def run_search_moo(
     rng = np.random.default_rng(seed)
     measures = [o.name for o in objectives] + [c.name for c in constraints]
     xq_all = space.all_encoded()
-    cache = _SupportModelCache(space, cfg.noise)
+    ctx = (KarasuContext(repository, space, noise=cfg.noise)
+           if method == "karasu" and repository is not None else None)
 
     observations: List[Observation] = []
     profiled: set = set()
@@ -70,7 +72,7 @@ def run_search_moo(
 
         if method == "karasu" and repository is not None:
             post, _sel = _model_posteriors_karasu(
-                observations, space, repository, measures, cfg, cache,
+                observations, measures, cfg, ctx,
                 jax.random.fold_in(key, it), xq)
         else:
             post = _model_posteriors_naive(observations, measures, cfg, xq)

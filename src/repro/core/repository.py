@@ -5,6 +5,13 @@ data-availability filters (Cases A-D) through arbitrary predicates over
 *private* workload tags kept OUTSIDE the shared record (the emulation
 layer knows each workload's framework/algorithm/dataset; the repository
 payload itself never contains them).
+
+Every workload carries a monotonically increasing *version* bumped on
+``add_run``; the ``SupportModelStore`` keys its per-(workload, measure)
+support GPs on that version, so one shared store serves many concurrent
+searches and refits a model only when that workload actually received
+new data — instead of every search rebuilding every support model from
+scratch.
 """
 from __future__ import annotations
 
@@ -12,7 +19,8 @@ import dataclasses
 import json
 import os
 from collections import defaultdict
-from typing import Callable, Dict, Iterable, List, Mapping, Optional, Sequence
+from typing import (Callable, Dict, Iterable, List, Mapping, Optional,
+                    Sequence, Tuple)
 
 import numpy as np
 
@@ -22,10 +30,12 @@ from .types import RunRecord
 class Repository:
     def __init__(self) -> None:
         self._runs: Dict[str, List[RunRecord]] = defaultdict(list)
+        self._versions: Dict[str, int] = defaultdict(int)
 
     # -- sharing API -------------------------------------------------------
     def add_run(self, run: RunRecord) -> None:
         self._runs[run.workload_id].append(run)
+        self._versions[run.workload_id] += 1
 
     def add_runs(self, runs: Iterable[RunRecord]) -> None:
         for r in runs:
@@ -39,6 +49,14 @@ class Repository:
 
     def all_runs(self) -> Dict[str, List[RunRecord]]:
         return {z: list(rs) for z, rs in self._runs.items()}
+
+    def version(self, workload_id: str) -> int:
+        """Data version of one workload (0 if absent, bumped by add_run)."""
+        return self._versions.get(workload_id, 0)
+
+    def global_version(self) -> int:
+        """Sum of all workload versions — changes iff any run was added."""
+        return sum(self._versions.values())
 
     def __len__(self) -> int:
         return sum(len(rs) for rs in self._runs.values())
@@ -86,3 +104,79 @@ class Repository:
                 metrics=np.asarray(item["metrics"]),
                 measures=item["measures"]))
         return repo
+
+
+# ---------------------------------------------------------------------------
+# Incremental support-model store
+# ---------------------------------------------------------------------------
+
+
+class SupportModelStore:
+    """Version-keyed cache of support GPs, one per (workload, measure).
+
+    Shared across every search hitting the same repository (the
+    ``SearchService`` holds one per search space): a support model is
+    (re)fit only when its workload's repository version moved since the
+    cached fit, i.e. ``add_run`` invalidates exactly the workloads it
+    touched. Workloads with fewer than ``min_runs`` usable observations
+    (or zero spread in the measure) cache ``None``.
+    """
+
+    def __init__(self, repository: Repository, space, *,
+                 noise: float = 0.1, min_runs: int = 3):
+        self._repo = repository
+        self._space = space
+        self._noise = noise
+        self._min_runs = min_runs
+        # (workload, measure) -> (repo version at fit time, GP | None)
+        self._cache: Dict[Tuple[str, str], Tuple[int, Optional[object]]] = {}
+        self.hits = 0
+        self.misses = 0
+
+    @property
+    def repository(self) -> Repository:
+        return self._repo
+
+    def get(self, workload_id: str, measure: str):
+        """Support GP for (workload, measure), refit iff data changed."""
+        from .gp import fit_gp
+        v = self._repo.version(workload_id)
+        k = (workload_id, measure)
+        hit = self._cache.get(k)
+        if hit is not None and hit[0] == v:
+            self.hits += 1
+            return hit[1]
+        self.misses += 1
+        xs, ys = [], []
+        for r in self._repo.runs(workload_id):
+            if measure in r.measures:
+                xs.append(self._space.encode(r.config))
+                ys.append(r.measures[measure])
+        if len(ys) >= self._min_runs and np.ptp(ys) > 0:
+            gp = fit_gp(np.stack(xs), np.array(ys), noise=self._noise)
+        else:
+            gp = None
+        self._cache[k] = (v, gp)
+        return gp
+
+    def get_stacked(self, workload_ids: Sequence[str], measure: str):
+        """BatchedGP over the available support models for ``measure``
+        (skipping unusable workloads); returns (BatchedGP | None, ids)."""
+        from .gp import stack_gps
+        gps, ids = [], []
+        for z in workload_ids:
+            gp = self.get(z, measure)
+            if gp is not None:
+                gps.append(gp)
+                ids.append(z)
+        if not gps:
+            return None, []
+        return stack_gps(gps), ids
+
+    def invalidate(self, workload_id: Optional[str] = None) -> None:
+        """Drop cached fits (one workload, or everything)."""
+        if workload_id is None:
+            self._cache.clear()
+        else:
+            for k in [k for k in self._cache if k[0] == workload_id]:
+                del self._cache[k]

@@ -19,6 +19,14 @@ The ensemble posterior is the a-weighted mixture:
 
 The O(S * n^2) pairwise loss over MC samples is the compute hot spot at
 scale; ``repro.kernels.ranking_loss`` provides the Pallas-tiled version.
+
+Two paths share the same weighting math: the sequential reference
+(``compute_weights`` over a list of GPs) and the batched path
+(``compute_weights_batched`` over one ``BatchedGP``), which draws every
+base model's samples from a single vmapped posterior and scores all
+(m+1) x S samples with ONE ranking-loss kernel call. Both paths split
+the PRNG key identically, so they produce the same weights up to float
+roundoff.
 """
 from __future__ import annotations
 
@@ -30,7 +38,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.ranking_loss import ranking_loss
-from .gp import GP, gp_loo_samples, gp_posterior, gp_sample
+from .gp import (GP, BatchedGP, batched_posterior, batched_sample,
+                 gp_loo_samples, gp_posterior, gp_sample)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,7 +79,12 @@ def compute_weights(
     s_tar = gp_loo_samples(target, keys[-1], n_samples)
     losses.append(ranking_loss(s_tar, y_tar, impl=impl))
     loss_mat = jnp.stack(losses)                          # (m+1, S)
+    return _weights_from_losses(loss_mat, dilution_percentile)
 
+
+def _weights_from_losses(loss_mat: jnp.ndarray,
+                         dilution_percentile: float) -> jnp.ndarray:
+    """(m+1, S) ranking losses (target last) -> simplex weights."""
     # weight-dilution prevention (Feurer et al. §4.2)
     tar_pct = jnp.percentile(loss_mat[-1], dilution_percentile)
     medians = jnp.median(loss_mat, axis=1)
@@ -83,6 +97,35 @@ def compute_weights(
     is_min = (loss_mat == mins).astype(jnp.float32)
     w = jnp.mean(is_min / jnp.sum(is_min, axis=0, keepdims=True), axis=1)
     return w / jnp.sum(w)
+
+
+def compute_weights_batched(
+    bases: BatchedGP,
+    target: GP,
+    key: jax.Array,
+    *,
+    n_samples: int = 256,
+    dilution_percentile: float = 95.0,
+    impl: str = "xla",
+) -> jnp.ndarray:
+    """Batched twin of ``compute_weights``: one vmapped posterior for all
+    base models and one ranking-loss call over the stacked (m+1) x S
+    samples. Splits the key exactly like the sequential path, so both
+    return the same weights (modulo float roundoff)."""
+    x_tar, y_tar = target.x, target.y
+    n = int(y_tar.shape[0])
+    m = bases.m
+    if n < 2:
+        return jnp.full((m + 1,), 1.0 / (m + 1))
+
+    keys = jax.random.split(key, m + 1)
+    s_base = batched_sample(bases, x_tar, keys[:m], n_samples,
+                            impl=impl)                       # (m, S, n)
+    s_tar = gp_loo_samples(target, keys[-1], n_samples)      # (S, n)
+    stacked = jnp.concatenate([s_base.reshape(m * n_samples, n), s_tar])
+    loss = ranking_loss(stacked, y_tar, impl=impl)           # ((m+1)*S,)
+    loss_mat = loss.reshape(m + 1, n_samples)
+    return _weights_from_losses(loss_mat, dilution_percentile)
 
 
 def build_ensemble(base_models: Sequence[GP], target: GP, key: jax.Array,
@@ -108,8 +151,41 @@ def ensemble_posterior(ens: Ensemble, xq: jnp.ndarray
     return mu, jnp.maximum(var, 1e-10)
 
 
-def target_best(ens: Ensemble) -> jnp.ndarray:
-    """Best (min) observed target value on the ensemble's output scale.
+@dataclasses.dataclass(frozen=True)
+class BatchedEnsemble:
+    """RGPE ensemble whose base models live in one BatchedGP stack; the
+    target keeps its exact (unpadded) representation for LOO sampling."""
+    bases: BatchedGP
+    target: GP
+    weights: jnp.ndarray           # (m + 1,), target last, on the simplex
+
+
+def build_ensemble_batched(bases: BatchedGP, target: GP, key: jax.Array,
+                           *, n_samples: int = 256, impl: str = "xla"
+                           ) -> BatchedEnsemble:
+    w = compute_weights_batched(bases, target, key, n_samples=n_samples,
+                                impl=impl)
+    return BatchedEnsemble(bases, target, w)
+
+
+def ensemble_posterior_batched(ens: BatchedEnsemble, xq: jnp.ndarray, *,
+                               impl: str = "xla"
+                               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Weighted mixture posterior from one batched base query + the
+    target query (standardised scale); matches ``ensemble_posterior``."""
+    mu_b, var_b = batched_posterior(ens.bases, xq, impl=impl)   # (m, q)
+    mu_t, var_t = gp_posterior(ens.target, xq, impl=impl)
+    mus = jnp.concatenate([mu_b, mu_t[None]])
+    vars_ = jnp.concatenate([var_b, var_t[None]])
+    w = ens.weights[:, None]
+    mu = jnp.sum(w * mus, axis=0)
+    var = jnp.sum((w ** 2) * vars_, axis=0)
+    return mu, jnp.maximum(var, 1e-10)
+
+
+def target_best(ens) -> jnp.ndarray:
+    """Best (min) observed target value on the ensemble's output scale;
+    works for both Ensemble and BatchedEnsemble (anything with .target).
 
     The ensemble mean at observed data is dominated by the target model's
     standardised y, so the incumbent for EI is the target's standardised

@@ -63,6 +63,72 @@ def select_similar(
     return results[:k]
 
 
+class CandidateIndex:
+    """Precomputed candidate-side arrays for repeated Algorithm-1 queries.
+
+    Stacking every candidate run's metric vector / machine type / node
+    count is O(repository) work; a multi-tenant ``SearchService`` runs
+    Algorithm 1 once per tenant per iteration against the *same*
+    repository snapshot, so the index is built once (and rebuilt only
+    when the repository version moves) and each query pays only the
+    pairwise-Pearson kernel plus a vectorised segment reduction."""
+
+    def __init__(self, candidates: Dict[str, Sequence[RunRecord]]):
+        cand_ids: List[str] = []
+        cand_runs: List[RunRecord] = []
+        for z_j, runs_j in candidates.items():
+            for r in runs_j:
+                if r.metrics is None:    # unusable without agg(l)
+                    continue
+                cand_ids.append(z_j)
+                cand_runs.append(r)
+        self.workload_ids: List[str] = list(candidates.keys())
+        self.empty = not cand_runs
+        if self.empty:
+            return
+        self._zindex = {z: i for i, z in enumerate(self.workload_ids)}
+        self._seg = np.array([self._zindex[z] for z in cand_ids])
+        self._metrics = jnp.asarray(
+            np.stack([r.metric_vector() for r in cand_runs]))
+        self._types = np.array([r.machine_type for r in cand_runs])
+        self._log_nodes = np.log2(
+            np.array([max(r.node_count, 1) for r in cand_runs]))
+
+    def query(self, target_runs: Sequence[RunRecord], k: int, *,
+              impl: str = "xla", default_score: float = 0.5,
+              exclude: Optional[Sequence[str]] = None
+              ) -> List[Tuple[str, float]]:
+        """Top-k candidates; ``exclude`` drops workload ids before the
+        cut (e.g. a tenant's own published runs — which would otherwise
+        score ~1.0 against themselves and defeat the LOO safeguard)."""
+        if self.empty or not target_runs:
+            return []
+        a = np.stack([r.metric_vector() for r in target_runs])
+        corr = np.asarray(pairwise_pearson(jnp.asarray(a), self._metrics,
+                                           impl=impl))
+        sim = (corr + 1.0) / 2.0
+
+        t_types = np.array([r.machine_type for r in target_runs])
+        t_nodes = np.log2(np.array([max(r.node_count, 1)
+                                    for r in target_runs]))
+        w = np.exp2(-np.abs(t_nodes[:, None] - self._log_nodes[None, :]))
+        same = t_types[:, None] == self._types[None, :]
+        w = np.where(same, w, 0.0)
+        sim = np.where(same, sim, default_score)
+
+        nz = len(self.workload_ids)
+        num = np.bincount(self._seg, weights=(w * sim).sum(0), minlength=nz)
+        den = np.bincount(self._seg, weights=w.sum(0), minlength=nz)
+        score = np.where(den > 0, num / np.maximum(den, 1e-300),
+                         default_score)
+        out = list(zip(self.workload_ids, score.tolist()))
+        if exclude:
+            banned = set(exclude)
+            out = [t for t in out if t[0] not in banned]
+        out.sort(key=lambda t: -t[1])
+        return out[:k]
+
+
 def select_similar_batched(
     target_runs: Sequence[RunRecord],
     candidates: Dict[str, Sequence[RunRecord]],
@@ -70,40 +136,15 @@ def select_similar_batched(
     *,
     impl: str = "xla",
     default_score: float = 0.5,
+    index: Optional[CandidateIndex] = None,
 ) -> List[Tuple[str, float]]:
     """Vectorised Algorithm 1: one pairwise-Pearson kernel call between
     the target's runs and ALL candidate runs, then a weighted reduction.
-    Semantics identical to select_similar."""
-    if not target_runs or not candidates:
+    Semantics identical to select_similar. Pass a prebuilt
+    ``CandidateIndex`` to amortise candidate stacking across queries."""
+    if not target_runs or (index is None and not candidates):
         return []
-    cand_ids, cand_runs = [], []
-    for z_j, runs_j in candidates.items():
-        for r in runs_j:
-            cand_ids.append(z_j)
-            cand_runs.append(r)
-    a = np.stack([r.metric_vector() for r in target_runs])
-    b = np.stack([r.metric_vector() for r in cand_runs])
-    corr = np.asarray(pairwise_pearson(jnp.asarray(a), jnp.asarray(b),
-                                       impl=impl))
-    sim = (corr + 1.0) / 2.0
-
-    t_types = [r.machine_type for r in target_runs]
-    c_types = [r.machine_type for r in cand_runs]
-    t_nodes = np.array([max(r.node_count, 1) for r in target_runs])
-    c_nodes = np.array([max(r.node_count, 1) for r in cand_runs])
-    wexp = np.abs(np.log2(t_nodes)[:, None] - np.log2(c_nodes)[None, :])
-    w = 1.0 / np.exp2(wexp)
-    same = np.array([[tt == ct for ct in c_types] for tt in t_types])
-    w = np.where(same, w, 0.0)
-    sim = np.where(same, sim, default_score)
-
-    scores: Dict[str, Tuple[float, float]] = defaultdict(lambda: (0.0, 0.0))
-    for j, z_j in enumerate(cand_ids):
-        num, den = scores[z_j]
-        num += float(np.sum(w[:, j] * sim[:, j]))
-        den += float(np.sum(w[:, j]))
-        scores[z_j] = (num, den)
-    out = [(z, (num / den if den > 0 else default_score))
-           for z, (num, den) in scores.items()]
-    out.sort(key=lambda t: -t[1])
-    return out[:k]
+    if index is None:
+        index = CandidateIndex(candidates)
+    return index.query(target_runs, k, impl=impl,
+                       default_score=default_score)

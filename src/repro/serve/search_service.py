@@ -1,0 +1,298 @@
+"""Multi-tenant configuration-search service.
+
+Karasu's premise (paper §III) is many users sharing one performance-data
+repository, each running their own BO search against it. ``run_search``
+serves exactly one tenant and refits its GPs in Python loops; this
+module serves N tenants concurrently with the continuous-batching idiom
+of ``ServeEngine``: a fixed pool of session slots, ``submit`` queues a
+search, admission plays the role of prefill (the random initial
+profiling runs), and every ``step`` advances ALL active sessions by one
+BO iteration ("decode").
+
+The hot path is batched across tenants: each step stacks every active
+session's target-GP fit jobs — one per (tenant, measure) — into a single
+``BatchedGP`` per (search space, noise) group, so the whole round costs
+one vmapped Adam/Cholesky fit and one batched posterior over the full
+candidate grid instead of ``tenants x measures`` sequential fits.
+Support models come from one ``SupportModelStore`` shared by every
+tenant and invalidated incrementally per (workload, measure) when
+``add_run`` bumps that workload's repository version — results a tenant
+publishes mid-search become another tenant's support data on its very
+next step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.bo import (BOConfig, KarasuContext, ProfileFn,
+                           _acquisition, _model_posteriors_augmented,
+                           _profile_into, _should_stop_early, _target_runs)
+from repro.core.encoding import SearchSpace
+from repro.core.gp import batched_posterior, fit_gp_batched
+from repro.core.repository import Repository, SupportModelStore
+from repro.core.rgpe import compute_weights_batched
+from repro.core.types import (BOResult, Constraint, Objective, Observation,
+                              RunRecord)
+
+
+@dataclasses.dataclass
+class SearchRequest:
+    """One tenant's search: the ``run_search`` arguments as a record."""
+    space: SearchSpace
+    profile_fn: ProfileFn
+    objective: Objective
+    constraints: Sequence[Constraint] = ()
+    method: str = "karasu"            # naive | augmented | karasu
+    bo_config: BOConfig = dataclasses.field(default_factory=BOConfig)
+    seed: int = 0
+    share_as: Optional[str] = None    # publish runs to the repo under this id
+
+
+@dataclasses.dataclass
+class SearchCompletion:
+    rid: int
+    result: BOResult
+
+
+class _Session:
+    """Mutable per-tenant state (mirrors run_search's loop variables)."""
+
+    def __init__(self, rid: int, req: SearchRequest):
+        self.rid = rid
+        self.req = req
+        self.cfg = req.bo_config
+        self.key = jax.random.PRNGKey(req.seed)
+        self.rng = np.random.default_rng(req.seed)
+        self.measures = ([req.objective.name]
+                         + [c.name for c in req.constraints])
+        self.xq_all = req.space.all_encoded()
+        # batching/context key: spaces are interchangeable iff their
+        # configs AND encodings agree — the name alone could conflate
+        # two different user-built spaces that happen to share it
+        self.space_key = (req.space.name, hashlib.sha1(
+            np.ascontiguousarray(self.xq_all).tobytes()
+            + repr(req.space.configs).encode()).hexdigest())
+        self.observations: List[Observation] = []
+        self.best_idx: List[int] = []
+        self.profiled: set = set()
+        self.stopped_at = self.cfg.max_iters
+        self.meta: Dict[str, Any] = {"method": req.method, "selected": []}
+
+    def profile(self, ci: int, repo: Optional[Repository]) -> None:
+        obs = _profile_into(self.req.space, self.xq_all,
+                            self.req.profile_fn, self.req.objective,
+                            self.req.constraints, self.observations,
+                            self.best_idx, self.profiled, ci)
+        # publish only complete records: Algorithm-1 needs the metric
+        # matrix, and a None-metrics record would poison the shared
+        # CandidateIndex for every other tenant
+        if (repo is not None and self.req.share_as is not None
+                and obs.metrics is not None):
+            repo.add_run(RunRecord(self.req.share_as, dict(obs.config),
+                                   obs.metrics, obs.measures))
+
+    def admit(self, repo: Optional[Repository]) -> None:
+        """'Prefill': the random initialisation runs (paper §IV-B)."""
+        n = min(self.cfg.n_init, len(self.req.space))
+        for ci in self.rng.choice(len(self.req.space), size=n,
+                                  replace=False):
+            self.profile(int(ci), repo)
+
+    def remaining(self) -> List[int]:
+        return [i for i in range(len(self.req.space))
+                if i not in self.profiled]
+
+    def result(self) -> BOResult:
+        self.meta["n_profiled"] = len(self.observations)
+        return BOResult(observations=self.observations,
+                        best_index_per_iter=self.best_idx,
+                        stopped_at=self.stopped_at, meta=self.meta)
+
+
+class SearchService:
+    """N concurrent tenant searches over one shared repository.
+
+    ``submit`` -> rid; ``step`` advances every active session one BO
+    iteration (admitting queued sessions into free slots first);
+    ``collect`` drains finished searches; ``run`` loops until idle.
+    """
+
+    def __init__(self, repository: Optional[Repository] = None, *,
+                 slots: int = 8):
+        self.repo = repository if repository is not None else Repository()
+        self.slots = slots
+        self.queue: List[_Session] = []
+        self.active: Dict[int, _Session] = {}
+        self.done: List[SearchCompletion] = []
+        self._next_rid = 0
+        # one KarasuContext (store + candidate index) per (space, noise):
+        # support GPs depend on the encoder and the noise level only
+        self._contexts: Dict[Tuple[Any, float], KarasuContext] = {}
+        self.stats = {"steps": 0, "fit_batches": 0, "fit_jobs": 0,
+                      "iterations": 0}
+
+    # -- request lifecycle --------------------------------------------------
+    def submit(self, req: SearchRequest) -> int:
+        if req.method not in ("naive", "augmented", "karasu"):
+            raise ValueError(f"unknown method {req.method!r}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(_Session(rid, req))
+        return rid
+
+    def collect(self) -> List[SearchCompletion]:
+        out, self.done = self.done, []
+        return out
+
+    def context_for(self, session: _Session) -> KarasuContext:
+        k = (session.space_key, session.cfg.noise)
+        if k not in self._contexts:
+            self._contexts[k] = KarasuContext(self.repo, session.req.space,
+                                              noise=session.cfg.noise)
+        return self._contexts[k]
+
+    def _admit(self) -> None:
+        while self.queue and len(self.active) < self.slots:
+            s = self.queue.pop(0)
+            s.admit(self.repo)
+            self.active[s.rid] = s
+
+    def _finish(self, s: _Session) -> None:
+        del self.active[s.rid]
+        self.done.append(SearchCompletion(s.rid, s.result()))
+
+    # -- one scheduling round -----------------------------------------------
+    def step(self) -> int:
+        """Admit queued sessions, then advance each active session one BO
+        iteration with the target fits batched across tenants. Returns
+        the number of sessions advanced."""
+        self._admit()
+        self.stats["steps"] += 1
+
+        ready: List[Tuple[_Session, List[int]]] = []
+        for s in list(self.active.values()):
+            if len(s.observations) >= s.cfg.max_iters:
+                self._finish(s)
+                continue
+            rem = s.remaining()
+            if not rem:
+                s.stopped_at = len(s.observations)
+                self._finish(s)
+                continue
+            ready.append((s, rem))
+        if not ready:
+            return 0
+
+        posts = self._batched_posteriors([s for s, _ in ready])
+
+        advanced = 0
+        for s, rem in ready:
+            acq, best_raw, obj_post = _acquisition(
+                posts[s.rid], s.observations, s.req.objective,
+                s.req.constraints)
+            acq = acq[np.asarray(rem)]
+
+            if _should_stop_early(s.cfg, len(s.observations), acq,
+                                  obj_post, best_raw):
+                s.stopped_at = len(s.observations)
+                self._finish(s)
+                continue
+
+            s.profile(rem[int(np.argmax(acq))], self.repo)
+            advanced += 1
+            self.stats["iterations"] += 1
+            if len(s.observations) >= s.cfg.max_iters:
+                self._finish(s)
+        return advanced
+
+    def _batched_posteriors(self, sessions: List[_Session]
+                            ) -> Dict[int, Dict[str, Dict]]:
+        """Fit every (session, measure) target GP in one vmapped batch
+        per (space, noise) group and query the full candidate grid; then
+        overlay RGPE mixtures for karasu sessions."""
+        groups: Dict[Tuple[Any, float], List[_Session]] = {}
+        posts: Dict[int, Dict[str, Dict]] = {}
+        for s in sessions:
+            if s.req.method == "augmented":
+                # Extra-Trees have no batched path; keep them per-session
+                posts[s.rid] = _model_posteriors_augmented(
+                    s.observations, s.measures, s.cfg, s.xq_all, s.req.seed)
+                continue
+            groups.setdefault((s.space_key, s.cfg.noise), []).append(s)
+
+        for (_, noise), group in groups.items():
+            xs, ys, owners = [], [], []
+            for s in group:
+                x = np.stack([o.x for o in s.observations])
+                for m in s.measures:
+                    xs.append(x)
+                    ys.append(np.array([o.measures[m]
+                                        for o in s.observations]))
+                    owners.append((s, m))
+            # round the pad length up so jit shapes stay stable while the
+            # whole cohort grows (padding never changes results)
+            n_max = max(len(y) for y in ys)
+            n_max = ((n_max + 7) // 8) * 8
+            tgts = fit_gp_batched(xs, ys, noise=noise, n_max=n_max)
+            self.stats["fit_batches"] += 1
+            self.stats["fit_jobs"] += len(owners)
+
+            xq_all = group[0].xq_all
+            mu_all, var_all = batched_posterior(tgts, xq_all)
+
+            for ji, (s, m) in enumerate(owners):
+                posts.setdefault(s.rid, {})[m] = {
+                    "mu": mu_all[ji], "var": var_all[ji],
+                    "y_mean": tgts.y_mean[ji], "y_std": tgts.y_std[ji]}
+
+            for s in group:
+                if s.req.method == "karasu":
+                    self._overlay_rgpe(s, tgts, owners, posts[s.rid])
+        return posts
+
+    def _overlay_rgpe(self, s: _Session, tgts, owners, post) -> None:
+        """Replace a karasu session's plain target posteriors with the
+        RGPE mixture built from the shared support store."""
+        ctx = self.context_for(s)
+        # a tenant must never pick its own published runs as "support":
+        # they would score ~1.0 against themselves and sidestep the LOO
+        # sampling that keeps the target honest on its training points
+        exclude = (s.req.share_as,) if s.req.share_as else None
+        selected = ctx.candidate_index().query(
+            _target_runs(s.observations), s.cfg.n_support,
+            impl=s.cfg.kernel_impl, exclude=exclude)
+        s.meta["selected"].append([z for z, _ in selected])
+        if not selected:
+            return
+        it = len(s.observations)
+        job_of = {m: ji for ji, (o, m) in enumerate(owners) if o is s}
+        for mi, m in enumerate(s.measures):
+            bases, _ids = ctx.store.get_stacked([z for z, _ in selected], m)
+            if bases is None:
+                continue
+            tgt = tgts.extract(job_of[m])
+            w = compute_weights_batched(
+                bases, tgt, jax.random.fold_in(
+                    jax.random.fold_in(s.key, it), mi),
+                n_samples=s.cfg.rgpe_samples, impl=s.cfg.kernel_impl)
+            mu_b, var_b = batched_posterior(bases, s.xq_all)
+            wb, wt = w[:-1, None], w[-1]
+            mu = (wb * mu_b).sum(0) + wt * post[m]["mu"]
+            var = ((wb ** 2) * var_b).sum(0) + (wt ** 2) * post[m]["var"]
+            post[m] = {"mu": mu, "var": np.maximum(np.asarray(var), 1e-10),
+                       "y_mean": post[m]["y_mean"],
+                       "y_std": post[m]["y_std"],
+                       "weights": np.asarray(w)}
+
+    # -- driver -------------------------------------------------------------
+    def run(self, max_steps: int = 10_000) -> List[SearchCompletion]:
+        steps = 0
+        while (self.queue or self.active) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.collect()

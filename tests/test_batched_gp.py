@@ -1,0 +1,156 @@
+"""BatchedGP / batched RGPE: agreement with the per-model reference path
+(acceptance: <= 1e-4 on the standardised scale) and weight invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (batched_posterior, batched_sample, build_ensemble,
+                        compute_weights, compute_weights_batched,
+                        ensemble_posterior, ensemble_posterior_batched,
+                        fit_gp, fit_gp_batched, gp_posterior, stack_gps)
+from repro.core.rgpe import BatchedEnsemble
+
+TOL = 1e-4
+
+
+def _surface(x):
+    return np.sin(3 * x[:, 0]) + 0.5 * x[:, 1]
+
+
+def _models(seed=0, sizes=(5, 9, 14)):
+    rng = np.random.default_rng(seed)
+    xs = [rng.random((n, 3)) for n in sizes]
+    ys = [np.sin(3 * x[:, 0]) + 0.5 * x[:, 1] - x[:, 2] for x in xs]
+    return xs, ys, rng
+
+
+def test_batched_fit_matches_per_model_posterior():
+    xs, ys, rng = _models()
+    xq = rng.random((25, 3))
+    bgp = fit_gp_batched(xs, ys)
+    mu_b, var_b = batched_posterior(bgp, xq)
+    for i, (x, y) in enumerate(zip(xs, ys)):
+        gp = fit_gp(x, y)
+        mu, var = gp_posterior(gp, xq)
+        np.testing.assert_allclose(np.asarray(mu_b[i]), np.asarray(mu),
+                                   atol=TOL)
+        np.testing.assert_allclose(np.asarray(var_b[i]), np.asarray(var),
+                                   atol=TOL)
+        np.testing.assert_allclose(float(bgp.y_mean[i]), float(gp.y_mean),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(float(bgp.y_std[i]), float(gp.y_std),
+                                   rtol=1e-6)
+
+
+def test_padding_is_exact():
+    """Extra padding must not change results beyond float32 roundoff
+    (different jit shapes reassociate reductions, so not bitwise)."""
+    xs, ys, rng = _models(seed=1)
+    xq = rng.random((10, 3))
+    a = fit_gp_batched(xs, ys)
+    b = fit_gp_batched(xs, ys, n_max=32)
+    mu_a, var_a = batched_posterior(a, xq)
+    mu_b, var_b = batched_posterior(b, xq)
+    np.testing.assert_allclose(np.asarray(mu_a), np.asarray(mu_b), atol=TOL)
+    np.testing.assert_allclose(np.asarray(var_a), np.asarray(var_b),
+                               atol=TOL)
+
+
+def test_stack_gps_is_exact_and_extract_roundtrips():
+    xs, ys, rng = _models(seed=2)
+    gps = [fit_gp(x, y) for x, y in zip(xs, ys)]
+    bgp = stack_gps(gps)
+    xq = rng.random((12, 3))
+    mu_b, var_b = batched_posterior(bgp, xq)
+    for i, gp in enumerate(gps):
+        mu, var = gp_posterior(gp, xq)
+        np.testing.assert_allclose(np.asarray(mu_b[i]), np.asarray(mu),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(var_b[i]), np.asarray(var),
+                                   atol=1e-5)
+        g2 = bgp.extract(i)
+        assert g2.n == gp.n
+        mu2, _ = gp_posterior(g2, xq)
+        np.testing.assert_allclose(np.asarray(mu2), np.asarray(mu),
+                                   atol=1e-5)
+
+
+def test_batched_sample_matches_per_model():
+    xs, ys, rng = _models(seed=3)
+    gps = [fit_gp(x, y) for x, y in zip(xs, ys)]
+    bgp = stack_gps(gps)
+    xq = rng.random((7, 3))
+    keys = jax.random.split(jax.random.PRNGKey(5), len(gps))
+    s = batched_sample(bgp, xq, keys, 32)
+    assert s.shape == (len(gps), 32, 7)
+    from repro.core.gp import gp_sample
+    for i, gp in enumerate(gps):
+        si = gp_sample(gp, xq, keys[i], 32)
+        np.testing.assert_allclose(np.asarray(s[i]), np.asarray(si),
+                                   atol=1e-5)
+
+
+# -- RGPE weights ------------------------------------------------------------
+
+
+def _rgpe_setup(seed=4):
+    rng = np.random.default_rng(seed)
+    xs = rng.random((30, 2))
+    related = fit_gp(xs, _surface(xs))
+    unrelated = fit_gp(rng.random((12, 2)), rng.normal(size=12))
+    x_t = rng.random((8, 2))
+    target = fit_gp(x_t, _surface(x_t))
+    return related, unrelated, target, rng
+
+
+def test_batched_weights_match_sequential():
+    related, unrelated, target, _ = _rgpe_setup()
+    key = jax.random.PRNGKey(0)
+    w_seq = np.asarray(compute_weights([related, unrelated], target, key))
+    w_bat = np.asarray(compute_weights_batched(
+        stack_gps([related, unrelated]), target, key))
+    np.testing.assert_allclose(w_bat, w_seq, atol=TOL)
+
+
+def test_weights_on_simplex_and_target_never_diluted():
+    related, unrelated, target, _ = _rgpe_setup(seed=5)
+    for key_i in range(3):
+        w = np.asarray(compute_weights_batched(
+            stack_gps([related, unrelated]), target,
+            jax.random.PRNGKey(key_i), n_samples=64))
+        assert w.shape == (3,)
+        assert np.all(w >= -1e-9)
+        np.testing.assert_allclose(w.sum(), 1.0, atol=1e-5)
+        # the related model must dominate the pure-noise one
+        assert w[0] >= w[1]
+    # dilution prevention never drops the target: even vs a perfect base
+    # model the target keeps a nonzero share of the argmin ties
+    w = np.asarray(compute_weights_batched(
+        stack_gps([related]), target, jax.random.PRNGKey(9)))
+    assert w[-1] > 0.0
+
+
+def test_single_observation_falls_back_to_uniform():
+    related, unrelated, target, rng = _rgpe_setup(seed=6)
+    t1 = fit_gp(np.asarray(target.x)[:1], np.asarray(target.y_raw)[:1])
+    bases = stack_gps([related, unrelated])
+    w_b = np.asarray(compute_weights_batched(bases, t1,
+                                             jax.random.PRNGKey(0)))
+    w_s = np.asarray(compute_weights([related, unrelated], t1,
+                                     jax.random.PRNGKey(0)))
+    np.testing.assert_allclose(w_b, np.full(3, 1.0 / 3.0), atol=1e-7)
+    np.testing.assert_allclose(w_s, w_b, atol=1e-7)
+
+
+def test_batched_ensemble_posterior_matches_sequential():
+    related, unrelated, target, rng = _rgpe_setup(seed=7)
+    key = jax.random.PRNGKey(2)
+    ens = build_ensemble([related, unrelated], target, key)
+    bens = BatchedEnsemble(stack_gps([related, unrelated]), target,
+                           compute_weights_batched(
+                               stack_gps([related, unrelated]), target, key))
+    xq = rng.random((40, 2))
+    mu, var = ensemble_posterior(ens, xq)
+    mu_b, var_b = ensemble_posterior_batched(bens, xq)
+    np.testing.assert_allclose(np.asarray(mu_b), np.asarray(mu), atol=TOL)
+    np.testing.assert_allclose(np.asarray(var_b), np.asarray(var), atol=TOL)

@@ -1,0 +1,104 @@
+"""Repository semantics + the incremental support-model store."""
+import numpy as np
+import pytest
+
+from repro.core import Repository, RunRecord, SupportModelStore
+from repro.core.encoding import scout_search_space
+from repro.simdata import make_emulator
+
+EMU = make_emulator()
+SPACE = scout_search_space()
+
+
+def _records(shared_id, wid, n, seed):
+    rng = np.random.default_rng(seed)
+    return [EMU.make_record(shared_id, wid, SPACE.configs[ci], rng)
+            for ci in rng.choice(len(SPACE), n, replace=False)]
+
+
+def _filled_repo():
+    repo = Repository()
+    wids = EMU.workload_ids()
+    repo.add_runs(_records("a", wids[0], 6, 0))
+    repo.add_runs(_records("b", wids[1], 5, 1))
+    repo.add_runs(_records("c", wids[2], 2, 2))   # too few for a GP
+    return repo
+
+
+def test_roundtrip_preserves_configs_metrics_measures(tmp_path):
+    repo = _filled_repo()
+    path = str(tmp_path / "repo.json")
+    repo.save(path)
+    back = Repository.load(path)
+    assert len(back) == len(repo)
+    assert set(back.workloads()) == set(repo.workloads())
+    for z in repo.workloads():
+        for r0, r1 in zip(repo.runs(z), back.runs(z)):
+            assert dict(r0.config) == dict(r1.config)
+            np.testing.assert_allclose(r0.metrics, r1.metrics)
+            assert set(r0.measures) == set(r1.measures)
+            for k in r0.measures:
+                assert r0.measures[k] == pytest.approx(r1.measures[k])
+
+
+def test_filtered_keeps_only_matching_workloads():
+    repo = _filled_repo()
+    f = repo.filtered(lambda z: z in ("a", "c"))
+    assert set(f.workloads()) == {"a", "c"}
+    assert len(f.runs("a")) == len(repo.runs("a"))
+    assert len(f.runs("b")) == 0
+    # original untouched
+    assert set(repo.workloads()) == {"a", "b", "c"}
+
+
+def test_truncated_counts_and_order():
+    repo = _filled_repo()
+    t = repo.truncated({"a": 4})
+    assert len(t.runs("a")) == 4
+    # first 4 in insertion order; unmentioned workloads keep everything
+    for r0, r1 in zip(repo.runs("a")[:4], t.runs("a")):
+        assert dict(r0.config) == dict(r1.config)
+    assert len(t.runs("b")) == len(repo.runs("b"))
+
+
+def test_versions_bump_on_add_run():
+    repo = Repository()
+    assert repo.version("a") == 0
+    repo.add_runs(_records("a", EMU.workload_ids()[0], 3, 0))
+    assert repo.version("a") == 3
+    assert repo.version("b") == 0
+    g = repo.global_version()
+    repo.add_run(_records("b", EMU.workload_ids()[1], 1, 1)[0])
+    assert repo.version("b") == 1
+    assert repo.global_version() == g + 1
+
+
+def test_store_caches_until_add_run_invalidates():
+    repo = _filled_repo()
+    store = SupportModelStore(repo, SPACE)
+    gp_a = store.get("a", "cost")
+    assert gp_a is not None
+    assert store.get("a", "cost") is gp_a          # cache hit, same object
+    assert store.misses == 1 and store.hits == 1
+    gp_b = store.get("b", "cost")
+    assert gp_b is not None
+
+    # new data for "a" invalidates ONLY ("a", *) entries
+    repo.add_run(_records("a", EMU.workload_ids()[0], 1, 42)[0])
+    gp_a2 = store.get("a", "cost")
+    assert gp_a2 is not gp_a
+    assert gp_a2.n == gp_a.n + 1                   # refit on the new data
+    assert store.get("b", "cost") is gp_b          # untouched workload: hit
+
+
+def test_store_handles_unusable_workloads():
+    repo = _filled_repo()
+    store = SupportModelStore(repo, SPACE)
+    assert store.get("c", "cost") is None          # only 2 runs
+    assert store.get("missing", "cost") is None
+    # get_stacked skips the unusable ones
+    bgp, ids = store.get_stacked(["a", "c", "b", "missing"], "cost")
+    assert ids == ["a", "b"]
+    assert bgp.m == 2
+    none_bgp, none_ids = store.get_stacked(["c", "missing"], "cost")
+    assert none_bgp is None and none_ids == []

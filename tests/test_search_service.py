@@ -1,0 +1,136 @@
+"""Multi-tenant SearchService: batching, shared cache, serving semantics."""
+import numpy as np
+import pytest
+
+from repro.core import (BOConfig, Constraint, Objective, Repository,
+                        run_search, scout_search_space)
+from repro.serve.search_service import (SearchRequest, SearchService)
+from repro.simdata import make_emulator
+
+EMU = make_emulator()
+SPACE = scout_search_space()
+WIDS = EMU.workload_ids()
+WID = WIDS[6]
+RT = EMU.runtime_target(WID, 50)
+OPT = EMU.optimal_cost(WID, RT)
+
+
+def _request(seed, *, method="naive", wid=WID, max_iters=6, **kw):
+    rng = np.random.default_rng(seed)
+    return SearchRequest(
+        SPACE, lambda c: EMU.run(wid, c, rng=rng), Objective("cost"),
+        [Constraint("runtime", EMU.runtime_target(wid, 50))],
+        method=method, bo_config=BOConfig(max_iters=max_iters), seed=seed,
+        **kw)
+
+
+def _support_repo(wid=WID, users=2, runs=12, seed=99):
+    repo = Repository()
+    rng = np.random.default_rng(seed)
+    for u in range(users):
+        for ci in rng.choice(len(SPACE), runs, replace=False):
+            repo.add_run(EMU.make_record(f"anon-{u}", wid,
+                                         SPACE.configs[ci], rng))
+    return repo
+
+
+def test_service_completes_all_tenants_batched():
+    svc = SearchService(Repository(), slots=3)
+    rids = [svc.submit(_request(s)) for s in range(3)]
+    done = svc.run()
+    assert sorted(c.rid for c in done) == rids
+    for c in done:
+        assert len(c.result.observations) == 6
+        assert c.result.best_index_per_iter[-1] >= 0
+    # 3 tenants x 2 measures x 3 model iterations collapsed into 3
+    # fit batches (one per step), not 18 separate fits
+    assert svc.stats["fit_jobs"] == 18
+    assert svc.stats["fit_batches"] == 3
+    assert svc.collect() == []          # collect drains
+
+
+def test_service_queueing_beyond_slots():
+    svc = SearchService(Repository(), slots=2)
+    for s in range(5):
+        svc.submit(_request(s, max_iters=4))
+    done = svc.run()
+    assert len(done) == 5
+
+
+def test_service_karasu_uses_shared_store():
+    repo = _support_repo()
+    svc = SearchService(repo, slots=4)
+    for s in range(4):
+        svc.submit(_request(s, method="karasu"))
+    done = svc.run()
+    assert len(done) == 4
+    for c in done:
+        assert c.result.meta["selected"], "karasu never selected supports"
+    ctx, = svc._contexts.values()
+    # 2 support workloads x 2 measures fit exactly once, shared by all 4
+    # tenants across all iterations
+    assert ctx.store.misses == 4
+    assert ctx.store.hits > ctx.store.misses
+
+
+def test_service_matches_run_search_quality():
+    repo = _support_repo()
+    svc = SearchService(repo, slots=2)
+    for s in range(2):
+        svc.submit(_request(s, method="karasu", max_iters=8))
+    gaps_svc = []
+    for c in svc.run():
+        i = c.result.best_index_per_iter[-1]
+        gaps_svc.append(c.result.observations[i].measures["cost"] / OPT - 1)
+    gaps_loop = []
+    for s in range(2):
+        rng = np.random.default_rng(s)
+        r = run_search(SPACE, lambda c: EMU.run(WID, c, rng=rng),
+                       Objective("cost"), [Constraint("runtime", RT)],
+                       method="karasu", repository=_support_repo(),
+                       bo_config=BOConfig(max_iters=8), seed=s)
+        i = r.best_index_per_iter[-1]
+        gaps_loop.append(r.observations[i].measures["cost"] / OPT - 1)
+    assert np.mean(gaps_svc) <= np.mean(gaps_loop) + 0.25, (gaps_svc,
+                                                            gaps_loop)
+
+
+def test_service_publish_invalidates_incrementally():
+    repo = _support_repo(users=1)
+    svc = SearchService(repo, slots=2)
+    svc.submit(_request(0, method="karasu", share_as="tenant-0"))
+    svc.submit(_request(1, method="karasu"))
+    n0 = len(repo)
+    done = svc.run()
+    assert len(done) == 2
+    # tenant 0 published every profiling run to the shared repository
+    assert len(repo.runs("tenant-0")) == 6
+    assert len(repo) == n0 + 6
+    # and the repository version moved, so later searches see fresh data
+    assert repo.version("tenant-0") == 6
+    # a publishing tenant must never select its OWN runs as support
+    # (they score ~1.0 against themselves and bypass the LOO safeguard);
+    # the non-publishing tenant is free to consume them
+    r0 = next(c.result for c in done if c.rid == 0)
+    assert all("tenant-0" not in sel for sel in r0.meta["selected"])
+
+
+def test_service_early_stop():
+    svc = SearchService(Repository(), slots=1)
+    rng = np.random.default_rng(0)
+    req = SearchRequest(
+        SPACE, lambda c: EMU.run(WID, c, rng=rng), Objective("cost"),
+        [Constraint("runtime", RT)], method="naive",
+        bo_config=BOConfig(max_iters=20, early_stop=True), seed=0)
+    svc.submit(req)
+    done = svc.run()
+    assert len(done) == 1
+    res = done[0].result
+    assert res.meta["n_profiled"] >= 6
+    assert res.meta["n_profiled"] <= 20
+
+
+def test_service_rejects_unknown_method():
+    svc = SearchService()
+    with pytest.raises(ValueError):
+        svc.submit(_request(0, method="bogus"))
