@@ -14,10 +14,10 @@ from .gp import (GP, BatchedGP, batched_posterior, batched_sample, fit_gp,
                  fit_gp_batched, gp_posterior, gp_posterior_raw, stack_gps)
 from .moo import pareto_of_result, run_search_moo
 from .repository import Repository, SupportModelStore
-from .rgpe import (BatchedEnsemble, Ensemble, build_ensemble,
+from .rgpe import (BatchedEnsemble, Ensemble, WeightJob, build_ensemble,
                    build_ensemble_batched, compute_weights,
-                   compute_weights_batched, ensemble_posterior,
-                   ensemble_posterior_batched)
+                   compute_weights_batched, compute_weights_multi,
+                   ensemble_posterior, ensemble_posterior_batched)
 from .selection import CandidateIndex, select_similar, select_similar_batched
 from .types import BOResult, Constraint, Objective, Observation, RunRecord
 
@@ -28,8 +28,9 @@ __all__ = [
     "batched_sample", "fit_gp", "fit_gp_batched", "gp_posterior",
     "gp_posterior_raw", "stack_gps", "pareto_of_result", "run_search_moo",
     "Repository", "SupportModelStore", "BatchedEnsemble", "Ensemble",
-    "build_ensemble", "build_ensemble_batched", "compute_weights",
-    "compute_weights_batched", "ensemble_posterior",
+    "WeightJob", "build_ensemble", "build_ensemble_batched",
+    "compute_weights", "compute_weights_batched", "compute_weights_multi",
+    "ensemble_posterior",
     "ensemble_posterior_batched", "CandidateIndex", "select_similar",
     "select_similar_batched", "BOResult", "Constraint", "Objective",
     "Observation", "RunRecord",

@@ -26,7 +26,7 @@ from .encoding import SearchSpace
 from .extra_trees import fit_extra_trees
 from .gp import batched_posterior, fit_gp_batched, gp_posterior
 from .repository import Repository, SupportModelStore
-from .rgpe import (BatchedEnsemble, compute_weights_batched,
+from .rgpe import (BatchedEnsemble, WeightJob, compute_weights_multi,
                    ensemble_posterior_batched)
 from .selection import CandidateIndex
 from .types import BOResult, Constraint, Objective, Observation, RunRecord
@@ -131,6 +131,18 @@ class KarasuContext:
             self._index_version = v
         return self._index
 
+    @staticmethod
+    def score_ensembles(jobs: Sequence[WeightJob], *,
+                        impl: str = "xla") -> List:
+        """RGPE weights for every queued (tenant, measure) ensemble of a
+        scheduling round in ONE padded ranking-loss launch. Static — the
+        weighting depends only on the jobs, never on context state, so a
+        service may score jobs spanning several contexts in one call.
+        Single-tenant ``run_search`` batches its measures through the
+        same entry point, so the serving path and the reference loop
+        cannot diverge."""
+        return compute_weights_multi(jobs, impl=impl)
+
 
 def _target_runs(observations) -> List[RunRecord]:
     return [RunRecord("__target__", o.config, o.metrics, o.measures)
@@ -151,22 +163,28 @@ def _model_posteriors_karasu(observations, measures, cfg,
     x = np.stack([o.x for o in observations])
     ys = [np.array([o.measures[m] for o in observations])
           for m in measures]
-    tgts = fit_gp_batched([x] * len(measures), ys, noise=cfg.noise)
+    tgts = fit_gp_batched([x] * len(measures), ys, noise=cfg.noise,
+                          round_to=8)
+    jobs, job_meta = [], []
     for mi, m in enumerate(measures):
         tgt = tgts.extract(mi)
         bases, _ids = ctx.store.get_stacked([z for z, _ in selected], m)
         if bases is not None:
-            w = compute_weights_batched(
-                bases, tgt, jax.random.fold_in(key, mi),
-                n_samples=cfg.rgpe_samples, impl=cfg.kernel_impl)
-            mu, var = ensemble_posterior_batched(
-                BatchedEnsemble(bases, tgt, w), xq)
-            w = np.asarray(w)
+            jobs.append(WeightJob(bases, tgt, jax.random.fold_in(key, mi),
+                                  cfg.rgpe_samples))
+            job_meta.append((m, bases, tgt))
         else:
             mu, var = gp_posterior(tgt, xq)
-            w = np.array([1.0])
+            out[m] = {"mu": mu, "var": var, "y_mean": tgt.y_mean,
+                      "y_std": tgt.y_std, "weights": np.array([1.0])}
+    # all measures' ensembles scored in one padded ranking-loss launch
+    for (m, bases, tgt), w in zip(job_meta,
+                                  ctx.score_ensembles(
+                                      jobs, impl=cfg.kernel_impl)):
+        mu, var = ensemble_posterior_batched(
+            BatchedEnsemble(bases, tgt, w), xq)
         out[m] = {"mu": mu, "var": var, "y_mean": tgt.y_mean,
-                  "y_std": tgt.y_std, "weights": w}
+                  "y_std": tgt.y_std, "weights": np.asarray(w)}
     return out, selected
 
 
@@ -176,7 +194,8 @@ def _model_posteriors_naive(observations, measures, cfg, xq):
     x = np.stack([o.x for o in observations])
     ys = [np.array([o.measures[m] for o in observations])
           for m in measures]
-    b = fit_gp_batched([x] * len(measures), ys, noise=cfg.noise)
+    b = fit_gp_batched([x] * len(measures), ys, noise=cfg.noise,
+                       round_to=8)
     mu, var = batched_posterior(b, xq)
     return {m: {"mu": mu[i], "var": var[i], "y_mean": b.y_mean[i],
                 "y_std": b.y_std[i]}

@@ -263,21 +263,38 @@ def _batched_chol_alpha(log_ls, log_sf, x, y, mask, noise: float):
 
 def fit_gp_batched(xs: Sequence[np.ndarray], ys: Sequence[np.ndarray], *,
                    noise: float = 0.1, steps: int = 120,
-                   n_max: Optional[int] = None) -> BatchedGP:
+                   n_max: Optional[int] = None, round_to: int = 1,
+                   m_round_pow2: bool = False) -> BatchedGP:
     """Fit m GPs in one vmapped Adam/Cholesky pass.
 
     ``xs[i]``: (n_i, d), ``ys[i]``: (n_i,). All models must share d (and
     the fixed noise); n_i may differ — shorter models are zero-padded to
-    ``n_max`` (callers may round n_max up to stabilise jit shapes;
-    padding never changes results)."""
+    ``n_max``. ``round_to`` rounds the pad length up to a multiple so jit
+    shapes stay stable while a search's observation count grows (padding
+    never changes results — masked rows carry unit diagonals).
+
+    ``m_round_pow2`` pads the MODEL dimension to the next power of two by
+    repeating model 0; models ``>= m`` are throwaway lanes. Callers whose
+    cohort size varies step to step (an async ``SearchService``, where
+    whichever sessions' profiling runs landed form the batch) use this so
+    the vmapped fit compiles once per bucket instead of once per cohort
+    size. Real models' results are unaffected: vmap lanes are
+    independent."""
     m = len(xs)
     if m == 0 or m != len(ys):
         raise ValueError("fit_gp_batched needs >=1 model and len(xs)==len(ys)")
+    if m_round_pow2:
+        target = 1 << (m - 1).bit_length()
+        xs = list(xs) + [xs[0]] * (target - m)
+        ys = list(ys) + [ys[0]] * (target - m)
+        m = target
     d = int(np.shape(xs[0])[1])
     ns = [int(np.shape(y)[0]) for y in ys]
     nm = max(ns) if n_max is None else int(n_max)
     if nm < max(ns):
         raise ValueError(f"n_max={nm} < largest model ({max(ns)})")
+    if round_to > 1:
+        nm = ((nm + round_to - 1) // round_to) * round_to
 
     x = np.zeros((m, nm, d), np.float32)
     ysd = np.zeros((m, nm), np.float32)

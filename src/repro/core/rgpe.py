@@ -37,7 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.ranking_loss import ranking_loss
+from repro.kernels.ranking_loss import ranking_loss, ranking_loss_padded
 from .gp import (GP, BatchedGP, batched_posterior, batched_sample,
                  gp_loo_samples, gp_posterior, gp_sample)
 
@@ -126,6 +126,71 @@ def compute_weights_batched(
     loss = ranking_loss(stacked, y_tar, impl=impl)           # ((m+1)*S,)
     loss_mat = loss.reshape(m + 1, n_samples)
     return _weights_from_losses(loss_mat, dilution_percentile)
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightJob:
+    """One RGPE weighting problem — (support stack, target, PRNG key) for
+    a single (tenant, measure) ensemble. ``n_samples`` may differ per job
+    (the padded scorer handles ragged sample counts like ragged n_obs)."""
+    bases: BatchedGP
+    target: GP
+    key: jax.Array
+    n_samples: int = 256
+
+
+def compute_weights_multi(
+    jobs: Sequence[WeightJob],
+    *,
+    dilution_percentile: float = 95.0,
+    impl: str = "xla",
+) -> List[jnp.ndarray]:
+    """Score MANY ensembles with ONE padded ranking-loss launch.
+
+    Cross-tenant twin of ``compute_weights_batched``: every job draws its
+    samples exactly as the per-ensemble path does (same key splits, same
+    shapes, so weights agree to float roundoff), then all jobs' sample
+    rows are padded to a common n_max and scored by a single
+    ``ranking_loss_padded`` call — ragged n_obs is handled by per-row
+    validity masks, mirroring ``BatchedGP``'s padding contract. Jobs with
+    n_obs < 2 short-circuit to uniform weights (no rankable pair).
+    """
+    out: List[Optional[jnp.ndarray]] = [None] * len(jobs)
+    rows_p, rows_y, rows_nv, spans = [], [], [], []
+    for ji, job in enumerate(jobs):
+        y_tar = job.target.y
+        n = int(y_tar.shape[0])
+        m = job.bases.m
+        if n < 2:
+            out[ji] = jnp.full((m + 1,), 1.0 / (m + 1))
+            continue
+        keys = jax.random.split(job.key, m + 1)
+        s_base = batched_sample(job.bases, job.target.x, keys[:m],
+                                job.n_samples, impl=impl)    # (m, S, n)
+        s_tar = gp_loo_samples(job.target, keys[-1], job.n_samples)
+        stacked = jnp.concatenate(
+            [s_base.reshape(m * job.n_samples, n), s_tar])  # ((m+1)S, n)
+        rows_p.append(stacked)
+        rows_y.append(jnp.broadcast_to(y_tar[None], stacked.shape))
+        rows_nv.append(jnp.full((stacked.shape[0],), n, jnp.int32))
+        spans.append((ji, m, job.n_samples))
+    if not rows_p:
+        return out
+
+    n_max = max(p.shape[1] for p in rows_p)
+    preds = jnp.concatenate(
+        [jnp.pad(p, ((0, 0), (0, n_max - p.shape[1]))) for p in rows_p])
+    ys = jnp.concatenate(
+        [jnp.pad(y, ((0, 0), (0, n_max - y.shape[1]))) for y in rows_y])
+    loss = ranking_loss_padded(preds, ys, jnp.concatenate(rows_nv),
+                               impl=impl)
+    off = 0
+    for ji, m, s in spans:
+        rows = (m + 1) * s
+        loss_mat = loss[off:off + rows].reshape(m + 1, s)
+        out[ji] = _weights_from_losses(loss_mat, dilution_percentile)
+        off += rows
+    return out
 
 
 def build_ensemble(base_models: Sequence[GP], target: GP, key: jax.Array,

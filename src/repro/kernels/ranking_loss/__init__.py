@@ -1,4 +1,5 @@
-from .ops import ranking_loss
-from .ref import ranking_loss_ref
+from .ops import ranking_loss, ranking_loss_padded
+from .ref import ranking_loss_padded_ref, ranking_loss_ref
 
-__all__ = ["ranking_loss", "ranking_loss_ref"]
+__all__ = ["ranking_loss", "ranking_loss_padded", "ranking_loss_ref",
+           "ranking_loss_padded_ref"]

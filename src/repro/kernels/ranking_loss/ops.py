@@ -7,8 +7,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .ref import ranking_loss_ref
-from .ranking_loss import _rank_kernel
+from .ref import ranking_loss_padded_ref, ranking_loss_ref
+from .ranking_loss import _rank_kernel, _rank_padded_kernel
 
 
 def _pallas(preds: jnp.ndarray, y: jnp.ndarray, *, block_s: int = 128,
@@ -42,4 +42,46 @@ def ranking_loss(preds: jnp.ndarray, y: jnp.ndarray, *, impl: str = "xla"
         return _pallas(preds, y, interpret=False)
     if impl == "pallas_interpret":
         return _pallas(preds, y, interpret=True)
+    raise ValueError(f"unknown ranking_loss impl {impl!r}")
+
+
+def _pallas_padded(preds: jnp.ndarray, ys: jnp.ndarray,
+                   n_valid: jnp.ndarray, *, block_s: int = 128,
+                   interpret: bool = False) -> jnp.ndarray:
+    r, n = preds.shape
+    bs = min(block_s, r)
+    pr = (-r) % bs
+    pn = (-n) % 128 if not interpret else 0
+    if pr or pn:
+        # padding rows get n_valid = 0 below, so they count zero pairs
+        preds = jnp.pad(preds, ((0, pr), (0, pn)))
+        ys = jnp.pad(ys, ((0, pr), (0, pn)))
+    nv = jnp.pad(jnp.asarray(n_valid, jnp.int32), (0, pr))[:, None]
+    out = pl.pallas_call(
+        _rank_padded_kernel,
+        grid=((r + pr) // bs,),
+        in_specs=[
+            pl.BlockSpec((bs, preds.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((bs, ys.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((bs, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r + pr, 1), jnp.int32),
+        interpret=interpret,
+    )(preds, ys, nv)
+    return out[:r, 0]
+
+
+def ranking_loss_padded(preds: jnp.ndarray, ys: jnp.ndarray,
+                        n_valid: jnp.ndarray, *, impl: str = "xla"
+                        ) -> jnp.ndarray:
+    """Ragged-batch entry point: (R, n_max) samples with per-row targets
+    and valid lengths -> (R,) misrank counts. One launch scores every
+    (tenant, measure) ensemble of a SearchService step."""
+    if impl == "xla":
+        return ranking_loss_padded_ref(preds, ys, n_valid)
+    if impl == "pallas":
+        return _pallas_padded(preds, ys, n_valid, interpret=False)
+    if impl == "pallas_interpret":
+        return _pallas_padded(preds, ys, n_valid, interpret=True)
     raise ValueError(f"unknown ranking_loss impl {impl!r}")

@@ -27,3 +27,21 @@ def _rank_kernel(p_ref, y_ref, o_ref, *, n_valid: int):
     both = jnp.logical_and(valid[:, None], valid[None, :])[None]
     xor = jnp.logical_xor(pl_, yl) & both
     o_ref[...] = jnp.sum(xor.astype(jnp.int32), axis=(1, 2))[:, None]
+
+
+def _rank_padded_kernel(p_ref, y_ref, nv_ref, o_ref):
+    """Ragged twin of ``_rank_kernel``: every row carries its own target
+    vector and valid prefix length, so one launch scores a whole batch of
+    heterogeneous (tenant, measure) ensembles. Rows whose n_valid is 0
+    (padding rows added by the wrapper) contribute XOR & False = 0."""
+    p = p_ref[...].astype(jnp.float32)          # (bs, n)
+    y = y_ref[...].astype(jnp.float32)          # (bs, n)
+    nv = nv_ref[...].astype(jnp.int32)          # (bs, 1)
+    bs, n = p.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (bs, n), 1)
+    valid = col < nv                            # (bs, n)
+    pl_ = p[:, :, None] < p[:, None, :]         # (bs, n, n)
+    yl = y[:, :, None] < y[:, None, :]
+    both = jnp.logical_and(valid[:, :, None], valid[:, None, :])
+    xor = jnp.logical_xor(pl_, yl) & both
+    o_ref[...] = jnp.sum(xor.astype(jnp.int32), axis=(1, 2))[:, None]

@@ -15,3 +15,23 @@ def ranking_loss_ref(preds: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
     pl_ = p[:, :, None] < p[:, None, :]          # (S, n, n)
     yl = (yf[:, None] < yf[None, :])[None]       # (1, n, n)
     return jnp.sum(jnp.logical_xor(pl_, yl), axis=(1, 2)).astype(jnp.int32)
+
+
+def ranking_loss_padded_ref(preds: jnp.ndarray, ys: jnp.ndarray,
+                            n_valid: jnp.ndarray) -> jnp.ndarray:
+    """Ragged batch of ranking problems, one per row.
+
+    preds: (R, n_max) samples, ys: (R, n_max) per-row observed targets,
+    n_valid: (R,) valid prefix length per row -> (R,) misrank counts over
+    each row's valid block. Rows with n_valid <= 1 (including fully
+    masked padding rows) have no rankable pair and score 0.
+    """
+    p = preds.astype(jnp.float32)
+    y = ys.astype(jnp.float32)
+    valid = (jnp.arange(p.shape[1])[None, :]
+             < jnp.asarray(n_valid, jnp.int32)[:, None])     # (R, n_max)
+    pl_ = p[:, :, None] < p[:, None, :]                      # (R, n, n)
+    yl = y[:, :, None] < y[:, None, :]
+    both = valid[:, :, None] & valid[:, None, :]
+    return jnp.sum(jnp.logical_xor(pl_, yl) & both,
+                   axis=(1, 2)).astype(jnp.int32)

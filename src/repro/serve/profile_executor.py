@@ -1,0 +1,242 @@
+"""Asynchronous profiling execution for the ``SearchService``.
+
+Karasu's wall-clock win (paper §III, §IV) is fewer *and cheaper*
+profiling runs; a multi-tenant service must additionally never let one
+slow tenant's cluster run gate everyone else's BO step. This module
+isolates "execute profile_fn(config)" behind an executor with three
+backends:
+
+  - ``SyncProfileExecutor``        — runs the profiler inline at submit
+    time. Zero concurrency; bitwise-identical to the pre-async service.
+  - ``ThreadPoolProfileExecutor``  — a ``concurrent.futures`` pool.
+    Profiling runs overlap each other and the service's fit/score work;
+    completion order is wall-clock, but outcomes are always *returned*
+    in submission order among the completed set, so absorbing them is
+    deterministic whenever the completed set is.
+  - ``FakeProfileExecutor``        — a deterministic virtual-clock fake:
+    the profiler runs inline (deterministically, in submission order)
+    but its outcome is withheld until the per-job latency has elapsed on
+    a tick counter. Lets tests and simulations exercise heterogeneous
+    profiling latencies with zero wall-clock and zero nondeterminism.
+
+Shared semantics:
+
+  - ``submit(job, fn)``              — enqueue one profiling run.
+  - ``poll()``                       — non-blocking; outcomes that have
+    landed since the last poll/collect, in submission order.
+  - ``collect(timeout, min_results)``— block until at least
+    ``min_results`` outcomes are available (or timeout); returns them.
+  - ``drain(timeout)``               — block until ALL in-flight runs
+    land (or timeout); returns what landed.
+  - ``pending()``                    — in-flight count (submitted, not
+    yet returned).
+
+``collect``/``drain`` with ``timeout=None`` wait indefinitely for real
+backends; on the fake they advance the virtual clock, so they always
+return. Both return *early with whatever is available* on timeout —
+callers must re-poll later, and a job's result is never dropped.
+Profiler exceptions are captured on the outcome (``error``), never
+raised in the executor thread.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+ProfileFn = Callable[[Mapping], Tuple[Dict[str, float], np.ndarray]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ProfileJob:
+    """One profiling run: session ``rid`` wants candidate ``ci`` run.
+
+    ``seq`` is the session-local submission index; sessions use it to
+    re-order outcomes that arrive out of order (threads race marking
+    their futures done), keeping every session's observation sequence
+    arrival-order independent."""
+    rid: int
+    ci: int
+    config: Mapping
+    tag: str = "bo"            # "init" (admission prefill) | "bo"
+    seq: int = 0
+
+
+@dataclasses.dataclass
+class ProfileOutcome:
+    job: ProfileJob
+    measures: Optional[Dict[str, float]] = None
+    metrics: Optional[np.ndarray] = None
+    error: Optional[BaseException] = None
+
+
+def _run(job: ProfileJob, fn: ProfileFn) -> ProfileOutcome:
+    try:
+        measures, metrics = fn(job.config)
+        return ProfileOutcome(job, measures, metrics)
+    except BaseException as e:                 # noqa: BLE001 — relayed
+        return ProfileOutcome(job, error=e)
+
+
+class SyncProfileExecutor:
+    """Inline execution: every submit completes immediately."""
+
+    def __init__(self) -> None:
+        self._ready: List[ProfileOutcome] = []
+
+    def submit(self, job: ProfileJob, fn: ProfileFn) -> None:
+        self._ready.append(_run(job, fn))
+
+    def pending(self) -> int:
+        return len(self._ready)
+
+    def poll(self) -> List[ProfileOutcome]:
+        out, self._ready = self._ready, []
+        return out
+
+    def collect(self, timeout: Optional[float] = None,
+                min_results: int = 1) -> List[ProfileOutcome]:
+        return self.poll()
+
+    def drain(self, timeout: Optional[float] = None) -> List[ProfileOutcome]:
+        return self.poll()
+
+    def shutdown(self) -> None:
+        self._ready.clear()
+
+
+class ThreadPoolProfileExecutor:
+    """Real concurrency: profiling runs execute on a thread pool while
+    the service keeps fitting/scoring the sessions whose data landed."""
+
+    def __init__(self, max_workers: int = 8) -> None:
+        self._pool = ThreadPoolExecutor(max_workers=max_workers)
+        self._lock = threading.Condition()
+        self._seq = 0
+        self._done: Dict[int, ProfileOutcome] = {}   # seq -> outcome
+        self._inflight: set = set()
+
+    def submit(self, job: ProfileJob, fn: ProfileFn) -> None:
+        with self._lock:
+            seq = self._seq
+            self._seq += 1
+            self._inflight.add(seq)
+
+        def work() -> None:
+            out = _run(job, fn)
+            with self._lock:
+                self._inflight.discard(seq)
+                self._done[seq] = out
+                self._lock.notify_all()
+
+        self._pool.submit(work)
+
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._inflight) + len(self._done)
+
+    def _take(self) -> List[ProfileOutcome]:
+        # submission order among the completed set: deterministic absorb
+        # whenever the completed set is (e.g. under a barrier, or after
+        # a full drain)
+        out = [self._done.pop(k) for k in sorted(self._done)]
+        return out
+
+    def poll(self) -> List[ProfileOutcome]:
+        with self._lock:
+            return self._take()
+
+    def collect(self, timeout: Optional[float] = None,
+                min_results: int = 1) -> List[ProfileOutcome]:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._lock:
+            want = min(min_results,
+                       len(self._inflight) + len(self._done))
+            while len(self._done) < want:
+                left = (None if deadline is None
+                        else deadline - time.monotonic())
+                if left is not None and left <= 0:
+                    break
+                self._lock.wait(left)
+            return self._take()
+
+    def drain(self, timeout: Optional[float] = None) -> List[ProfileOutcome]:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._lock:
+            while self._inflight:
+                left = (None if deadline is None
+                        else deadline - time.monotonic())
+                if left is not None and left <= 0:
+                    break
+                self._lock.wait(left)
+            return self._take()
+
+    def shutdown(self) -> None:
+        self._pool.shutdown(wait=True)
+
+
+class FakeProfileExecutor:
+    """Deterministic fake with a virtual clock.
+
+    ``latency_fn(job) -> int`` gives the number of virtual ticks the run
+    takes (default 1). The profiler itself executes inline at submit
+    time — in submission order, so RNG-bearing profile_fns stay
+    deterministic — but the outcome only becomes visible once the clock
+    passes its deadline. ``collect``/``drain`` advance the clock instead
+    of sleeping, so simulated heterogeneous latencies cost no wall time.
+    """
+
+    def __init__(self, latency_fn: Optional[Callable[[ProfileJob], int]]
+                 = None) -> None:
+        self._latency_fn = latency_fn or (lambda job: 1)
+        self._now = 0
+        self._seq = 0
+        # heap of (deadline, seq, outcome)
+        self._scheduled: List[Tuple[int, int, ProfileOutcome]] = []
+        self.ticks = 0                      # total virtual time advanced
+
+    def submit(self, job: ProfileJob, fn: ProfileFn) -> None:
+        deadline = self._now + max(1, int(self._latency_fn(job)))
+        heapq.heappush(self._scheduled,
+                       (deadline, self._seq, _run(job, fn)))
+        self._seq += 1
+
+    def pending(self) -> int:
+        return len(self._scheduled)
+
+    def _landed(self) -> List[ProfileOutcome]:
+        out = []
+        while self._scheduled and self._scheduled[0][0] <= self._now:
+            out.append(heapq.heappop(self._scheduled)[2])
+        return out
+
+    def poll(self) -> List[ProfileOutcome]:
+        return self._landed()
+
+    def collect(self, timeout: Optional[float] = None,
+                min_results: int = 1) -> List[ProfileOutcome]:
+        """Advance the virtual clock until >= min_results outcomes land
+        (the fake never blocks; ``timeout`` caps the number of ticks —
+        rounded UP, so any positive timeout makes progress)."""
+        out = self._landed()
+        budget = (float("inf") if timeout is None
+                  else int(-(-timeout // 1)))          # ceil
+        want = min(min_results, len(out) + len(self._scheduled))
+        while len(out) < want and self._scheduled and budget > 0:
+            self._now += 1
+            self.ticks += 1
+            budget -= 1
+            out.extend(self._landed())
+        return out
+
+    def drain(self, timeout: Optional[float] = None) -> List[ProfileOutcome]:
+        n = len(self._scheduled)
+        return self.collect(timeout, min_results=n) if n else self.poll()
+
+    def shutdown(self) -> None:
+        self._scheduled.clear()

@@ -9,11 +9,22 @@ search, admission plays the role of prefill (the random initial
 profiling runs), and every ``step`` advances ALL active sessions by one
 BO iteration ("decode").
 
-The hot path is batched across tenants: each step stacks every active
-session's target-GP fit jobs — one per (tenant, measure) — into a single
-``BatchedGP`` per (search space, noise) group, so the whole round costs
-one vmapped Adam/Cholesky fit and one batched posterior over the full
-candidate grid instead of ``tenants x measures`` sequential fits.
+Two axes are batched/overlapped across tenants:
+
+  - **Model math**: each step stacks every ready session's target-GP fit
+    jobs — one per (tenant, measure) — into a single ``BatchedGP`` per
+    (search space, noise) group (one vmapped Adam/Cholesky fit, one
+    batched posterior over the full candidate grid), and scores ALL
+    karasu sessions' RGPE ensembles with ONE padded ranking-loss launch
+    (``compute_weights_multi``; ragged n_obs handled by masking).
+  - **Profiling**: cluster runs execute through a ``ProfileExecutor``
+    (``serve/profile_executor.py``). A session whose run is in flight
+    sits in the explicit ``WAITING_PROFILE`` state while every session
+    whose result landed keeps fitting/scoring — the step rate is set by
+    the hardware, not by the slowest tenant's profiler. The default
+    ``SyncProfileExecutor`` reproduces the fully synchronous service
+    bitwise.
+
 Support models come from one ``SupportModelStore`` shared by every
 tenant and invalidated incrementally per (workload, measure) when
 ``add_run`` bumps that workload's repository version — results a tenant
@@ -24,20 +35,28 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
 from repro.core.bo import (BOConfig, KarasuContext, ProfileFn,
-                           _acquisition, _model_posteriors_augmented,
-                           _profile_into, _should_stop_early, _target_runs)
+                           _acquisition, _best_index_so_far,
+                           _model_posteriors_augmented, _should_stop_early,
+                           _target_runs)
 from repro.core.encoding import SearchSpace
 from repro.core.gp import batched_posterior, fit_gp_batched
-from repro.core.repository import Repository, SupportModelStore
-from repro.core.rgpe import compute_weights_batched
+from repro.core.repository import Repository
+from repro.core.rgpe import WeightJob
 from repro.core.types import (BOResult, Constraint, Objective, Observation,
                               RunRecord)
+from repro.serve.profile_executor import (ProfileJob, ProfileOutcome,
+                                          SyncProfileExecutor)
+
+# session states
+READY = "ready"                        # observations current, can fit/score
+WAITING_PROFILE = "waiting_profile"    # >=1 profiling run in flight
 
 
 @dataclasses.dataclass
@@ -82,12 +101,61 @@ class _Session:
         self.profiled: set = set()
         self.stopped_at = self.cfg.max_iters
         self.meta: Dict[str, Any] = {"method": req.method, "selected": []}
+        self.state = READY
+        self.inflight = 0
+        self._launch_seq = 0           # session-local submission index
+        self._record_seq = 0           # next seq to absorb
+        self._held: Dict[int, ProfileOutcome] = {}
 
-    def profile(self, ci: int, repo: Optional[Repository]) -> None:
-        obs = _profile_into(self.req.space, self.xq_all,
-                            self.req.profile_fn, self.req.objective,
-                            self.req.constraints, self.observations,
-                            self.best_idx, self.profiled, ci)
+    def launch(self, ci: int, tag: str = "bo") -> ProfileJob:
+        """Reserve candidate ``ci`` and build its executor job; the
+        session waits in WAITING_PROFILE until the outcome lands."""
+        self.profiled.add(int(ci))
+        self.inflight += 1
+        self.state = WAITING_PROFILE
+        job = ProfileJob(self.rid, int(ci), self.req.space.configs[ci],
+                         tag, self._launch_seq)
+        self._launch_seq += 1
+        return job
+
+    def record(self, out: ProfileOutcome,
+               repo: Optional[Repository]) -> None:
+        """Absorb landed profiling outcomes in LAUNCH order, holding
+        early arrivals back — concurrent init runs may complete in any
+        order, but a session's observation sequence (and therefore its
+        whole BO trajectory) must not depend on thread timing."""
+        self._held[out.job.seq] = out
+        errors: List[BaseException] = []
+        while self._record_seq in self._held:
+            nxt = self._held.pop(self._record_seq)
+            self._record_seq += 1       # consume even if nxt errors
+            try:
+                self._record_one(nxt, repo)
+            except BaseException as e:  # noqa: BLE001 — re-raised below
+                # keep draining: a held successor outcome must not be
+                # stranded (the executor already handed it over)
+                errors.append(e)
+        if errors:
+            raise errors[0]
+
+    def _record_one(self, out: ProfileOutcome,
+                    repo: Optional[Repository]) -> None:
+        """The bookkeeping half of core.bo._profile_into (execution
+        happened in the executor)."""
+        if out.error is not None:
+            # settle the state machine BEFORE raising: the failed run is
+            # simply absent from the observations, so a caller that
+            # swallows the error keeps a live (not wedged) session
+            self.inflight -= 1
+            if self.inflight == 0:
+                self.state = READY
+            raise out.error
+        obs = Observation(config=self.req.space.configs[out.job.ci],
+                          x=self.xq_all[out.job.ci],
+                          measures=out.measures, metrics=out.metrics)
+        self.observations.append(obs)
+        self.best_idx.append(_best_index_so_far(
+            self.observations, self.req.objective, self.req.constraints))
         # publish only complete records: Algorithm-1 needs the metric
         # matrix, and a None-metrics record would poison the shared
         # CandidateIndex for every other tenant
@@ -95,13 +163,15 @@ class _Session:
                 and obs.metrics is not None):
             repo.add_run(RunRecord(self.req.share_as, dict(obs.config),
                                    obs.metrics, obs.measures))
+        self.inflight -= 1
+        if self.inflight == 0:
+            self.state = READY
 
-    def admit(self, repo: Optional[Repository]) -> None:
-        """'Prefill': the random initialisation runs (paper §IV-B)."""
+    def init_candidates(self) -> List[int]:
+        """'Prefill' picks: the random initialisation runs (§IV-B)."""
         n = min(self.cfg.n_init, len(self.req.space))
-        for ci in self.rng.choice(len(self.req.space), size=n,
-                                  replace=False):
-            self.profile(int(ci), repo)
+        return [int(ci) for ci in self.rng.choice(len(self.req.space),
+                                                  size=n, replace=False)]
 
     def remaining(self) -> List[int]:
         return [i for i in range(len(self.req.space))
@@ -117,15 +187,33 @@ class _Session:
 class SearchService:
     """N concurrent tenant searches over one shared repository.
 
-    ``submit`` -> rid; ``step`` advances every active session one BO
-    iteration (admitting queued sessions into free slots first);
+    ``submit`` -> rid; ``step`` advances every READY session one BO
+    iteration (admitting queued sessions into free slots first) while
+    WAITING_PROFILE sessions' runs execute on the ``executor``;
     ``collect`` drains finished searches; ``run`` loops until idle.
+
+    ``wait_mode``:
+      - ``"any"`` (default): a step scores whichever sessions' profiling
+        results have landed; slow profilers never gate fast ones.
+      - ``"all"``: a step first waits for every in-flight run — the
+        synchronous round structure, but profiling runs still overlap
+        each other on the executor.
+    ``profile_timeout`` caps any blocking wait on the executor (seconds
+    of wall clock, or virtual ticks on the fake); ``None`` waits until
+    results land.
     """
 
     def __init__(self, repository: Optional[Repository] = None, *,
-                 slots: int = 8):
+                 slots: int = 8, executor=None, wait_mode: str = "any",
+                 profile_timeout: Optional[float] = None):
+        if wait_mode not in ("any", "all"):
+            raise ValueError(f"unknown wait_mode {wait_mode!r}")
         self.repo = repository if repository is not None else Repository()
         self.slots = slots
+        self.executor = executor if executor is not None \
+            else SyncProfileExecutor()
+        self.wait_mode = wait_mode
+        self.profile_timeout = profile_timeout
         self.queue: List[_Session] = []
         self.active: Dict[int, _Session] = {}
         self.done: List[SearchCompletion] = []
@@ -134,7 +222,8 @@ class SearchService:
         # support GPs depend on the encoder and the noise level only
         self._contexts: Dict[Tuple[Any, float], KarasuContext] = {}
         self.stats = {"steps": 0, "fit_batches": 0, "fit_jobs": 0,
-                      "iterations": 0}
+                      "iterations": 0, "rgpe_batches": 0, "rgpe_jobs": 0,
+                      "profile_waits": 0}
 
     # -- request lifecycle --------------------------------------------------
     def submit(self, req: SearchRequest) -> int:
@@ -145,7 +234,27 @@ class SearchService:
         self.queue.append(_Session(rid, req))
         return rid
 
-    def collect(self) -> List[SearchCompletion]:
+    def collect(self, *, wait: bool = False,
+                timeout: Optional[float] = None) -> List[SearchCompletion]:
+        """Drain finished searches. Non-blocking by default; with
+        ``wait=True`` steps the service until at least one search
+        finishes or ``timeout`` (seconds) elapses. A service with zero
+        submitted searches always returns ``[]`` immediately."""
+        if wait:
+            deadline = (None if timeout is None
+                        else time.monotonic() + timeout)
+            while not self.done and (self.queue or self.active):
+                if deadline is None:
+                    self.step()
+                    continue
+                left = deadline - time.monotonic()
+                if left <= 0:
+                    break
+                # cap the executor waits inside step() so the overall
+                # deadline is honored even while profilers are slow
+                cap = (left if self.profile_timeout is None
+                       else min(left, self.profile_timeout))
+                self.step(profile_timeout=cap)
         out, self.done = self.done, []
         return out
 
@@ -156,36 +265,80 @@ class SearchService:
                                               noise=session.cfg.noise)
         return self._contexts[k]
 
+    def close(self) -> None:
+        self.executor.shutdown()
+
+    # -- scheduling internals -----------------------------------------------
     def _admit(self) -> None:
         while self.queue and len(self.active) < self.slots:
             s = self.queue.pop(0)
-            s.admit(self.repo)
             self.active[s.rid] = s
+            for ci in s.init_candidates():
+                self.executor.submit(s.launch(ci, "init"),
+                                     s.req.profile_fn)
+
+    def _absorb(self, outcomes: List[ProfileOutcome]) -> None:
+        """Record a batch of outcomes. One tenant's profiling error must
+        not drop the rest of the batch (the executor already popped it),
+        so every outcome is recorded before the first error re-raises."""
+        errors: List[BaseException] = []
+        for out in outcomes:
+            try:
+                self.active[out.job.rid].record(out, self.repo)
+            except BaseException as e:          # noqa: BLE001 — re-raised
+                errors.append(e)
+        if errors:
+            raise errors[0]
 
     def _finish(self, s: _Session) -> None:
         del self.active[s.rid]
         self.done.append(SearchCompletion(s.rid, s.result()))
 
     # -- one scheduling round -----------------------------------------------
-    def step(self) -> int:
-        """Admit queued sessions, then advance each active session one BO
-        iteration with the target fits batched across tenants. Returns
-        the number of sessions advanced."""
-        self._admit()
-        self.stats["steps"] += 1
+    def step(self, *, profile_timeout: Optional[float] = None) -> int:
+        """Admit queued sessions, absorb landed profiling results, then
+        advance each READY session one BO iteration with the target fits
+        and RGPE weightings batched across tenants. Returns the number
+        of sessions whose next profiling run was launched.
+        ``profile_timeout`` overrides the service-level default for this
+        step's blocking executor waits (used by ``collect(wait=True)``
+        to honor its own deadline)."""
+        wait_t = (self.profile_timeout if profile_timeout is None
+                  else profile_timeout)
+        # one deadline for the WHOLE step: wait_mode="all" may wait twice
+        # (drain, then collect), and the budget must not double
+        deadline = (None if wait_t is None
+                    else time.monotonic() + wait_t)
 
-        ready: List[Tuple[_Session, List[int]]] = []
-        for s in list(self.active.values()):
-            if len(s.observations) >= s.cfg.max_iters:
-                self._finish(s)
-                continue
-            rem = s.remaining()
-            if not rem:
-                s.stopped_at = len(s.observations)
-                self._finish(s)
-                continue
-            ready.append((s, rem))
+        def left() -> Optional[float]:
+            return (None if deadline is None
+                    else max(0.0, deadline - time.monotonic()))
+
+        self.stats["steps"] += 1
+        self._admit()
+        self._absorb(self.executor.poll())
+        if self.wait_mode == "all" and self.executor.pending():
+            self._absorb(self.executor.drain(left()))
+
+        ready = self._ready_sessions()
+        if not ready and self.executor.pending():
+            # every active session is WAITING_PROFILE: block until at
+            # least one result lands rather than spinning
+            self.stats["profile_waits"] += 1
+            self._absorb(self.executor.collect(left()))
+            ready = self._ready_sessions()
+
+        # a session whose completed runs ALL errored has nothing to fit:
+        # re-admit it with a fresh random candidate instead of scoring
+        # (failed candidates stay reserved in `profiled`, never retried)
+        for s, rem in ready:
+            if not s.observations:
+                ci = rem[int(s.rng.integers(len(rem)))]
+                self.executor.submit(s.launch(ci, "init"),
+                                     s.req.profile_fn)
+        ready = [(s, rem) for s, rem in ready if s.observations]
         if not ready:
+            self._absorb(self.executor.poll())
             return 0
 
         posts = self._batched_posteriors([s for s, _ in ready])
@@ -203,18 +356,43 @@ class SearchService:
                 self._finish(s)
                 continue
 
-            s.profile(rem[int(np.argmax(acq))], self.repo)
+            self.executor.submit(s.launch(rem[int(np.argmax(acq))]),
+                                 s.req.profile_fn)
             advanced += 1
             self.stats["iterations"] += 1
-            if len(s.observations) >= s.cfg.max_iters:
+
+        # with a synchronous executor every launch has already landed;
+        # absorbing here preserves the one-step-one-iteration semantics
+        self._absorb(self.executor.poll())
+        for s in list(self.active.values()):
+            if s.state == READY and len(s.observations) >= s.cfg.max_iters:
                 self._finish(s)
         return advanced
+
+    def _ready_sessions(self) -> List[Tuple[_Session, List[int]]]:
+        """READY sessions that still have work, finishing exhausted ones
+        (max_iters reached or the whole space profiled)."""
+        out: List[Tuple[_Session, List[int]]] = []
+        for s in list(self.active.values()):
+            if s.state != READY:
+                continue
+            if len(s.observations) >= s.cfg.max_iters:
+                self._finish(s)
+                continue
+            rem = s.remaining()
+            if not rem:
+                s.stopped_at = len(s.observations)
+                self._finish(s)
+                continue
+            out.append((s, rem))
+        return out
 
     def _batched_posteriors(self, sessions: List[_Session]
                             ) -> Dict[int, Dict[str, Dict]]:
         """Fit every (session, measure) target GP in one vmapped batch
         per (space, noise) group and query the full candidate grid; then
-        overlay RGPE mixtures for karasu sessions."""
+        overlay RGPE mixtures for karasu sessions, ALL their ensembles
+        scored by one padded ranking-loss launch per kernel impl."""
         groups: Dict[Tuple[Any, float], List[_Session]] = {}
         posts: Dict[int, Dict[str, Dict]] = {}
         for s in sessions:
@@ -225,6 +403,8 @@ class SearchService:
                 continue
             groups.setdefault((s.space_key, s.cfg.noise), []).append(s)
 
+        # (session, measure, bases, WeightJob) across ALL groups
+        rgpe_jobs: List[Tuple[_Session, str, Any, WeightJob]] = []
         for (_, noise), group in groups.items():
             xs, ys, owners = [], [], []
             for s in group:
@@ -234,11 +414,12 @@ class SearchService:
                     ys.append(np.array([o.measures[m]
                                         for o in s.observations]))
                     owners.append((s, m))
-            # round the pad length up so jit shapes stay stable while the
-            # whole cohort grows (padding never changes results)
-            n_max = max(len(y) for y in ys)
-            n_max = ((n_max + 7) // 8) * 8
-            tgts = fit_gp_batched(xs, ys, noise=noise, n_max=n_max)
+            # pad the observation axis to multiples of 8 and the job axis
+            # to a power of two: async cohorts vary step to step, and
+            # stable shapes keep the vmapped fit from recompiling
+            # (padding never changes results)
+            tgts = fit_gp_batched(xs, ys, noise=noise, round_to=8,
+                                  m_round_pow2=True)
             self.stats["fit_batches"] += 1
             self.stats["fit_jobs"] += len(owners)
 
@@ -252,12 +433,27 @@ class SearchService:
 
             for s in group:
                 if s.req.method == "karasu":
-                    self._overlay_rgpe(s, tgts, owners, posts[s.rid])
+                    rgpe_jobs.extend(self._rgpe_jobs(s, tgts, owners))
+
+        # ONE padded ranking-loss launch for every ensemble of the step
+        # (per kernel impl — sessions normally share one)
+        by_impl: Dict[str, List[int]] = {}
+        for idx, (s, *_rest) in enumerate(rgpe_jobs):
+            by_impl.setdefault(s.cfg.kernel_impl, []).append(idx)
+        for impl, idxs in by_impl.items():
+            ws = KarasuContext.score_ensembles(
+                [rgpe_jobs[i][3] for i in idxs], impl=impl)
+            self.stats["rgpe_batches"] += 1
+            self.stats["rgpe_jobs"] += len(idxs)
+            for i, w in zip(idxs, ws):
+                s, m, bases, _job = rgpe_jobs[i]
+                self._mix_rgpe(s, m, bases, w, posts[s.rid])
         return posts
 
-    def _overlay_rgpe(self, s: _Session, tgts, owners, post) -> None:
-        """Replace a karasu session's plain target posteriors with the
-        RGPE mixture built from the shared support store."""
+    def _rgpe_jobs(self, s: _Session, tgts, owners
+                   ) -> List[Tuple[_Session, str, Any, WeightJob]]:
+        """Queue one weighting job per measure whose support stack is
+        usable; key split matches the sequential path exactly."""
         ctx = self.context_for(s)
         # a tenant must never pick its own published runs as "support":
         # they would score ~1.0 against themselves and sidestep the LOO
@@ -268,26 +464,31 @@ class SearchService:
             impl=s.cfg.kernel_impl, exclude=exclude)
         s.meta["selected"].append([z for z, _ in selected])
         if not selected:
-            return
+            return []
         it = len(s.observations)
         job_of = {m: ji for ji, (o, m) in enumerate(owners) if o is s}
+        jobs = []
         for mi, m in enumerate(s.measures):
             bases, _ids = ctx.store.get_stacked([z for z, _ in selected], m)
             if bases is None:
                 continue
-            tgt = tgts.extract(job_of[m])
-            w = compute_weights_batched(
-                bases, tgt, jax.random.fold_in(
-                    jax.random.fold_in(s.key, it), mi),
-                n_samples=s.cfg.rgpe_samples, impl=s.cfg.kernel_impl)
-            mu_b, var_b = batched_posterior(bases, s.xq_all)
-            wb, wt = w[:-1, None], w[-1]
-            mu = (wb * mu_b).sum(0) + wt * post[m]["mu"]
-            var = ((wb ** 2) * var_b).sum(0) + (wt ** 2) * post[m]["var"]
-            post[m] = {"mu": mu, "var": np.maximum(np.asarray(var), 1e-10),
-                       "y_mean": post[m]["y_mean"],
-                       "y_std": post[m]["y_std"],
-                       "weights": np.asarray(w)}
+            key = jax.random.fold_in(jax.random.fold_in(s.key, it), mi)
+            jobs.append((s, m, bases,
+                         WeightJob(bases, tgts.extract(job_of[m]), key,
+                                   s.cfg.rgpe_samples)))
+        return jobs
+
+    def _mix_rgpe(self, s: _Session, m: str, bases, w, post) -> None:
+        """Replace one (session, measure) plain target posterior with the
+        RGPE mixture built from the shared support store."""
+        mu_b, var_b = batched_posterior(bases, s.xq_all)
+        wb, wt = w[:-1, None], w[-1]
+        mu = (wb * mu_b).sum(0) + wt * post[m]["mu"]
+        var = ((wb ** 2) * var_b).sum(0) + (wt ** 2) * post[m]["var"]
+        post[m] = {"mu": mu, "var": np.maximum(np.asarray(var), 1e-10),
+                   "y_mean": post[m]["y_mean"],
+                   "y_std": post[m]["y_std"],
+                   "weights": np.asarray(w)}
 
     # -- driver -------------------------------------------------------------
     def run(self, max_steps: int = 10_000) -> List[SearchCompletion]:

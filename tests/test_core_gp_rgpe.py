@@ -4,8 +4,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import build_ensemble, compute_weights, ensemble_posterior, fit_gp
-from repro.core.gp import gp_loo_samples, gp_posterior, gp_posterior_raw, gp_sample
+from repro.core import (WeightJob, build_ensemble, compute_weights,
+                        compute_weights_batched, compute_weights_multi,
+                        ensemble_posterior, fit_gp)
+from repro.core.gp import (gp_loo_samples, gp_posterior, gp_posterior_raw,
+                           gp_sample, stack_gps)
 
 
 def _surface(x):
@@ -81,3 +84,48 @@ def test_loo_samples_shape():
     s = gp_loo_samples(gp, jax.random.PRNGKey(0), 32)
     assert s.shape == (32, 7)
     assert bool(jnp.all(jnp.isfinite(s)))
+
+
+def test_compute_weights_multi_matches_per_ensemble_path():
+    """The cross-tenant scorer (one padded ranking-loss launch for many
+    ensembles, ragged n_obs and m) must reproduce compute_weights_batched
+    per ensemble to <= 1e-4 — including the n_obs < 2 uniform-weight
+    short-circuit."""
+    rng = np.random.default_rng(7)
+    jobs, want = [], []
+    # heterogeneous: (n_bases, n_target_obs) incl. a single-obs target
+    for j, (nb, nt) in enumerate([(2, 6), (3, 9), (1, 4), (2, 1)]):
+        bases = []
+        for i in range(nb):
+            xb = rng.random((10 + i, 2))
+            bases.append(fit_gp(xb, _surface(xb)))
+        xt = rng.random((nt, 2))
+        tgt = fit_gp(xt, _surface(xt))
+        stack = stack_gps(bases)
+        key = jax.random.PRNGKey(j)
+        jobs.append(WeightJob(stack, tgt, key, n_samples=128))
+        want.append(compute_weights_batched(stack, tgt, key,
+                                            n_samples=128))
+    got = compute_weights_multi(jobs)
+    assert len(got) == len(want)
+    for w_got, w_want in zip(got, want):
+        np.testing.assert_allclose(np.asarray(w_got), np.asarray(w_want),
+                                   atol=1e-4)
+        np.testing.assert_allclose(float(jnp.sum(w_got)), 1.0, atol=1e-5)
+
+
+def test_compute_weights_multi_ragged_sample_counts():
+    """Jobs may carry different n_samples (per-tenant rgpe_samples)."""
+    rng = np.random.default_rng(8)
+    jobs, want = [], []
+    for j, s in enumerate([64, 96]):
+        xb = rng.random((12, 2))
+        stack = stack_gps([fit_gp(xb, _surface(xb))])
+        xt = rng.random((5, 2))
+        tgt = fit_gp(xt, _surface(xt))
+        key = jax.random.PRNGKey(10 + j)
+        jobs.append(WeightJob(stack, tgt, key, n_samples=s))
+        want.append(compute_weights_batched(stack, tgt, key, n_samples=s))
+    for w_got, w_want in zip(compute_weights_multi(jobs), want):
+        np.testing.assert_allclose(np.asarray(w_got), np.asarray(w_want),
+                                   atol=1e-4)

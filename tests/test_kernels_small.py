@@ -7,7 +7,11 @@ from scipy.stats import pearsonr
 
 from repro.kernels.matern import matern52, matern52_ref
 from repro.kernels.pairwise_pearson import pairwise_pearson
-from repro.kernels.ranking_loss import ranking_loss, ranking_loss_ref
+from repro.kernels.ranking_loss import (ranking_loss, ranking_loss_padded,
+                                        ranking_loss_padded_ref,
+                                        ranking_loss_ref)
+
+IMPLS = ["xla", "pallas_interpret"]
 
 
 @pytest.mark.parametrize("m,n,d", [(5, 7, 3), (37, 53, 7), (130, 64, 18)])
@@ -39,6 +43,29 @@ def test_pearson_vs_scipy(m, n, d):
         np.testing.assert_allclose(r, exp, atol=1e-5, err_msg=impl)
 
 
+@pytest.mark.parametrize("m,n", [(1, 18), (3, 1), (2, 2)])
+def test_pearson_edge_shapes_impls_agree(m, n):
+    """Single-row batches on either side: implementations must agree on
+    the shapes Algorithm-1 hits with tiny target histories."""
+    rng = np.random.default_rng(3)
+    a, b = rng.normal(size=(m, 6)), rng.normal(size=(n, 6))
+    ref = np.asarray(pairwise_pearson(jnp.array(a), jnp.array(b)))
+    got = np.asarray(pairwise_pearson(jnp.array(a), jnp.array(b),
+                                      impl="pallas_interpret"))
+    np.testing.assert_allclose(got, ref, atol=1e-5)
+
+
+def test_pearson_constant_row_is_finite():
+    """A zero-variance metric vector must yield a finite (clamped)
+    correlation, not NaN/inf, in both implementations."""
+    a = np.ones((2, 8)) * 5.0               # constant rows
+    b = np.random.default_rng(0).normal(size=(3, 8))
+    for impl in IMPLS:
+        r = np.asarray(pairwise_pearson(jnp.array(a), jnp.array(b),
+                                        impl=impl))
+        assert np.all(np.isfinite(r)), impl
+
+
 @pytest.mark.parametrize("s,n", [(7, 5), (19, 11), (200, 20)])
 def test_ranking_loss_vs_bruteforce(s, n):
     p = jax.random.normal(jax.random.PRNGKey(0), (s, n))
@@ -53,3 +80,78 @@ def test_ranking_loss_vs_bruteforce(s, n):
     np.testing.assert_array_equal(ref, brute)
     pi = np.asarray(ranking_loss(p, y, impl="pallas_interpret"))
     np.testing.assert_array_equal(pi, brute)
+
+
+def test_ranking_loss_single_observation_is_zero():
+    """n_obs=1 has no rankable pair: loss must be 0, not garbage, in
+    every implementation (the RGPE short-circuit relies on callers, but
+    the kernel itself must still be well-defined)."""
+    p = jax.random.normal(jax.random.PRNGKey(0), (9, 1))
+    y = jnp.array([3.0])
+    for impl in IMPLS:
+        np.testing.assert_array_equal(
+            np.asarray(ranking_loss(p, y, impl=impl)), np.zeros(9, int),
+            err_msg=impl)
+
+
+def test_ranking_loss_all_tied_targets():
+    """All-tied y: no pair satisfies y[j] < y[k], so the loss is exactly
+    the number of strictly ordered prediction pairs."""
+    s, n = 13, 6
+    p = jax.random.normal(jax.random.PRNGKey(2), (s, n))
+    y = jnp.full((n,), 2.5)
+    pn = np.asarray(p)
+    want = np.array([(pn[i][:, None] < pn[i][None, :]).sum()
+                     for i in range(s)])
+    for impl in IMPLS:
+        np.testing.assert_array_equal(
+            np.asarray(ranking_loss(p, y, impl=impl)), want, err_msg=impl)
+
+
+def _ragged_batch(problems):
+    """Pack [(preds (S,n), y (n,)), ...] into padded (R, n_max) arrays."""
+    n_max = max(p.shape[1] for p, _ in problems)
+    P = np.concatenate([np.pad(p, ((0, 0), (0, n_max - p.shape[1])))
+                        for p, _ in problems])
+    Y = np.concatenate([np.pad(np.broadcast_to(y, p.shape),
+                               ((0, 0), (0, n_max - p.shape[1])))
+                        for p, y in problems])
+    NV = np.concatenate([np.full(p.shape[0], p.shape[1], np.int32)
+                         for p, _ in problems])
+    return jnp.array(P), jnp.array(Y), jnp.array(NV)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_ranking_loss_padded_matches_per_problem(impl):
+    """The ragged batch entry point must reproduce per-problem
+    ranking_loss exactly, including n_obs=1 and all-tied-y rows."""
+    rng = np.random.default_rng(0)
+    problems = [
+        (rng.normal(size=(5, 7)), rng.normal(size=7)),
+        (rng.normal(size=(4, 1)), rng.normal(size=1)),       # n_obs = 1
+        (rng.normal(size=(6, 9)), np.full(9, 1.0)),          # all tied
+        (rng.normal(size=(3, 20)), rng.normal(size=20)),
+    ]
+    P, Y, NV = _ragged_batch(problems)
+    got = np.asarray(ranking_loss_padded(P, Y, NV, impl=impl))
+    off = 0
+    for p, y in problems:
+        want = np.asarray(ranking_loss(jnp.array(p), jnp.array(y)))
+        np.testing.assert_array_equal(got[off:off + p.shape[0]], want,
+                                      err_msg=impl)
+        off += p.shape[0]
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_ranking_loss_padded_fully_masked_rows(impl):
+    """Rows with n_valid = 0 (pure padding) must count zero pairs no
+    matter what values sit in the padded sample/target slots."""
+    rng = np.random.default_rng(1)
+    P = jnp.array(rng.normal(size=(11, 8)) * 1e6)
+    Y = jnp.array(rng.normal(size=(11, 8)))
+    nv = np.zeros(11, np.int32)
+    nv[::3] = 8                            # interleave some live rows
+    got = np.asarray(ranking_loss_padded(P, Y, jnp.array(nv), impl=impl))
+    assert (got[nv == 0] == 0).all()
+    ref = np.asarray(ranking_loss_padded_ref(P, Y, jnp.array(nv)))
+    np.testing.assert_array_equal(got, ref)

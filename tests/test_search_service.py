@@ -1,9 +1,15 @@
-"""Multi-tenant SearchService: batching, shared cache, serving semantics."""
+"""Multi-tenant SearchService: batching, shared cache, serving semantics,
+async profiling (ProfileExecutor backends + WAITING_PROFILE overlap)."""
+import threading
+
 import numpy as np
 import pytest
 
 from repro.core import (BOConfig, Constraint, Objective, Repository,
                         run_search, scout_search_space)
+from repro.serve.profile_executor import (FakeProfileExecutor, ProfileJob,
+                                          SyncProfileExecutor,
+                                          ThreadPoolProfileExecutor)
 from repro.serve.search_service import (SearchRequest, SearchService)
 from repro.simdata import make_emulator
 
@@ -134,3 +140,191 @@ def test_service_rejects_unknown_method():
     svc = SearchService()
     with pytest.raises(ValueError):
         svc.submit(_request(0, method="bogus"))
+
+
+def test_service_rejects_unknown_wait_mode():
+    with pytest.raises(ValueError):
+        SearchService(wait_mode="bogus")
+
+
+def test_collect_empty_service_returns_immediately():
+    """Regression: collect() on a service with zero submitted searches
+    must return [] instead of blocking or raising — with and without
+    wait semantics, for every executor backend."""
+    for executor in (None, SyncProfileExecutor(),
+                     ThreadPoolProfileExecutor(max_workers=1),
+                     FakeProfileExecutor()):
+        svc = SearchService(executor=executor)
+        assert svc.collect() == []
+        assert svc.collect(wait=True) == []          # must not block
+        assert svc.collect(wait=True, timeout=0.01) == []
+        svc.close()
+
+
+def _noise_free_request(seed, *, method="naive", max_iters=6,
+                        barrier=None):
+    """profile_fn without shared RNG state: safe to call from executor
+    threads in any order, so sync and async services see identical data."""
+    def fn(c):
+        out = EMU.run(WID, c, rng=None)
+        if barrier is not None:
+            barrier.wait(timeout=30)
+        return out
+    return SearchRequest(SPACE, fn, Objective("cost"),
+                         [Constraint("runtime", RT)], method=method,
+                         bo_config=BOConfig(max_iters=max_iters), seed=seed)
+
+
+def _result_fingerprint(res):
+    return (tuple(tuple(sorted(o.config.items())) for o in res.observations),
+            tuple(tuple(sorted(o.measures.items()))
+                  for o in res.observations),
+            tuple(res.best_index_per_iter), res.stopped_at)
+
+
+def test_async_threadpool_bitwise_matches_sync():
+    """Thread-pool execution with a barrier forcing each round's arrival
+    order must produce bitwise-identical BOResults to the synchronous
+    path: same configs, same measures, same incumbents."""
+    n = 3
+    sync_svc = SearchService(Repository(), slots=n)
+    for s in range(n):
+        sync_svc.submit(_noise_free_request(s))
+    sync_done = {c.rid: c.result for c in sync_svc.run()}
+
+    # all n tenants advance in lockstep (same max_iters, no early stop),
+    # so every wave is exactly n profiling runs: a Barrier(n) holds each
+    # wave's results back until all have executed, forcing arrival order
+    barrier = threading.Barrier(n)
+    async_svc = SearchService(
+        Repository(), slots=n,
+        executor=ThreadPoolProfileExecutor(max_workers=n),
+        wait_mode="all")
+    for s in range(n):
+        async_svc.submit(_noise_free_request(s, barrier=barrier))
+    async_done = {c.rid: c.result for c in async_svc.run()}
+    async_svc.close()
+
+    assert sorted(sync_done) == sorted(async_done)
+    for rid in sync_done:
+        assert (_result_fingerprint(sync_done[rid])
+                == _result_fingerprint(async_done[rid])), rid
+
+
+def test_async_fake_executor_overlaps_heterogeneous_latencies():
+    """With per-tenant latencies of 1..4 virtual ticks and wait_mode
+    'any', fast sessions keep stepping while slow profilers are in
+    flight (WAITING_PROFILE), and every session still completes its
+    full budget with the same per-session data as the sync path."""
+    n = 4
+    latency = {rid: rid + 1 for rid in range(n)}
+    exe = FakeProfileExecutor(lambda job: latency[job.rid])
+    svc = SearchService(Repository(), slots=n, executor=exe,
+                        wait_mode="any")
+    for s in range(n):
+        svc.submit(_noise_free_request(s, max_iters=5))
+    done = {c.rid: c.result for c in svc.run()}
+    assert sorted(done) == list(range(n))
+    for res in done.values():
+        assert len(res.observations) == 5
+    # the service had to block on stragglers at least once...
+    assert svc.stats["profile_waits"] > 0
+    # ...and virtual time advanced instead of wall-clock sleeping
+    assert exe.ticks > 0
+
+    # per-session trajectories match a synchronous service: overlap must
+    # not change WHAT a session profiles, only WHEN results land
+    sync_svc = SearchService(Repository(), slots=n)
+    for s in range(n):
+        sync_svc.submit(_noise_free_request(s, max_iters=5))
+    sync_done = {c.rid: c.result for c in sync_svc.run()}
+    for rid in done:
+        assert (_result_fingerprint(done[rid])
+                == _result_fingerprint(sync_done[rid])), rid
+
+
+def test_profile_executor_error_propagates():
+    def boom(c):
+        raise RuntimeError("cluster fell over")
+    svc = SearchService(Repository(), slots=1)
+    svc.submit(SearchRequest(SPACE, boom, Objective("cost"), [],
+                             bo_config=BOConfig(max_iters=4), seed=0))
+    with pytest.raises(RuntimeError, match="cluster fell over"):
+        svc.run()
+    # the erroring session is settled, not wedged in WAITING_PROFILE:
+    # every failed run decremented inflight before raising
+    assert all(s.inflight == 0 for s in svc.active.values())
+
+
+def test_session_error_does_not_strand_held_outcomes():
+    """An errored outcome must not stop the drain of later outcomes the
+    executor already handed over, nor leave the session WAITING."""
+    from repro.serve.profile_executor import ProfileOutcome
+    from repro.serve.search_service import READY, _Session
+    s = _Session(0, _noise_free_request(0))
+    j0, j1 = s.launch(10), s.launch(11)
+    meas, metr = EMU.run(WID, SPACE.configs[11], rng=None)
+    # seq 1 lands first and is held back behind outstanding seq 0
+    s.record(ProfileOutcome(j1, meas, metr), None)
+    assert s.observations == [] and s.inflight == 2
+    # then seq 0 lands with an error: raise, but drain seq 1 and settle
+    with pytest.raises(RuntimeError, match="boom"):
+        s.record(ProfileOutcome(j0, error=RuntimeError("boom")), None)
+    assert len(s.observations) == 1
+    assert s.inflight == 0 and s.state == READY
+
+
+def test_fake_executor_fractional_timeout_progresses():
+    """A sub-tick timeout must still advance the virtual clock (ceil),
+    not busy-spin with a zero tick budget."""
+    exe = FakeProfileExecutor(lambda job: 1)
+    exe.submit(ProfileJob(0, 0, {}),
+               lambda c: ({"cost": 1.0}, np.zeros((6, 5))))
+    assert len(exe.collect(timeout=0.5)) == 1
+    assert exe.ticks == 1
+
+
+def test_collect_wait_timeout_honored_with_slow_profiler():
+    """collect(wait=True, timeout=...)'s deadline must cap the executor
+    waits inside step(), not just be checked between steps."""
+    import time as _t
+
+    def slow(c):
+        _t.sleep(1.5)
+        return EMU.run(WID, c, rng=None)
+
+    svc = SearchService(Repository(), slots=1,
+                        executor=ThreadPoolProfileExecutor(max_workers=1))
+    svc.submit(SearchRequest(SPACE, slow, Objective("cost"), [],
+                             bo_config=BOConfig(n_init=1, max_iters=3),
+                             seed=0))
+    t0 = _t.monotonic()
+    assert svc.collect(wait=True, timeout=0.3) == []
+    assert _t.monotonic() - t0 < 1.2    # returned before the 1.5 s run
+    svc.close()
+
+    # wait_mode="all" makes TWO executor waits per step (drain, then
+    # collect); they must share one deadline, not double it
+    svc2 = SearchService(Repository(), slots=1, wait_mode="all",
+                         executor=ThreadPoolProfileExecutor(max_workers=1))
+    svc2.submit(SearchRequest(SPACE, slow, Objective("cost"), [],
+                              bo_config=BOConfig(n_init=1, max_iters=3),
+                              seed=0))
+    t0 = _t.monotonic()
+    assert svc2.collect(wait=True, timeout=0.3) == []
+    assert _t.monotonic() - t0 < 1.0
+    svc2.close()
+
+
+def test_service_cross_tenant_rgpe_batched_in_one_call():
+    """All (tenant, measure) karasu ensembles of a step go through ONE
+    padded ranking-loss launch: rgpe_batches counts steps (per kernel
+    impl), not tenants x measures."""
+    repo = _support_repo()
+    svc = SearchService(repo, slots=4)
+    for s in range(4):
+        svc.submit(_request(s, method="karasu"))
+    svc.run()
+    assert svc.stats["rgpe_jobs"] > svc.stats["rgpe_batches"]
+    # 3 scoring steps (obs 3 -> 6), one batch each
+    assert svc.stats["rgpe_batches"] == 3
