@@ -23,6 +23,20 @@ overlap their cluster runs while landed sessions keep fitting:
   search_service_sync_profilers   — us per tenant-iteration
   search_service_async_profilers  — us per tenant-iteration
   search_service_async_speedup    — derived (acceptance: >= 2.0)
+
+With ``--moo`` it measures the fused posterior/acquisition query plan on
+a mixed single-objective + multi-objective karasu cohort: the fused
+service (one padded batched_posterior launch per step + vectorised
+MC-EHVI) vs ``fuse_posteriors=False`` (per-ensemble posterior loop +
+per-candidate EHVI reference):
+  search_service_moo_loop     — per-session-loop path, us/tenant-iter
+  search_service_moo_fused    — fused query plan,      us/tenant-iter
+  search_service_moo_speedup  — derived (acceptance: >= 2.0 at 8 tenants)
+
+With ``--smoke`` it runs a tiny mixed cohort (3 tenants incl. one MOO,
+4 iterations) end to end and asserts completion — the CPU CI hook that
+fails fast when the serving path regresses, instead of waiting for the
+weekly slow job.
 """
 from __future__ import annotations
 
@@ -163,7 +177,104 @@ def slow_profilers() -> None:
            f"{sync_s / async_s:.2f}")
 
 
+def _moo_mixed_requests(sp, tenants, targets, max_iters, *, n_mc=32):
+    """Every other tenant is multi-objective (cost x energy under the
+    runtime constraint); the rest single-objective. All karasu, so the
+    fused plan carries targets AND support stacks for both kinds."""
+    reqs = []
+    for t, wid in enumerate(tenants):
+        cons = [Constraint("runtime", targets[wid])]
+        if t % 2 == 1:
+            reqs.append(SearchRequest(
+                sp, C.profile_fn(wid, t), None, cons, method="karasu",
+                bo_config=BOConfig(max_iters=max_iters), seed=t,
+                objectives=[Objective("cost"), Objective("energy")],
+                n_mc=n_mc))
+        else:
+            reqs.append(SearchRequest(
+                sp, C.profile_fn(wid, t), Objective("cost"), cons,
+                method="karasu", bo_config=BOConfig(max_iters=max_iters),
+                seed=t))
+    return reqs
+
+
+def _service_moo(sp, tenants, repo, targets, max_iters, *,
+                 fuse: bool) -> float:
+    svc = SearchService(repo, slots=len(tenants), fuse_posteriors=fuse)
+    for req in _moo_mixed_requests(sp, tenants, targets, max_iters):
+        svc.submit(req)
+    t0 = time.time()
+    done = svc.run()
+    assert len(done) == len(tenants)
+    return time.time() - t0
+
+
+def moo_mixed() -> None:
+    """Fused query plan vs per-session-loop posteriors on a mixed
+    SO+MOO karasu cohort (the ISSUE-3 acceptance scenario)."""
+    n_tenants = 8
+    max_iters = MAX_ITERS.get(C.SCALE, 10)
+    sp, tenants, repo, targets = _setup(n_tenants)
+    iters_total = n_tenants * max_iters
+
+    # untimed jit warmup at the timed shapes for both paths
+    warm = min(6, max_iters)
+    _service_moo(sp, tenants, _fresh_repo(repo), targets, warm, fuse=True)
+    _service_moo(sp, tenants, _fresh_repo(repo), targets, warm, fuse=False)
+
+    loop_s = _service_moo(sp, tenants, _fresh_repo(repo), targets,
+                          max_iters, fuse=False)
+    fused_s = _service_moo(sp, tenants, _fresh_repo(repo), targets,
+                           max_iters, fuse=True)
+
+    C.emit("search_service_moo_loop", loop_s * 1e6 / iters_total,
+           f"{n_tenants}tenants")
+    C.emit("search_service_moo_fused", fused_s * 1e6 / iters_total,
+           f"{n_tenants}tenants")
+    C.emit("search_service_moo_speedup", 0.0, f"{loop_s / fused_s:.2f}")
+
+
+def smoke() -> None:
+    """CI smoke: a 3-tenant mixed cohort (naive SO, karasu SO, karasu
+    MOO) over 4 iterations must complete, fuse its posteriors, and
+    produce a Pareto front — fast enough for the tier-1 CPU job."""
+    sp, tenants, repo, targets = _setup(3)
+    max_iters = 4
+    svc = SearchService(_fresh_repo(repo), slots=3)
+    wid0, wid1, wid2 = tenants[:3]
+    svc.submit(SearchRequest(
+        sp, C.profile_fn(wid0, 0), Objective("cost"),
+        [Constraint("runtime", targets[wid0])], method="naive",
+        bo_config=BOConfig(max_iters=max_iters), seed=0))
+    svc.submit(SearchRequest(
+        sp, C.profile_fn(wid1, 1), Objective("cost"),
+        [Constraint("runtime", targets[wid1])], method="karasu",
+        bo_config=BOConfig(max_iters=max_iters), seed=1))
+    svc.submit(SearchRequest(
+        sp, C.profile_fn(wid2, 2), None,
+        [Constraint("runtime", targets[wid2])], method="karasu",
+        bo_config=BOConfig(max_iters=max_iters), seed=2,
+        objectives=[Objective("cost"), Objective("energy")], n_mc=8))
+    t0 = time.time()
+    done = {c.rid: c.result for c in svc.run()}
+    dt = time.time() - t0
+    assert sorted(done) == [0, 1, 2], done
+    for res in done.values():
+        assert len(res.observations) == max_iters
+    assert done[2].meta["moo"] is True
+    assert len(done[2].meta["pareto_front"]) >= 1
+    assert svc.stats["posterior_batches"] >= 1, svc.stats
+    C.emit("search_service_smoke", dt * 1e6 / (3 * max_iters), "ok")
+
+
 def main() -> None:
+    if "--smoke" in sys.argv[1:]:
+        smoke()
+        return
+    if "--moo" in sys.argv[1:] or \
+            os.environ.get("REPRO_BENCH_MOO") == "1":
+        moo_mixed()
+        return
     if "--slow-profilers" in sys.argv[1:] or \
             os.environ.get("REPRO_BENCH_SLOW_PROFILERS") == "1":
         slow_profilers()

@@ -10,14 +10,16 @@ from .aggregation import SAR_METRICS, aggregate_metrics
 from .bo import BOConfig, KarasuContext, run_search
 from .encoding import (SearchSpace, aws_search_space, scout_search_space,
                        tpu_search_space)
-from .gp import (GP, BatchedGP, batched_posterior, batched_sample, fit_gp,
-                 fit_gp_batched, gp_posterior, gp_posterior_raw, stack_gps)
+from .gp import (GP, BatchedGP, batched_posterior, batched_posterior_multi,
+                 batched_sample, fit_gp, fit_gp_batched, gp_posterior,
+                 gp_posterior_raw, stack_gps)
 from .moo import pareto_of_result, run_search_moo
 from .repository import Repository, SupportModelStore
 from .rgpe import (BatchedEnsemble, Ensemble, WeightJob, build_ensemble,
                    build_ensemble_batched, compute_weights,
                    compute_weights_batched, compute_weights_multi,
-                   ensemble_posterior, ensemble_posterior_batched)
+                   ensemble_posterior, ensemble_posterior_batched,
+                   mix_weighted)
 from .selection import CandidateIndex, select_similar, select_similar_batched
 from .types import BOResult, Constraint, Objective, Observation, RunRecord
 
@@ -25,13 +27,15 @@ __all__ = [
     "SAR_METRICS", "aggregate_metrics", "BOConfig", "KarasuContext",
     "run_search", "SearchSpace", "aws_search_space", "scout_search_space",
     "tpu_search_space", "GP", "BatchedGP", "batched_posterior",
-    "batched_sample", "fit_gp", "fit_gp_batched", "gp_posterior",
-    "gp_posterior_raw", "stack_gps", "pareto_of_result", "run_search_moo",
+    "batched_posterior_multi", "batched_sample", "fit_gp", "fit_gp_batched",
+    "gp_posterior", "gp_posterior_raw", "stack_gps", "pareto_of_result",
+    "run_search_moo",
     "Repository", "SupportModelStore", "BatchedEnsemble", "Ensemble",
     "WeightJob", "build_ensemble", "build_ensemble_batched",
     "compute_weights", "compute_weights_batched", "compute_weights_multi",
     "ensemble_posterior",
-    "ensemble_posterior_batched", "CandidateIndex", "select_similar",
+    "ensemble_posterior_batched",
+    "mix_weighted", "CandidateIndex", "select_similar",
     "select_similar_batched", "BOResult", "Constraint", "Objective",
     "Observation", "RunRecord",
 ]

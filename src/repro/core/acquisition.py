@@ -23,10 +23,21 @@ def _Phi(z):
     return 0.5 * (1.0 + jax.scipy.special.erf(z / jnp.sqrt(2.0)))
 
 
+VAR_FLOOR = 1e-12   # degenerate posteriors (var=0 at an observed point
+                    # with tiny noise) must yield 0/finite EI, never NaN
+
+
+def feasible(obs, constraints: Sequence) -> bool:
+    """THE constraint-satisfaction rule (duck-typed over
+    ``core.types.Observation``): every acquisition's feasible set and
+    every reported Pareto front apply this one predicate."""
+    return all(obs.measures[c.name] <= c.upper_bound for c in constraints)
+
+
 def expected_improvement(mu: jnp.ndarray, var: jnp.ndarray,
                          best: jnp.ndarray) -> jnp.ndarray:
     """Closed-form EI for minimization."""
-    sigma = jnp.sqrt(var)
+    sigma = jnp.sqrt(jnp.maximum(var, VAR_FLOOR))
     z = (best - mu) / sigma
     ei = sigma * (z * _Phi(z) + _phi(z))
     return jnp.maximum(ei, 0.0)
@@ -41,7 +52,7 @@ def mc_expected_improvement(samples: jnp.ndarray, best: float
 def probability_of_feasibility(mu: jnp.ndarray, var: jnp.ndarray,
                                upper_bound: float) -> jnp.ndarray:
     """P(measure <= upper_bound) under the (Gaussian) constraint model."""
-    return _Phi((upper_bound - mu) / jnp.sqrt(var))
+    return _Phi((upper_bound - mu) / jnp.sqrt(jnp.maximum(var, VAR_FLOOR)))
 
 
 def constrained_ei(mu_obj, var_obj, best,
@@ -87,9 +98,26 @@ def pareto_front(points: np.ndarray) -> np.ndarray:
     return points[keep]
 
 
+def pareto_of_observations(observations, objectives,
+                           constraints: Sequence = ()) -> np.ndarray:
+    """Feasible non-dominated (k, 2) objective points of a profiling
+    history (duck-typed over ``core.types.Observation``). The one
+    front-extraction rule shared by ``pareto_of_result`` and the
+    serving layer's MOO completions."""
+    pts = np.array([[o.measures[objectives[0].name],
+                     o.measures[objectives[1].name]]
+                    for o in observations if feasible(o, constraints)])
+    if len(pts) == 0:
+        return np.empty((0, 2))
+    return pareto_front(pts)
+
+
 def mc_ehvi(samples_a: np.ndarray, samples_b: np.ndarray,
             observed: np.ndarray, ref: np.ndarray) -> np.ndarray:
-    """MC expected hypervolume improvement for 2 objectives.
+    """MC expected hypervolume improvement for 2 objectives — reference
+    per-candidate loop (one ``_hv_2d`` per sample x candidate). The
+    serving path uses ``mc_ehvi_batched``, which this stays the oracle
+    for.
 
     samples_a/b: (S, q) posterior draws per objective; observed: (n, 2)
     current observations; ref: (2,) reference point. Returns (q,)."""
@@ -105,3 +133,47 @@ def mc_ehvi(samples_a: np.ndarray, samples_b: np.ndarray,
             gain += max(hv1 - hv0, 0.0)
         out[j] = gain / s
     return out
+
+
+def _staircase(front: np.ndarray, ref: np.ndarray
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """The staircase lower envelope of a 2-D front as segments.
+
+    Returns ``(lefts, rights, heights)`` of k+1 x-intervals: left of the
+    first vertex nothing is dominated (height +inf); between vertices i
+    and i+1 the dominated region starts at y_i; right of the last vertex
+    it stays at y_k. Points outside ``ref`` cannot dominate anything in
+    the reference box and are dropped; duplicate / tied points collapse
+    onto one step."""
+    pts = np.asarray(front, dtype=np.float64).reshape(-1, 2)
+    pts = pts[np.all(pts <= ref, axis=1)]
+    if len(pts):
+        pts = pts[np.lexsort((pts[:, 1], pts[:, 0]))]
+        env = np.minimum.accumulate(pts[:, 1])
+        keep = np.ones(len(pts), dtype=bool)
+        keep[1:] = env[1:] < env[:-1]       # strictly lower step only
+        pts = np.column_stack([pts[:, 0], env])[keep]
+    xs, ys = pts[:, 0], pts[:, 1]
+    lefts = np.concatenate([[-np.inf], xs])
+    rights = np.concatenate([xs, [np.inf]])
+    heights = np.concatenate([[np.inf], ys])
+    return lefts, rights, heights
+
+
+def mc_ehvi_batched(samples_a: np.ndarray, samples_b: np.ndarray,
+                    observed: np.ndarray, ref: np.ndarray) -> np.ndarray:
+    """Vectorised twin of ``mc_ehvi``: every (sample, candidate) point's
+    exclusive hypervolume contribution in one broadcast over the
+    staircase segments, no Python loop.
+
+    The area a point p adds to the dominated region is, per staircase
+    segment, (x-overlap of [p_a, ref_a] with the segment) x (clipped
+    height min(seg_y, ref_b) - p_b) — zero automatically when p lies
+    outside the reference box or is dominated by the front."""
+    lefts, rights, heights = _staircase(pareto_front(observed), ref)
+    pa = np.asarray(samples_a, dtype=np.float64)[..., None]   # (S, q, 1)
+    pb = np.asarray(samples_b, dtype=np.float64)[..., None]
+    w = np.clip(np.minimum(rights, ref[0]) - np.maximum(lefts, pa),
+                0.0, None)
+    h = np.clip(np.minimum(heights, ref[1]) - pb, 0.0, None)
+    return np.sum(w * h, axis=-1).mean(axis=0)

@@ -20,14 +20,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .acquisition import (constrained_ei, expected_improvement,
+from .acquisition import (constrained_ei, expected_improvement, feasible,
                           probability_of_feasibility)
 from .encoding import SearchSpace
 from .extra_trees import fit_extra_trees
-from .gp import batched_posterior, fit_gp_batched, gp_posterior
+from .gp import batched_posterior, batched_posterior_multi, fit_gp_batched
 from .repository import Repository, SupportModelStore
-from .rgpe import (BatchedEnsemble, WeightJob, compute_weights_multi,
-                   ensemble_posterior_batched)
+from .rgpe import WeightJob, compute_weights_multi, mix_weighted
 from .selection import CandidateIndex
 from .types import BOResult, Constraint, Objective, Observation, RunRecord
 
@@ -48,8 +47,9 @@ class BOConfig:
     kernel_impl: str = "xla"      # xla | pallas | pallas_interpret
 
 
-def _feasible(obs: Observation, constraints: Sequence[Constraint]) -> bool:
-    return all(obs.measures[c.name] <= c.upper_bound for c in constraints)
+# the one feasibility rule, shared with pareto_of_observations and the
+# serving layer (historical private name kept for existing importers)
+_feasible = feasible
 
 
 def _best_feasible_value(observations, objective, constraints):
@@ -153,13 +153,16 @@ def _model_posteriors_karasu(observations, measures, cfg,
                              ctx: KarasuContext, key, xq):
     """RGPE ensemble posterior per measure + target scalers.
 
-    All target GPs (one per measure) are fit in ONE vmapped batch; the
-    support models come stacked from the shared store, so each measure's
-    ensemble costs one batched posterior + one ranking-loss call."""
+    All target GPs (one per measure) are fit in ONE vmapped batch, and
+    every grid posterior the iteration needs — the target stack AND all
+    measures' RGPE support stacks — executes as ONE fused
+    ``batched_posterior_multi`` launch (the same query plan the
+    ``SearchService`` step uses), followed by one padded ranking-loss
+    launch for the weights. The old per-ensemble posterior loop lives on
+    only in ``ensemble_posterior_batched``, the parity oracle."""
     selected = ctx.candidate_index().query(
         _target_runs(observations), cfg.n_support, impl=cfg.kernel_impl)
 
-    out = {}
     x = np.stack([o.x for o in observations])
     ys = [np.array([o.measures[m] for o in observations])
           for m in measures]
@@ -167,24 +170,29 @@ def _model_posteriors_karasu(observations, measures, cfg,
                           round_to=8)
     jobs, job_meta = [], []
     for mi, m in enumerate(measures):
-        tgt = tgts.extract(mi)
         bases, _ids = ctx.store.get_stacked([z for z, _ in selected], m)
         if bases is not None:
-            jobs.append(WeightJob(bases, tgt, jax.random.fold_in(key, mi),
+            jobs.append(WeightJob(bases, tgts.extract(mi),
+                                  jax.random.fold_in(key, mi),
                                   cfg.rgpe_samples))
-            job_meta.append((m, bases, tgt))
-        else:
-            mu, var = gp_posterior(tgt, xq)
-            out[m] = {"mu": mu, "var": var, "y_mean": tgt.y_mean,
-                      "y_std": tgt.y_std, "weights": np.array([1.0])}
+            job_meta.append((mi, m, bases))
     # all measures' ensembles scored in one padded ranking-loss launch
-    for (m, bases, tgt), w in zip(job_meta,
-                                  ctx.score_ensembles(
-                                      jobs, impl=cfg.kernel_impl)):
-        mu, var = ensemble_posterior_batched(
-            BatchedEnsemble(bases, tgt, w), xq)
-        out[m] = {"mu": mu, "var": var, "y_mean": tgt.y_mean,
-                  "y_std": tgt.y_std, "weights": np.asarray(w)}
+    ws = ctx.score_ensembles(jobs, impl=cfg.kernel_impl)
+    # ... and ALL grid posteriors (targets + ensemble members) in one
+    # fused launch
+    res = batched_posterior_multi(
+        [(tgts, xq)] + [(bases, xq) for _, _, bases in job_meta],
+        impl=cfg.kernel_impl)
+    mu_t, var_t = res[0]
+    out = {}
+    for mi, m in enumerate(measures):
+        out[m] = {"mu": mu_t[mi], "var": var_t[mi],
+                  "y_mean": tgts.y_mean[mi], "y_std": tgts.y_std[mi],
+                  "weights": np.array([1.0])}
+    for (mi, m, bases), w, (mu_b, var_b) in zip(job_meta, ws, res[1:]):
+        mu, var = mix_weighted(mu_b, var_b, out[m]["mu"], out[m]["var"], w)
+        out[m] = {"mu": mu, "var": var, "y_mean": tgts.y_mean[mi],
+                  "y_std": tgts.y_std[mi], "weights": np.asarray(w)}
     return out, selected
 
 

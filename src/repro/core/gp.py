@@ -25,6 +25,12 @@ Two representations live here:
     instead of a Python loop. Padding is exact: padded rows/columns are
     masked out of the kernel and carry unit diagonal entries, so the
     valid block of every factorisation equals the unbatched one.
+
+On top of ``BatchedGP`` sits the posterior **query plan**
+(``batched_posterior_multi``): many stacks' grid queries — target GPs,
+RGPE support stacks, MOO models, across tenants — fused into one padded
+launch per (grid, dim) bucket, with ``impl="auto"`` routing the pairwise
+Matern to the Pallas kernel when the fused batch justifies it.
 """
 from __future__ import annotations
 
@@ -37,6 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.matern import matern52
+from repro.kernels.routing import resolve_impl
 
 JITTER = 1e-6
 
@@ -385,12 +392,114 @@ def batched_posterior(bgp: BatchedGP, xq: jnp.ndarray, *, impl: str = "xla"
 
     xq: (q, d) shared across models, or (m, q, d) per-model. Returns
     ((m, q), (m, q)). One vmapped triangular solve instead of m calls;
-    ``impl`` dispatches the pairwise Matern to Pallas where it wins."""
+    ``impl`` dispatches the pairwise Matern to Pallas where it wins
+    (``"auto"`` resolves on the fused models x grid x obs cell count)."""
     xq = jnp.asarray(xq, jnp.float32)
     if xq.ndim == 2:
         xq = jnp.broadcast_to(xq[None], (bgp.m,) + xq.shape)
+    impl = resolve_impl(impl, cells=bgp.m * xq.shape[1] * bgp.n_max)
     return _batched_posterior(bgp.log_lengthscales, bgp.log_signal, bgp.x,
                               bgp.mask, bgp.chol, bgp.alpha, xq, impl=impl)
+
+
+# ---------------------------------------------------------------------------
+# Posterior query plan: MANY stacks' grid posteriors in one padded launch
+# ---------------------------------------------------------------------------
+
+
+PosteriorQuery = Tuple[BatchedGP, jnp.ndarray]   # (stack, (q, d) | (m, q, d))
+
+
+def _pad_stack_obs(st: BatchedGP, n_pad: int):
+    """Pad one stack's observation axis to ``n_pad``: zero rows masked
+    out of the kernel, unit diagonal on the padded Cholesky block — the
+    same exactness contract ``fit_gp_batched``/``stack_gps`` already
+    guarantee, so fused results match per-stack ones."""
+    p = n_pad - st.n_max
+    if p == 0:
+        return st.x, st.mask, st.chol, st.alpha
+    x = jnp.pad(st.x, ((0, 0), (0, p), (0, 0)))
+    mask = jnp.pad(st.mask, ((0, 0), (0, p)))
+    chol = jnp.pad(st.chol, ((0, 0), (0, p), (0, p)))
+    bump = jnp.concatenate([jnp.zeros((st.n_max,), jnp.float32),
+                            jnp.ones((p,), jnp.float32)])
+    chol = chol + jnp.diag(bump)[None]
+    alpha = jnp.pad(st.alpha, ((0, 0), (0, p)))
+    return x, mask, chol, alpha
+
+
+def batched_posterior_multi(
+    queries: Sequence[PosteriorQuery], *,
+    impl: str = "auto", round_to: int = 8, m_round_pow2: bool = True,
+    counters: Optional[dict] = None,
+) -> List[Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Execute MANY ``(stack, grid)`` posterior queries as ONE padded
+    ``_batched_posterior`` launch per (q, d) bucket.
+
+    This is the query-plan entry point a service step (and run_search's
+    per-iteration model refresh) routes every grid posterior through:
+    target GPs, every RGPE ensemble's support stack, and MOO
+    objective/constraint models all become lanes of the same vmapped
+    triangular solve instead of separate Python-loop launches. Queries
+    whose grids share (q, d) fuse even when the grids differ (each
+    stack's grid is broadcast to its lanes); the observation axis is
+    padded to a common ``round_to`` bucket and the fused model axis to a
+    power of two, mirroring ``fit_gp_batched``'s jit-shape discipline so
+    step-to-step cohort changes reuse compiled shapes.
+
+    Returns one ``(mu, var)`` pair per query, shapes ``(m_i, q)``, in
+    input order. ``counters`` (optional dict) is incremented with
+    ``launches`` / ``queries`` / ``lanes`` for callers tracking fusion.
+    """
+    results: List[Optional[Tuple[jnp.ndarray, jnp.ndarray]]] = \
+        [None] * len(queries)
+    grids = [jnp.asarray(xq, jnp.float32) for _, xq in queries]
+    groups: dict = {}
+    for i, ((st, _), xq) in enumerate(zip(queries, grids)):
+        groups.setdefault((int(xq.shape[-2]), int(st.x.shape[-1])),
+                          []).append(i)
+
+    for (q, d), idxs in groups.items():
+        n_pad = max(queries[i][0].n_max for i in idxs)
+        if round_to > 1:
+            n_pad = ((n_pad + round_to - 1) // round_to) * round_to
+        xs, masks, chols, alphas, lss, sfs, xqs = [], [], [], [], [], [], []
+        for i in idxs:
+            st = queries[i][0]
+            x, mask, chol, alpha = _pad_stack_obs(st, n_pad)
+            xs.append(x)
+            masks.append(mask)
+            chols.append(chol)
+            alphas.append(alpha)
+            lss.append(st.log_lengthscales)
+            sfs.append(st.log_signal)
+            xq = grids[i]
+            if xq.ndim == 2:
+                xq = jnp.broadcast_to(xq[None], (st.m, q, d))
+            xqs.append(xq)
+        parts = [jnp.concatenate(a) for a in
+                 (lss, sfs, xs, masks, chols, alphas, xqs)]
+        m_total = int(parts[0].shape[0])
+        m_pad = m_total
+        if m_round_pow2:
+            m_pad = 1 << (m_total - 1).bit_length()
+            if m_pad > m_total:
+                parts = [jnp.concatenate(
+                    [a, jnp.broadcast_to(a[:1],
+                                         (m_pad - m_total,) + a.shape[1:])])
+                    for a in parts]
+        r_impl = resolve_impl(impl, cells=m_pad * q * n_pad)
+        mu, var = _batched_posterior(*parts, impl=r_impl)
+        off = 0
+        for i in idxs:
+            m_i = queries[i][0].m
+            results[i] = (mu[off:off + m_i], var[off:off + m_i])
+            off += m_i
+        if counters is not None:
+            counters["launches"] = counters.get("launches", 0) + 1
+            counters["queries"] = counters.get("queries", 0) + len(idxs)
+            counters["lanes"] = counters.get("lanes", 0) + m_pad
+    return results
 
 
 def batched_sample(bgp: BatchedGP, xq: jnp.ndarray, keys: jax.Array,

@@ -6,23 +6,24 @@ correlation priors and workloads optimised under different objective
 sets can still share models. Acquisition: MC expected hypervolume
 improvement over the (2-objective) posterior, weighted by the
 probability of feasibility under every constraint.
+
+``run_search_moo`` is a thin driver over the multi-tenant
+``SearchService`` (one slot, synchronous executor): MOO tenants use the
+same fused fit / RGPE-weight / grid-posterior launches as
+single-objective ones, so single- and multi-objective searches mix in
+one serving step instead of living on separate code paths.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from .acquisition import mc_ehvi, pareto_front, probability_of_feasibility
-from .bo import (BOConfig, KarasuContext, ProfileFn,
-                 _model_posteriors_karasu, _model_posteriors_naive,
-                 _feasible)
+from .acquisition import pareto_of_observations
+from .bo import BOConfig, ProfileFn
 from .encoding import SearchSpace
 from .repository import Repository
-from .types import BOResult, Constraint, Objective, Observation
+from .types import BOResult, Constraint, Objective
 
 
 def run_search_moo(
@@ -38,83 +39,19 @@ def run_search_moo(
     n_mc: int = 64,
 ) -> BOResult:
     assert len(objectives) == 2, "MC-EHVI path implemented for 2 objectives"
-    cfg = bo_config
-    key = jax.random.PRNGKey(seed)
-    rng = np.random.default_rng(seed)
-    measures = [o.name for o in objectives] + [c.name for c in constraints]
-    xq_all = space.all_encoded()
-    ctx = (KarasuContext(repository, space, noise=cfg.noise)
-           if method == "karasu" and repository is not None else None)
+    # imported here: serve sits above core in the layering, and the
+    # driver is the one place core reaches back up into it
+    from repro.serve.search_service import SearchRequest, SearchService
 
-    observations: List[Observation] = []
-    profiled: set = set()
-    best_idx: List[int] = []
-    stopped_at = cfg.max_iters
-
-    def profile(ci: int):
-        config = space.configs[ci]
-        m, metr = profile_fn(config)
-        observations.append(Observation(config=config, x=xq_all[ci],
-                                        measures=m, metrics=metr))
-        profiled.add(ci)
-        best_idx.append(len(observations) - 1)
-
-    for ci in rng.choice(len(space), size=min(cfg.n_init, len(space)),
-                         replace=False):
-        profile(int(ci))
-
-    for it in range(len(observations), cfg.max_iters):
-        remaining = [i for i in range(len(space)) if i not in profiled]
-        if not remaining:
-            stopped_at = it
-            break
-        xq = xq_all[remaining]
-
-        if method == "karasu" and repository is not None:
-            post, _sel = _model_posteriors_karasu(
-                observations, measures, cfg, ctx,
-                jax.random.fold_in(key, it), xq)
-        else:
-            post = _model_posteriors_naive(observations, measures, cfg, xq)
-
-        # raw-scale posterior samples per objective
-        samples = []
-        for oi, obj in enumerate(objectives):
-            p = post[obj.name]
-            k = jax.random.fold_in(key, 1000 + it * 10 + oi)
-            eps = jax.random.normal(k, (n_mc, xq.shape[0]))
-            s = (p["mu"][None] + eps * jnp.sqrt(p["var"])[None])
-            samples.append(np.asarray(s * p["y_std"] + p["y_mean"]))
-
-        feas_obs = [o for o in observations if _feasible(o, constraints)] \
-            or observations
-        observed = np.array([[o.measures[objectives[0].name],
-                              o.measures[objectives[1].name]]
-                             for o in feas_obs])
-        ref = observed.max(axis=0) * 1.1 + 1e-9
-        acq = mc_ehvi(samples[0], samples[1], observed, ref)
-
-        for c in constraints:
-            cp = post[c.name]
-            ub_std = (c.upper_bound - cp["y_mean"]) / cp["y_std"]
-            pof = np.asarray(probability_of_feasibility(
-                cp["mu"], cp["var"], float(ub_std)))
-            acq = acq * pof
-
-        profile(remaining[int(np.argmax(acq))])
-
-    return BOResult(observations=observations, best_index_per_iter=best_idx,
-                    stopped_at=stopped_at,
-                    meta={"method": method, "moo": True,
-                          "objectives": [o.name for o in objectives]})
+    svc = SearchService(repository, slots=1)
+    svc.submit(SearchRequest(space, profile_fn, None, constraints,
+                             method=method, bo_config=bo_config, seed=seed,
+                             objectives=tuple(objectives), n_mc=n_mc))
+    completion, = svc.run()
+    return completion.result
 
 
 def pareto_of_result(result: BOResult, objectives: Sequence[Objective],
                      constraints: Sequence[Constraint] = ()) -> np.ndarray:
-    pts = np.array([[o.measures[objectives[0].name],
-                     o.measures[objectives[1].name]]
-                    for o in result.observations
-                    if _feasible(o, constraints)])
-    if len(pts) == 0:
-        return np.empty((0, 2))
-    return pareto_front(pts)
+    return pareto_of_observations(result.observations, objectives,
+                                  constraints)

@@ -233,6 +233,19 @@ def build_ensemble_batched(bases: BatchedGP, target: GP, key: jax.Array,
     return BatchedEnsemble(bases, target, w)
 
 
+def mix_weighted(mu_b: jnp.ndarray, var_b: jnp.ndarray,
+                 mu_t: jnp.ndarray, var_t: jnp.ndarray,
+                 w: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """RGPE mixture from stacked base posterior rows ``(m, q)`` plus the
+    target row ``(q,)``; ``w`` is ``(m+1,)`` with the target LAST. The
+    one mixing rule every path (run_search, run_search_moo, the service)
+    applies after its grid posteriors come back from the query plan."""
+    wb, wt = w[:-1, None], w[-1]
+    mu = jnp.sum(wb * mu_b, axis=0) + wt * mu_t
+    var = jnp.sum((wb ** 2) * var_b, axis=0) + (wt ** 2) * var_t
+    return mu, jnp.maximum(var, 1e-10)
+
+
 def ensemble_posterior_batched(ens: BatchedEnsemble, xq: jnp.ndarray, *,
                                impl: str = "xla"
                                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -240,12 +253,7 @@ def ensemble_posterior_batched(ens: BatchedEnsemble, xq: jnp.ndarray, *,
     target query (standardised scale); matches ``ensemble_posterior``."""
     mu_b, var_b = batched_posterior(ens.bases, xq, impl=impl)   # (m, q)
     mu_t, var_t = gp_posterior(ens.target, xq, impl=impl)
-    mus = jnp.concatenate([mu_b, mu_t[None]])
-    vars_ = jnp.concatenate([var_b, var_t[None]])
-    w = ens.weights[:, None]
-    mu = jnp.sum(w * mus, axis=0)
-    var = jnp.sum((w ** 2) * vars_, axis=0)
-    return mu, jnp.maximum(var, 1e-10)
+    return mix_weighted(mu_b, var_b, mu_t, var_t, ens.weights)
 
 
 def target_best(ens) -> jnp.ndarray:

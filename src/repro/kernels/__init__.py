@@ -1,3 +1,6 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+from .routing import AUTO_MIN_CELLS, resolve_impl
+
+__all__ = ["AUTO_MIN_CELLS", "resolve_impl"]

@@ -3,12 +3,18 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from ..routing import resolve_impl
 from .ref import matern52_ref
 from .matern import matern52_pallas
 
 
 def matern52(a: jnp.ndarray, b: jnp.ndarray, *, impl: str = "xla"
              ) -> jnp.ndarray:
+    if impl == "auto":
+        # per-call view only: callers fusing many queries into one
+        # launch (core.gp's query plan) resolve with the fused cell
+        # count themselves and pass a concrete impl down
+        impl = resolve_impl(impl, cells=a.shape[-2] * b.shape[-2])
     if impl == "xla":
         return matern52_ref(a, b)
     if impl == "pallas":

@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..routing import resolve_impl
 from .ref import pairwise_pearson_ref
 from .pairwise_pearson import _pearson_kernel
 
@@ -37,6 +38,8 @@ def _pallas(a, b, *, block: int = 256, interpret: bool = False):
 
 def pairwise_pearson(a: jnp.ndarray, b: jnp.ndarray, *, impl: str = "xla"
                      ) -> jnp.ndarray:
+    if impl == "auto":
+        impl = resolve_impl(impl, cells=a.shape[0] * b.shape[0])
     if impl == "xla":
         return pairwise_pearson_ref(a, b)
     if impl == "pallas":

@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..routing import resolve_impl
 from .ref import ranking_loss_padded_ref, ranking_loss_ref
 from .ranking_loss import _rank_kernel, _rank_padded_kernel
 
@@ -36,6 +37,8 @@ def _pallas(preds: jnp.ndarray, y: jnp.ndarray, *, block_s: int = 128,
 
 def ranking_loss(preds: jnp.ndarray, y: jnp.ndarray, *, impl: str = "xla"
                  ) -> jnp.ndarray:
+    if impl == "auto":
+        impl = resolve_impl(impl, cells=preds.shape[0] * preds.shape[1] ** 2)
     if impl == "xla":
         return ranking_loss_ref(preds, y)
     if impl == "pallas":
@@ -78,6 +81,8 @@ def ranking_loss_padded(preds: jnp.ndarray, ys: jnp.ndarray,
     """Ragged-batch entry point: (R, n_max) samples with per-row targets
     and valid lengths -> (R,) misrank counts. One launch scores every
     (tenant, measure) ensemble of a SearchService step."""
+    if impl == "auto":
+        impl = resolve_impl(impl, cells=preds.shape[0] * preds.shape[1] ** 2)
     if impl == "xla":
         return ranking_loss_padded_ref(preds, ys, n_valid)
     if impl == "pallas":

@@ -1,0 +1,45 @@
+"""Impl routing shared by the kernel dispatchers.
+
+Every Pallas kernel in this package has a pure-XLA reference twin and a
+dispatcher taking ``impl`` in {"xla", "pallas", "pallas_interpret"}.
+``"auto"`` adds a size/backend heuristic on top: the tiled kernels only
+beat XLA's fusions once the launch is large enough to amortise the grid
+setup, and they only compile on TPU at all — so ``auto`` resolves to
+``pallas`` exactly when the backend is a TPU **and** the number of
+output cells of the launch clears a threshold, and to ``xla``
+everywhere else (CPU CI, tiny launches, interpret-less GPUs).
+
+Callers that fuse many logical queries into one launch (the
+``batched_posterior`` query plan in ``core/gp.py``) resolve with the
+FUSED cell count before entering jit, so the routing sees the real
+batch size rather than one vmap lane's slice.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+# below this many output cells the dispatch/setup overhead of a Pallas
+# launch dominates any tiling win (one 256x256 tile pair ~ 2^16 cells;
+# give the kernel a few dozen tiles before switching over)
+AUTO_MIN_CELLS = int(os.environ.get("REPRO_PALLAS_AUTO_MIN_CELLS",
+                                    str(1 << 21)))
+
+
+def resolve_impl(impl: str, *, cells: int,
+                 backend: Optional[str] = None,
+                 min_cells: Optional[int] = None) -> str:
+    """Resolve ``"auto"`` to a concrete impl; pass others through.
+
+    ``cells`` is the total number of output elements the launch will
+    produce (for a fused plan: models x query points x observations).
+    ``backend`` defaults to ``jax.default_backend()``; injectable for
+    tests."""
+    if impl != "auto":
+        return impl
+    if backend is None:
+        backend = jax.default_backend()
+    threshold = AUTO_MIN_CELLS if min_cells is None else min_cells
+    return "pallas" if (backend == "tpu" and cells >= threshold) else "xla"

@@ -13,10 +13,20 @@ Two axes are batched/overlapped across tenants:
 
   - **Model math**: each step stacks every ready session's target-GP fit
     jobs — one per (tenant, measure) — into a single ``BatchedGP`` per
-    (search space, noise) group (one vmapped Adam/Cholesky fit, one
-    batched posterior over the full candidate grid), and scores ALL
-    karasu sessions' RGPE ensembles with ONE padded ranking-loss launch
-    (``compute_weights_multi``; ragged n_obs handled by masking).
+    (search space, noise) group (one vmapped Adam/Cholesky fit), scores
+    ALL karasu sessions' RGPE ensembles with ONE padded ranking-loss
+    launch (``compute_weights_multi``; ragged n_obs handled by masking),
+    and then executes EVERY grid posterior the step needs — target
+    stacks, every RGPE ensemble's support stack, MOO objective and
+    constraint models, across all tenants — as ONE fused
+    ``batched_posterior_multi`` launch (the posterior/acquisition query
+    plan; ``impl="auto"`` routes it to the Pallas matern kernel on TPU
+    when the fused models x grid batch justifies it). RGPE mixing and
+    the acquisitions (EI, constrained EI, MC-EHVI) are applied to the
+    returned rows as vectorised array ops, not per-session loops.
+    ``fuse_posteriors=False`` restores the per-ensemble posterior loop
+    and the per-candidate MC-EHVI reference — the parity/benchmark
+    baseline.
   - **Profiling**: cluster runs execute through a ``ProfileExecutor``
     (``serve/profile_executor.py``). A session whose run is in flight
     sits in the explicit ``WAITING_PROFILE`` state while every session
@@ -24,6 +34,12 @@ Two axes are batched/overlapped across tenants:
     the hardware, not by the slowest tenant's profiler. The default
     ``SyncProfileExecutor`` reproduces the fully synchronous service
     bitwise.
+
+Sessions may be single-objective (``objective=...``) or multi-objective
+(``objectives=[a, b]``, paper §III-D: MC-EHVI over two objectives,
+feasibility-weighted by every constraint); both kinds mix freely in one
+step and share the same fused fit/weight/posterior launches.
+``run_search_moo`` is a thin driver over this path.
 
 Support models come from one ``SupportModelStore`` shared by every
 tenant and invalidated incrementally per (workload, measure) when
@@ -39,16 +55,21 @@ import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core.acquisition import (mc_ehvi, mc_ehvi_batched,
+                                    pareto_of_observations,
+                                    probability_of_feasibility)
 from repro.core.bo import (BOConfig, KarasuContext, ProfileFn,
-                           _acquisition, _best_index_so_far,
+                           _acquisition, _best_index_so_far, _feasible,
                            _model_posteriors_augmented, _should_stop_early,
                            _target_runs)
 from repro.core.encoding import SearchSpace
-from repro.core.gp import batched_posterior, fit_gp_batched
+from repro.core.gp import (batched_posterior, batched_posterior_multi,
+                           fit_gp_batched)
 from repro.core.repository import Repository
-from repro.core.rgpe import WeightJob
+from repro.core.rgpe import WeightJob, mix_weighted
 from repro.core.types import (BOResult, Constraint, Objective, Observation,
                               RunRecord)
 from repro.serve.profile_executor import (ProfileJob, ProfileOutcome,
@@ -59,17 +80,32 @@ READY = "ready"                        # observations current, can fit/score
 WAITING_PROFILE = "waiting_profile"    # >=1 profiling run in flight
 
 
+def _absorb_target_posts(posts, owners, tgts, mu, var) -> None:
+    """Record one target stack's grid-posterior rows into each owning
+    (session, measure) slot — shared by the fused plan and the loop
+    fallback so the posterior dict shape cannot diverge between them."""
+    for ji, (s, m) in enumerate(owners):
+        posts.setdefault(s.rid, {})[m] = {
+            "mu": mu[ji], "var": var[ji],
+            "y_mean": tgts.y_mean[ji], "y_std": tgts.y_std[ji]}
+
+
 @dataclasses.dataclass
 class SearchRequest:
-    """One tenant's search: the ``run_search`` arguments as a record."""
+    """One tenant's search: the ``run_search`` (or ``run_search_moo``)
+    arguments as a record. Exactly one of ``objective`` /
+    ``objectives`` must be set; ``objectives=[a, b]`` makes the session
+    multi-objective (2-objective MC-EHVI, §III-D)."""
     space: SearchSpace
     profile_fn: ProfileFn
-    objective: Objective
+    objective: Optional[Objective] = None
     constraints: Sequence[Constraint] = ()
     method: str = "karasu"            # naive | augmented | karasu
     bo_config: BOConfig = dataclasses.field(default_factory=BOConfig)
     seed: int = 0
     share_as: Optional[str] = None    # publish runs to the repo under this id
+    objectives: Optional[Sequence[Objective]] = None   # MOO: exactly 2
+    n_mc: int = 64                    # MC-EHVI posterior draws (MOO only)
 
 
 @dataclasses.dataclass
@@ -87,8 +123,12 @@ class _Session:
         self.cfg = req.bo_config
         self.key = jax.random.PRNGKey(req.seed)
         self.rng = np.random.default_rng(req.seed)
-        self.measures = ([req.objective.name]
-                         + [c.name for c in req.constraints])
+        self.objectives = (list(req.objectives)
+                           if req.objectives is not None else [])
+        self.is_moo = bool(self.objectives)
+        obj_names = ([o.name for o in self.objectives] if self.is_moo
+                     else [req.objective.name])
+        self.measures = obj_names + [c.name for c in req.constraints]
         self.xq_all = req.space.all_encoded()
         # batching/context key: spaces are interchangeable iff their
         # configs AND encodings agree — the name alone could conflate
@@ -101,6 +141,9 @@ class _Session:
         self.profiled: set = set()
         self.stopped_at = self.cfg.max_iters
         self.meta: Dict[str, Any] = {"method": req.method, "selected": []}
+        if self.is_moo:
+            self.meta["moo"] = True
+            self.meta["objectives"] = [o.name for o in self.objectives]
         self.state = READY
         self.inflight = 0
         self._launch_seq = 0           # session-local submission index
@@ -154,8 +197,13 @@ class _Session:
                           x=self.xq_all[out.job.ci],
                           measures=out.measures, metrics=out.metrics)
         self.observations.append(obs)
-        self.best_idx.append(_best_index_so_far(
-            self.observations, self.req.objective, self.req.constraints))
+        if self.is_moo:
+            # no scalar incumbent under two objectives; the Pareto front
+            # is assembled at result() time
+            self.best_idx.append(len(self.observations) - 1)
+        else:
+            self.best_idx.append(_best_index_so_far(
+                self.observations, self.req.objective, self.req.constraints))
         # publish only complete records: Algorithm-1 needs the metric
         # matrix, and a None-metrics record would poison the shared
         # CandidateIndex for every other tenant
@@ -179,6 +227,9 @@ class _Session:
 
     def result(self) -> BOResult:
         self.meta["n_profiled"] = len(self.observations)
+        if self.is_moo:
+            self.meta["pareto_front"] = pareto_of_observations(
+                self.observations, self.objectives, self.req.constraints)
         return BOResult(observations=self.observations,
                         best_index_per_iter=self.best_idx,
                         stopped_at=self.stopped_at, meta=self.meta)
@@ -201,11 +252,17 @@ class SearchService:
     ``profile_timeout`` caps any blocking wait on the executor (seconds
     of wall clock, or virtual ticks on the fake); ``None`` waits until
     results land.
+    ``fuse_posteriors`` (default True) executes every grid posterior of
+    a step — targets, RGPE support stacks, MOO models — as one fused
+    ``batched_posterior_multi`` launch and uses the vectorised MC-EHVI;
+    False restores the per-ensemble posterior loop and the
+    per-candidate EHVI reference (the parity/benchmark baseline).
     """
 
     def __init__(self, repository: Optional[Repository] = None, *,
                  slots: int = 8, executor=None, wait_mode: str = "any",
-                 profile_timeout: Optional[float] = None):
+                 profile_timeout: Optional[float] = None,
+                 fuse_posteriors: bool = True):
         if wait_mode not in ("any", "all"):
             raise ValueError(f"unknown wait_mode {wait_mode!r}")
         self.repo = repository if repository is not None else Repository()
@@ -214,6 +271,7 @@ class SearchService:
             else SyncProfileExecutor()
         self.wait_mode = wait_mode
         self.profile_timeout = profile_timeout
+        self.fuse_posteriors = fuse_posteriors
         self.queue: List[_Session] = []
         self.active: Dict[int, _Session] = {}
         self.done: List[SearchCompletion] = []
@@ -223,12 +281,25 @@ class SearchService:
         self._contexts: Dict[Tuple[Any, float], KarasuContext] = {}
         self.stats = {"steps": 0, "fit_batches": 0, "fit_jobs": 0,
                       "iterations": 0, "rgpe_batches": 0, "rgpe_jobs": 0,
-                      "profile_waits": 0}
+                      "profile_waits": 0, "posterior_batches": 0,
+                      "posterior_queries": 0}
 
     # -- request lifecycle --------------------------------------------------
     def submit(self, req: SearchRequest) -> int:
         if req.method not in ("naive", "augmented", "karasu"):
             raise ValueError(f"unknown method {req.method!r}")
+        if req.objectives is not None:
+            if req.objective is not None:
+                raise ValueError("pass either objective or objectives, "
+                                 "not both")
+            if len(req.objectives) != 2:
+                raise ValueError("multi-objective serving implements the "
+                                 "2-objective MC-EHVI path")
+            if req.method == "augmented":
+                raise ValueError("MOO supports methods naive|karasu")
+        elif req.objective is None:
+            raise ValueError("SearchRequest needs an objective "
+                             "(or objectives=[a, b])")
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(_Session(rid, req))
@@ -345,16 +416,20 @@ class SearchService:
 
         advanced = 0
         for s, rem in ready:
-            acq, best_raw, obj_post = _acquisition(
-                posts[s.rid], s.observations, s.req.objective,
-                s.req.constraints)
-            acq = acq[np.asarray(rem)]
+            if s.is_moo:
+                # MC-EHVI x PoF; no scalar incumbent, so no early stop
+                acq = self._moo_acquisition(s, posts[s.rid], rem)
+            else:
+                acq, best_raw, obj_post = _acquisition(
+                    posts[s.rid], s.observations, s.req.objective,
+                    s.req.constraints)
+                acq = acq[np.asarray(rem)]
 
-            if _should_stop_early(s.cfg, len(s.observations), acq,
-                                  obj_post, best_raw):
-                s.stopped_at = len(s.observations)
-                self._finish(s)
-                continue
+                if _should_stop_early(s.cfg, len(s.observations), acq,
+                                      obj_post, best_raw):
+                    s.stopped_at = len(s.observations)
+                    self._finish(s)
+                    continue
 
             self.executor.submit(s.launch(rem[int(np.argmax(acq))]),
                                  s.req.profile_fn)
@@ -390,9 +465,14 @@ class SearchService:
     def _batched_posteriors(self, sessions: List[_Session]
                             ) -> Dict[int, Dict[str, Dict]]:
         """Fit every (session, measure) target GP in one vmapped batch
-        per (space, noise) group and query the full candidate grid; then
-        overlay RGPE mixtures for karasu sessions, ALL their ensembles
-        scored by one padded ranking-loss launch per kernel impl."""
+        per (space, noise) group, score ALL karasu ensembles' RGPE
+        weights by one padded ranking-loss launch per kernel impl, then
+        execute the step's posterior QUERY PLAN: every grid posterior —
+        target stacks, every ensemble's support stack, MOO models, all
+        tenants — in one fused ``batched_posterior_multi`` call (one
+        padded launch per (q, d) bucket; a single-space cohort is
+        exactly one launch). With ``fuse_posteriors=False`` the plan
+        degrades to the historical per-group + per-ensemble loop."""
         groups: Dict[Tuple[Any, float], List[_Session]] = {}
         posts: Dict[int, Dict[str, Dict]] = {}
         for s in sessions:
@@ -405,6 +485,9 @@ class SearchService:
 
         # (session, measure, bases, WeightJob) across ALL groups
         rgpe_jobs: List[Tuple[_Session, str, Any, WeightJob]] = []
+        # fused plan: (stack, grid) queries + how to absorb each result
+        plan_queries: List[Tuple[Any, Any]] = []
+        plan_sinks: List[Tuple[str, Any]] = []
         for (_, noise), group in groups.items():
             xs, ys, owners = [], [], []
             for s in group:
@@ -424,12 +507,12 @@ class SearchService:
             self.stats["fit_jobs"] += len(owners)
 
             xq_all = group[0].xq_all
-            mu_all, var_all = batched_posterior(tgts, xq_all)
-
-            for ji, (s, m) in enumerate(owners):
-                posts.setdefault(s.rid, {})[m] = {
-                    "mu": mu_all[ji], "var": var_all[ji],
-                    "y_mean": tgts.y_mean[ji], "y_std": tgts.y_std[ji]}
+            if self.fuse_posteriors:
+                plan_queries.append((tgts, xq_all))
+                plan_sinks.append(("targets", (owners, tgts)))
+            else:
+                mu_all, var_all = batched_posterior(tgts, xq_all)
+                _absorb_target_posts(posts, owners, tgts, mu_all, var_all)
 
             for s in group:
                 if s.req.method == "karasu":
@@ -437,6 +520,7 @@ class SearchService:
 
         # ONE padded ranking-loss launch for every ensemble of the step
         # (per kernel impl — sessions normally share one)
+        weights: Dict[int, Any] = {}
         by_impl: Dict[str, List[int]] = {}
         for idx, (s, *_rest) in enumerate(rgpe_jobs):
             by_impl.setdefault(s.cfg.kernel_impl, []).append(idx)
@@ -446,8 +530,37 @@ class SearchService:
             self.stats["rgpe_batches"] += 1
             self.stats["rgpe_jobs"] += len(idxs)
             for i, w in zip(idxs, ws):
-                s, m, bases, _job = rgpe_jobs[i]
-                self._mix_rgpe(s, m, bases, w, posts[s.rid])
+                weights[i] = w
+
+        if not self.fuse_posteriors:
+            for i, (s, m, bases, _job) in enumerate(rgpe_jobs):
+                self._mix_rgpe(s, m, bases, weights[i], posts[s.rid])
+            return posts
+
+        # the fused launch: support stacks join the targets' plan; the
+        # target rows come back first, so mixes overlay assembled posts
+        for i, (s, m, bases, _job) in enumerate(rgpe_jobs):
+            plan_queries.append((bases, s.xq_all))
+            plan_sinks.append(("mix", (s, m, weights[i])))
+        if not plan_queries:
+            return posts
+        counters: Dict[str, int] = {}
+        res = batched_posterior_multi(plan_queries, impl="auto",
+                                      counters=counters)
+        self.stats["posterior_batches"] += counters.get("launches", 0)
+        self.stats["posterior_queries"] += counters.get("queries", 0)
+        for (kind, payload), (mu, var) in zip(plan_sinks, res):
+            if kind == "targets":
+                owners, tgts = payload
+                _absorb_target_posts(posts, owners, tgts, mu, var)
+            else:
+                s, m, w = payload
+                p = posts[s.rid][m]
+                mu_m, var_m = mix_weighted(mu, var, p["mu"], p["var"], w)
+                posts[s.rid][m] = {"mu": mu_m, "var": var_m,
+                                   "y_mean": p["y_mean"],
+                                   "y_std": p["y_std"],
+                                   "weights": np.asarray(w)}
         return posts
 
     def _rgpe_jobs(self, s: _Session, tgts, owners
@@ -480,15 +593,48 @@ class SearchService:
 
     def _mix_rgpe(self, s: _Session, m: str, bases, w, post) -> None:
         """Replace one (session, measure) plain target posterior with the
-        RGPE mixture built from the shared support store."""
+        RGPE mixture built from the shared support store — the
+        per-ensemble posterior loop (``fuse_posteriors=False`` only; the
+        fused plan queries every stack in one launch instead)."""
         mu_b, var_b = batched_posterior(bases, s.xq_all)
-        wb, wt = w[:-1, None], w[-1]
-        mu = (wb * mu_b).sum(0) + wt * post[m]["mu"]
-        var = ((wb ** 2) * var_b).sum(0) + (wt ** 2) * post[m]["var"]
-        post[m] = {"mu": mu, "var": np.maximum(np.asarray(var), 1e-10),
+        mu, var = mix_weighted(mu_b, var_b, post[m]["mu"], post[m]["var"], w)
+        post[m] = {"mu": mu, "var": var,
                    "y_mean": post[m]["y_mean"],
                    "y_std": post[m]["y_std"],
                    "weights": np.asarray(w)}
+
+    def _moo_acquisition(self, s: _Session, post: Dict[str, Dict],
+                         rem: List[int]) -> np.ndarray:
+        """MC expected hypervolume improvement over the remaining
+        candidates, feasibility-weighted under every constraint (paper
+        §III-D) — fed by the same fused grid posteriors as the
+        single-objective sessions. The key schedule matches the
+        historical ``run_search_moo`` loop, so the thin driver over this
+        service reproduces its per-iteration sampling."""
+        idx = np.asarray(rem)
+        it = len(s.observations)
+        a, b = s.objectives
+        samples = []
+        for oi, obj in enumerate((a, b)):
+            p = post[obj.name]
+            k = jax.random.fold_in(s.key, 1000 + it * 10 + oi)
+            eps = jax.random.normal(k, (s.req.n_mc, len(rem)))
+            sm = p["mu"][idx][None] + eps * jnp.sqrt(p["var"][idx])[None]
+            samples.append(np.asarray(sm * p["y_std"] + p["y_mean"]))
+        feas = [o for o in s.observations
+                if _feasible(o, s.req.constraints)] or s.observations
+        observed = np.array([[o.measures[a.name], o.measures[b.name]]
+                             for o in feas])
+        ref = observed.max(axis=0) * 1.1 + 1e-9
+        ehvi = mc_ehvi_batched if self.fuse_posteriors else mc_ehvi
+        acq = np.asarray(ehvi(samples[0], samples[1], observed, ref))
+        for c in s.req.constraints:
+            cp = post[c.name]
+            ub_std = (c.upper_bound - cp["y_mean"]) / cp["y_std"]
+            pof = np.asarray(probability_of_feasibility(
+                cp["mu"][idx], cp["var"][idx], float(ub_std)))
+            acq = acq * pof
+        return acq
 
     # -- driver -------------------------------------------------------------
     def run(self, max_steps: int = 10_000) -> List[SearchCompletion]:

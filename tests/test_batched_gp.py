@@ -1,14 +1,17 @@
 """BatchedGP / batched RGPE: agreement with the per-model reference path
-(acceptance: <= 1e-4 on the standardised scale) and weight invariants."""
+(acceptance: <= 1e-4 on the standardised scale), the fused posterior
+query plan, impl routing, and weight invariants."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (batched_posterior, batched_sample, build_ensemble,
-                        compute_weights, compute_weights_batched,
-                        ensemble_posterior, ensemble_posterior_batched,
-                        fit_gp, fit_gp_batched, gp_posterior, stack_gps)
+from repro.core import (batched_posterior, batched_posterior_multi,
+                        batched_sample, build_ensemble, compute_weights,
+                        compute_weights_batched, ensemble_posterior,
+                        ensemble_posterior_batched, fit_gp, fit_gp_batched,
+                        gp_posterior, stack_gps)
 from repro.core.rgpe import BatchedEnsemble
+from repro.kernels.routing import resolve_impl
 
 TOL = 1e-4
 
@@ -88,6 +91,78 @@ def test_batched_sample_matches_per_model():
         si = gp_sample(gp, xq, keys[i], 32)
         np.testing.assert_allclose(np.asarray(s[i]), np.asarray(si),
                                    atol=1e-5)
+
+
+# -- fused posterior query plan ---------------------------------------------
+
+
+def test_batched_posterior_multi_matches_per_stack():
+    """Many stacks of different m / n_max / grids fused into one padded
+    launch must reproduce each per-stack batched_posterior."""
+    rng = np.random.default_rng(11)
+    stacks, grids = [], []
+    for sizes in ((5, 9, 14), (4, 7), (6,)):
+        xs = [rng.random((n, 3)) for n in sizes]
+        ys = [x[:, 0] + np.sin(3 * x[:, 1]) for x in xs]
+        stacks.append(fit_gp_batched(xs, ys))
+        grids.append(rng.random((25, 3)))
+    # a (q, d) group of its own: fused plan buckets by grid shape
+    stacks.append(stacks[0])
+    grids.append(rng.random((13, 3)))
+
+    counters = {}
+    res = batched_posterior_multi(list(zip(stacks, grids)),
+                                  counters=counters)
+    assert counters["launches"] == 2        # (25, 3) bucket + (13, 3)
+    assert counters["queries"] == 4
+    for st, xq, (mu, var) in zip(stacks, grids, res):
+        mu0, var0 = batched_posterior(st, xq)
+        assert mu.shape == (st.m, xq.shape[0])
+        np.testing.assert_allclose(np.asarray(mu), np.asarray(mu0),
+                                   atol=TOL)
+        np.testing.assert_allclose(np.asarray(var), np.asarray(var0),
+                                   atol=TOL)
+
+
+def test_mix_weighted_matches_ensemble_posterior_batched():
+    """Fusing bases + target rows through mix_weighted (as the query
+    plan does) agrees with the per-ensemble mixture oracle."""
+    rng = np.random.default_rng(12)
+    xs = rng.random((20, 2))
+    bases = stack_gps([fit_gp(xs, _surface(xs)),
+                       fit_gp(rng.random((10, 2)), rng.normal(size=10))])
+    x_t = rng.random((6, 2))
+    target = fit_gp(x_t, _surface(x_t))
+    w = compute_weights_batched(bases, target, jax.random.PRNGKey(3))
+    ens = BatchedEnsemble(bases, target, w)
+    xq = rng.random((30, 2))
+    mu_b, var_b = batched_posterior(bases, xq)
+    mu_t, var_t = gp_posterior(target, xq)
+    from repro.core import mix_weighted
+    mu, var = mix_weighted(mu_b, var_b, mu_t, var_t, w)
+    mu0, var0 = ensemble_posterior_batched(ens, xq)
+    np.testing.assert_allclose(np.asarray(mu), np.asarray(mu0), atol=TOL)
+    np.testing.assert_allclose(np.asarray(var), np.asarray(var0), atol=TOL)
+
+
+def test_impl_routing_resolves_auto_by_backend_and_size():
+    # explicit impls pass through untouched on any backend
+    for impl in ("xla", "pallas", "pallas_interpret"):
+        assert resolve_impl(impl, cells=1) == impl
+    # auto: pallas only on TPU and only above the cell threshold
+    assert resolve_impl("auto", cells=1 << 30, backend="tpu") == "pallas"
+    assert resolve_impl("auto", cells=8, backend="tpu") == "xla"
+    assert resolve_impl("auto", cells=1 << 30, backend="cpu") == "xla"
+    assert resolve_impl("auto", cells=1 << 30, backend="gpu") == "xla"
+    # threshold override
+    assert resolve_impl("auto", cells=9, backend="tpu",
+                        min_cells=8) == "pallas"
+    # on this machine (CPU CI) auto must resolve to the XLA reference
+    rng = np.random.default_rng(0)
+    xs = [rng.random((5, 2))]
+    bgp = fit_gp_batched(xs, [xs[0][:, 0]])
+    mu_a, var_a = batched_posterior(bgp, rng.random((4, 2)), impl="auto")
+    assert np.all(np.isfinite(np.asarray(mu_a)))
 
 
 # -- RGPE weights ------------------------------------------------------------

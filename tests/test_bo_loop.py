@@ -72,3 +72,56 @@ def test_augmented_bo_runs():
                    [Constraint("runtime", TARGET_RT)], method="augmented",
                    bo_config=BOConfig(max_iters=8), seed=1)
     assert len(r.observations) == 8
+
+
+def test_karasu_fused_posteriors_match_per_ensemble_loop():
+    """run_search's karasu model refresh fuses ALL grid posteriors
+    (target stack + every measure's support stack) into one launch; it
+    must agree with the historical per-ensemble loop
+    (``ensemble_posterior_batched`` per measure) to 1e-4."""
+    import jax
+    from repro.core import BatchedEnsemble, ensemble_posterior_batched
+    from repro.core.bo import KarasuContext, _model_posteriors_karasu
+
+    repo = Repository()
+    rng = np.random.default_rng(42)
+    for u in range(2):
+        for ci in rng.choice(len(SPACE), 12, replace=False):
+            repo.add_run(EMU.make_record(f"anon-{u}", WID,
+                                         SPACE.configs[ci], rng))
+    # a few target observations with metrics, as mid-search state
+    from repro.core.types import Observation
+    xq_all = SPACE.all_encoded()
+    obs = []
+    for ci in rng.choice(len(SPACE), 5, replace=False):
+        m, metr = EMU.run(WID, SPACE.configs[int(ci)], rng=rng)
+        obs.append(Observation(config=SPACE.configs[int(ci)],
+                               x=xq_all[int(ci)], measures=m,
+                               metrics=metr))
+
+    cfg = BOConfig()
+    ctx = KarasuContext(repo, SPACE, noise=cfg.noise)
+    measures = ["cost", "runtime"]
+    key = jax.random.PRNGKey(7)
+    xq = xq_all[:40]
+    post, selected = _model_posteriors_karasu(obs, measures, cfg, ctx,
+                                              key, xq)
+    assert selected, "no support selected — parity test vacuous"
+
+    # reconstruct the old loop with the SAME weights and support stacks
+    from repro.core import fit_gp_batched
+    x = np.stack([o.x for o in obs])
+    tgts = fit_gp_batched([x] * len(measures),
+                          [np.array([o.measures[m] for o in obs])
+                           for m in measures], noise=cfg.noise, round_to=8)
+    for mi, m in enumerate(measures):
+        bases, _ = ctx.store.get_stacked([z for z, _ in selected], m)
+        assert bases is not None
+        w = post[m]["weights"]
+        assert len(w) == bases.m + 1
+        mu0, var0 = ensemble_posterior_batched(
+            BatchedEnsemble(bases, tgts.extract(mi), w), xq)
+        np.testing.assert_allclose(np.asarray(post[m]["mu"]),
+                                   np.asarray(mu0), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(post[m]["var"]),
+                                   np.asarray(var0), atol=1e-4)

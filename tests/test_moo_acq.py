@@ -3,7 +3,8 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.acquisition import (_hv_2d, expected_improvement, mc_ehvi,
-                                    pareto_front, probability_of_feasibility)
+                                    mc_ehvi_batched, pareto_front,
+                                    probability_of_feasibility)
 from repro.core import (BOConfig, Constraint, Objective, run_search_moo,
                         scout_search_space, pareto_of_result)
 from repro.simdata import make_emulator
@@ -24,12 +25,95 @@ def test_pof_monotone():
     assert lo < 0.5 < hi
 
 
+def test_zero_variance_posterior_yields_finite_acquisitions():
+    """Regression: a degenerate posterior (var=0, e.g. querying an
+    observed point with tiny noise) must not produce NaN that survives
+    `maximum(ei, 0)` and poisons argmax."""
+    mu = jnp.array([0.5, -0.5, 0.0])
+    var = jnp.zeros(3)
+    ei = np.asarray(expected_improvement(mu, var, best=0.0))
+    assert np.all(np.isfinite(ei))
+    # below the incumbent the EI limit is the improvement itself
+    np.testing.assert_allclose(ei, [0.0, 0.5, 0.0], atol=1e-6)
+    assert int(np.argmax(ei)) == 1          # argmax stays meaningful
+    pof = np.asarray(probability_of_feasibility(mu, var, 0.0))
+    assert np.all(np.isfinite(pof))
+    np.testing.assert_allclose(pof, [0.0, 1.0, 0.5], atol=1e-6)
+
+
 def test_hv_and_pareto():
     pts = np.array([[1.0, 3.0], [2.0, 2.0], [3.0, 1.0], [3.0, 3.0]])
     front = pareto_front(pts)
     assert len(front) == 3                # (3,3) dominated
     hv = _hv_2d(front, np.array([4.0, 4.0]))
     assert hv == 3.0 + 2.0 + 1.0          # staircase area
+
+
+def test_hv_2d_edge_cases():
+    ref = np.array([4.0, 4.0])
+    # empty front dominates nothing
+    assert _hv_2d(np.empty((0, 2)), ref) == 0.0
+    # duplicate / tied points collapse onto one staircase step
+    dup = np.array([[1.0, 3.0], [1.0, 3.0], [2.0, 2.0], [2.0, 2.0]])
+    assert _hv_2d(dup, ref) == _hv_2d(np.array([[1.0, 3.0], [2.0, 2.0]]),
+                                      ref)
+    # points at/outside the reference contribute nothing
+    assert _hv_2d(np.array([[4.0, 4.0], [5.0, 1.0]]), ref) == 0.0
+    # a fully dominated point changes nothing
+    base = np.array([[1.0, 1.0]])
+    with_dom = np.array([[1.0, 1.0], [2.0, 3.0]])
+    assert _hv_2d(with_dom, ref) == _hv_2d(base, ref) == 9.0
+
+
+def test_pareto_front_edge_cases():
+    # empty input -> empty front, shape preserved
+    assert pareto_front(np.empty((0, 2))).shape == (0, 2)
+    # duplicates: neither strictly dominates the other, both kept
+    dup = np.array([[1.0, 2.0], [1.0, 2.0]])
+    assert len(pareto_front(dup)) == 2
+    # all points dominated by one
+    pts = np.array([[0.0, 0.0], [1.0, 2.0], [3.0, 1.0], [2.0, 2.0]])
+    front = pareto_front(pts)
+    assert front.shape == (1, 2)
+    np.testing.assert_array_equal(front[0], [0.0, 0.0])
+    # ties on one coordinate: both non-dominated points survive
+    tied = np.array([[1.0, 2.0], [1.0, 3.0], [2.0, 1.0]])
+    front = pareto_front(tied)
+    assert len(front) == 2
+
+
+def test_mc_ehvi_batched_matches_per_candidate_loop():
+    """The vectorised staircase EHVI must agree with the reference
+    per-(sample, candidate) `_hv_2d` loop — including duplicate front
+    points, all-dominated samples, and an empty front."""
+    rng = np.random.default_rng(7)
+    for trial in range(4):
+        n = int(rng.integers(1, 12))
+        obs = rng.random((n, 2)) * 4.0
+        ref = obs.max(axis=0) * 1.1 + 1e-9
+        sa = rng.normal(2.0, 1.5, (12, 7))
+        sb = rng.normal(2.0, 1.5, (12, 7))
+        np.testing.assert_allclose(
+            mc_ehvi_batched(sa, sb, obs, ref), mc_ehvi(sa, sb, obs, ref),
+            atol=1e-10)
+    # duplicates + ties in the observed set
+    obs = np.array([[1.0, 3.0], [1.0, 3.0], [2.0, 2.0], [2.0, 2.0]])
+    ref = np.array([4.0, 4.0])
+    sa = rng.normal(2.0, 1.0, (8, 5))
+    sb = rng.normal(2.0, 1.0, (8, 5))
+    np.testing.assert_allclose(mc_ehvi_batched(sa, sb, obs, ref),
+                               mc_ehvi(sa, sb, obs, ref), atol=1e-10)
+    # all samples dominated -> exactly zero improvement everywhere
+    dom_a = np.full((4, 3), 3.0)
+    dom_b = np.full((4, 3), 3.9)
+    np.testing.assert_array_equal(
+        mc_ehvi_batched(dom_a, dom_b, np.array([[1.0, 1.0]]), ref),
+        np.zeros(3))
+    # empty front: improvement is the whole box below the reference
+    np.testing.assert_allclose(
+        mc_ehvi_batched(np.array([[1.0]]), np.array([[1.0]]),
+                        np.empty((0, 2)), ref),
+        [9.0], atol=1e-12)
 
 
 def test_mc_ehvi_prefers_dominating_point():

@@ -1,12 +1,13 @@
 """Multi-tenant SearchService: batching, shared cache, serving semantics,
-async profiling (ProfileExecutor backends + WAITING_PROFILE overlap)."""
+async profiling (ProfileExecutor backends + WAITING_PROFILE overlap),
+fused posterior/acquisition query plan, multi-objective sessions."""
 import threading
 
 import numpy as np
 import pytest
 
 from repro.core import (BOConfig, Constraint, Objective, Repository,
-                        run_search, scout_search_space)
+                        run_search, run_search_moo, scout_search_space)
 from repro.serve.profile_executor import (FakeProfileExecutor, ProfileJob,
                                           SyncProfileExecutor,
                                           ThreadPoolProfileExecutor)
@@ -328,3 +329,146 @@ def test_service_cross_tenant_rgpe_batched_in_one_call():
     assert svc.stats["rgpe_jobs"] > svc.stats["rgpe_batches"]
     # 3 scoring steps (obs 3 -> 6), one batch each
     assert svc.stats["rgpe_batches"] == 3
+
+
+# -- fused posterior query plan + multi-objective serving --------------------
+
+
+def _moo_request(seed, *, method="naive", wid=WID, max_iters=5, n_mc=16,
+                 **kw):
+    return SearchRequest(
+        SPACE, lambda c: EMU.run(wid, c, rng=None), None,
+        [Constraint("runtime", EMU.runtime_target(wid, 50))],
+        method=method, bo_config=BOConfig(max_iters=max_iters), seed=seed,
+        objectives=[Objective("cost"), Objective("energy")], n_mc=n_mc,
+        **kw)
+
+
+def test_service_rejects_malformed_moo_requests():
+    svc = SearchService()
+    # objective AND objectives
+    with pytest.raises(ValueError, match="either objective or objectives"):
+        svc.submit(SearchRequest(
+            SPACE, lambda c: EMU.run(WID, c), Objective("cost"),
+            objectives=[Objective("cost"), Objective("energy")]))
+    # wrong arity
+    with pytest.raises(ValueError, match="2-objective"):
+        svc.submit(SearchRequest(SPACE, lambda c: EMU.run(WID, c), None,
+                                 objectives=[Objective("cost")]))
+    # neither
+    with pytest.raises(ValueError, match="needs an objective"):
+        svc.submit(SearchRequest(SPACE, lambda c: EMU.run(WID, c), None))
+    # augmented has no MOO path
+    with pytest.raises(ValueError, match="naive|karasu"):
+        svc.submit(_moo_request(0, method="augmented"))
+
+
+def test_service_step_fuses_all_grid_posteriors():
+    """A single-space cohort's step executes EVERY grid posterior —
+    targets, all RGPE support stacks, SO and MOO tenants — in ONE padded
+    batched_posterior launch: posterior_batches counts scoring steps,
+    posterior_queries the fused stacks."""
+    repo = _support_repo()
+    svc = SearchService(repo, slots=4)
+    for s in range(2):
+        svc.submit(_request(s, method="karasu", max_iters=6))
+    for s in range(2):
+        svc.submit(_moo_request(10 + s, method="karasu", max_iters=6))
+    done = svc.run()
+    assert len(done) == 4
+    # lockstep cohort: scoring steps = max_iters - n_init = 3, and every
+    # step fused its targets + all ensembles into one launch
+    assert svc.stats["posterior_batches"] == 3
+    # each scoring step queried 1 target stack + one support stack per
+    # (karasu tenant, measure): strictly more queries than launches
+    assert svc.stats["posterior_queries"] > svc.stats["posterior_batches"]
+
+
+def test_service_fused_posteriors_match_per_session_loop():
+    """Acceptance: fused-plan posteriors/acquisitions agree with the
+    per-session-loop path (fuse_posteriors=False) to 1e-4."""
+    def build(fuse):
+        svc = SearchService(_support_repo(), slots=4,
+                            fuse_posteriors=fuse)
+        for s in range(2):
+            svc.submit(_request(s, method="karasu"))
+        svc.submit(_moo_request(7, method="karasu"))
+        svc.step()          # admit + init + first scoring round
+        return svc
+
+    fused, loop = build(True), build(False)
+    s_f = [fused.active[r] for r in sorted(fused.active)]
+    s_l = [loop.active[r] for r in sorted(loop.active)]
+    # both services took identical trajectories so far
+    for a, b in zip(s_f, s_l):
+        assert [o.config for o in a.observations] == \
+            [o.config for o in b.observations]
+    posts_f = fused._batched_posteriors(s_f)
+    posts_l = loop._batched_posteriors(s_l)
+    assert fused.stats["posterior_batches"] >= 1
+    assert loop.stats["posterior_batches"] == 0
+    for a in s_f:
+        for m in a.measures:
+            np.testing.assert_allclose(
+                np.asarray(posts_f[a.rid][m]["mu"]),
+                np.asarray(posts_l[a.rid][m]["mu"]), atol=1e-4)
+            np.testing.assert_allclose(
+                np.asarray(posts_f[a.rid][m]["var"]),
+                np.asarray(posts_l[a.rid][m]["var"]), atol=1e-4)
+    # MOO acquisition: batched EHVI vs the per-candidate reference loop
+    # on the same posteriors
+    moo_f = next(s for s in s_f if s.is_moo)
+    rem = moo_f.remaining()
+    acq_f = fused._moo_acquisition(moo_f, posts_f[moo_f.rid], rem)
+    acq_l = loop._moo_acquisition(moo_f, posts_f[moo_f.rid], rem)
+    np.testing.assert_allclose(acq_f, acq_l, atol=1e-4)
+
+
+def test_service_mixed_so_moo_cohort_deterministic():
+    """Acceptance: a mixed single-objective + MOO multi-tenant cohort on
+    the fake executor is bit-for-bit deterministic across runs."""
+    def run_once():
+        latency = {0: 2, 1: 1, 2: 3, 3: 1}
+        svc = SearchService(
+            _support_repo(), slots=4,
+            executor=FakeProfileExecutor(lambda j: latency[j.rid]),
+            wait_mode="any")
+        svc.submit(_request(0, method="karasu", max_iters=5))
+        svc.submit(_request(1, method="naive", max_iters=5))
+        svc.submit(_moo_request(2, method="karasu"))
+        svc.submit(_moo_request(3, method="naive"))
+        return {c.rid: c.result for c in svc.run()}
+
+    a, b = run_once(), run_once()
+    assert sorted(a) == sorted(b) == [0, 1, 2, 3]
+    for rid in a:
+        assert (_result_fingerprint(a[rid])
+                == _result_fingerprint(b[rid])), rid
+    # MOO results carry their Pareto front
+    for rid in (2, 3):
+        assert a[rid].meta["moo"] is True
+        front = a[rid].meta["pareto_front"]
+        assert front.ndim == 2 and front.shape[1] == 2 and len(front) >= 1
+        np.testing.assert_array_equal(front, b[rid].meta["pareto_front"])
+
+
+def test_run_search_moo_routes_through_service():
+    """run_search_moo is a thin driver over SearchService: one slot,
+    sync executor, identical trajectory to an explicit submission."""
+    rng = np.random.default_rng(0)
+    r = run_search_moo(SPACE, lambda c: EMU.run(WID, c, rng=rng),
+                       [Objective("cost"), Objective("energy")],
+                       [Constraint("runtime", RT)], method="naive",
+                       bo_config=BOConfig(max_iters=6), seed=3, n_mc=16)
+    assert len(r.observations) == 6
+    assert r.meta["moo"] is True and r.meta["n_profiled"] == 6
+
+    rng = np.random.default_rng(0)
+    svc = SearchService(slots=1)
+    svc.submit(SearchRequest(
+        SPACE, lambda c: EMU.run(WID, c, rng=rng), None,
+        [Constraint("runtime", RT)], method="naive",
+        bo_config=BOConfig(max_iters=6), seed=3,
+        objectives=[Objective("cost"), Objective("energy")], n_mc=16))
+    (c,) = svc.run()
+    assert _result_fingerprint(c.result) == _result_fingerprint(r)
