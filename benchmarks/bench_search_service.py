@@ -24,19 +24,24 @@ overlap their cluster runs while landed sessions keep fitting:
   search_service_async_profilers  — us per tenant-iteration
   search_service_async_speedup    — derived (acceptance: >= 2.0)
 
-With ``--moo`` it measures the fused posterior/acquisition query plan on
+With ``--moo`` it measures the fused posterior + sample query plans on
 a mixed single-objective + multi-objective karasu cohort: the fused
-service (one padded batched_posterior launch per step + vectorised
-MC-EHVI) vs ``fuse_posteriors=False`` (per-ensemble posterior loop +
-per-candidate EHVI reference):
-  search_service_moo_loop     — per-session-loop path, us/tenant-iter
-  search_service_moo_fused    — fused query plan,      us/tenant-iter
+service (one padded batched_posterior launch per step, fused RGPE
+support-sample draws via batched_sample_multi, vmapped multi-session
+MC-EHVI) vs the loop path (``fuse_posteriors=False, fuse_samples=False``
+— per-ensemble posteriors, per-job sample draws, per-candidate EHVI
+reference):
+  search_service_moo_loop     — loop path,             us/tenant-iter
+  search_service_moo_fused    — fused query plans,     us/tenant-iter
   search_service_moo_speedup  — derived (acceptance: >= 2.0 at 8 tenants)
+  search_service_moo_sample_speedup — fused-samples-vs-sample-loop
+                                contribution (posteriors fused in both)
 
 With ``--smoke`` it runs a tiny mixed cohort (3 tenants incl. one MOO,
-4 iterations) end to end and asserts completion — the CPU CI hook that
-fails fast when the serving path regresses, instead of waiting for the
-weekly slow job.
+4 iterations) end to end, asserts completion AND that the sample-draw
+fusion actually engaged (sample_batches << sample_queries) — the CPU CI
+hook that fails fast when the serving path regresses, instead of
+waiting for the weekly slow job.
 """
 from __future__ import annotations
 
@@ -177,7 +182,7 @@ def slow_profilers() -> None:
            f"{sync_s / async_s:.2f}")
 
 
-def _moo_mixed_requests(sp, tenants, targets, max_iters, *, n_mc=32):
+def _moo_mixed_requests(sp, tenants, targets, max_iters, *, n_mc=64):
     """Every other tenant is multi-objective (cost x energy under the
     runtime constraint); the rest single-objective. All karasu, so the
     fused plan carries targets AND support stacks for both kinds."""
@@ -199,8 +204,10 @@ def _moo_mixed_requests(sp, tenants, targets, max_iters, *, n_mc=32):
 
 
 def _service_moo(sp, tenants, repo, targets, max_iters, *,
-                 fuse: bool) -> float:
-    svc = SearchService(repo, slots=len(tenants), fuse_posteriors=fuse)
+                 fuse: bool, fuse_samples=None) -> float:
+    svc = SearchService(repo, slots=len(tenants), fuse_posteriors=fuse,
+                        fuse_samples=(fuse if fuse_samples is None
+                                      else fuse_samples))
     for req in _moo_mixed_requests(sp, tenants, targets, max_iters):
         svc.submit(req)
     t0 = time.time()
@@ -210,28 +217,39 @@ def _service_moo(sp, tenants, repo, targets, max_iters, *,
 
 
 def moo_mixed() -> None:
-    """Fused query plan vs per-session-loop posteriors on a mixed
-    SO+MOO karasu cohort (the ISSUE-3 acceptance scenario)."""
+    """Fused posterior + sample query plans vs the per-session loop on
+    a mixed SO+MOO karasu cohort (the ISSUE-3/ISSUE-4 acceptance
+    scenario)."""
     n_tenants = 8
     max_iters = MAX_ITERS.get(C.SCALE, 10)
     sp, tenants, repo, targets = _setup(n_tenants)
     iters_total = n_tenants * max_iters
 
-    # untimed jit warmup at the timed shapes for both paths
-    warm = min(6, max_iters)
+    # untimed jit warmup at the timed shapes for every measured path —
+    # FULL length: the sample plan's grid buckets track the growing
+    # observation count, so a shorter warmup would charge the fused
+    # path for late-step bucket compiles the loop never pays
+    warm = max_iters
     _service_moo(sp, tenants, _fresh_repo(repo), targets, warm, fuse=True)
     _service_moo(sp, tenants, _fresh_repo(repo), targets, warm, fuse=False)
+    _service_moo(sp, tenants, _fresh_repo(repo), targets, warm,
+                 fuse=True, fuse_samples=False)
 
     loop_s = _service_moo(sp, tenants, _fresh_repo(repo), targets,
                           max_iters, fuse=False)
     fused_s = _service_moo(sp, tenants, _fresh_repo(repo), targets,
                            max_iters, fuse=True)
+    # posterior plan fused in both; isolates the sample-draw fusion
+    sloop_s = _service_moo(sp, tenants, _fresh_repo(repo), targets,
+                           max_iters, fuse=True, fuse_samples=False)
 
     C.emit("search_service_moo_loop", loop_s * 1e6 / iters_total,
            f"{n_tenants}tenants")
     C.emit("search_service_moo_fused", fused_s * 1e6 / iters_total,
            f"{n_tenants}tenants")
     C.emit("search_service_moo_speedup", 0.0, f"{loop_s / fused_s:.2f}")
+    C.emit("search_service_moo_sample_speedup", 0.0,
+           f"{sloop_s / fused_s:.2f}")
 
 
 def smoke() -> None:
@@ -264,6 +282,13 @@ def smoke() -> None:
     assert done[2].meta["moo"] is True
     assert len(done[2].meta["pareto_front"]) >= 1
     assert svc.stats["posterior_batches"] >= 1, svc.stats
+    # the sample query plan must have engaged: every scoring step's RGPE
+    # support draws and MOO EHVI draws ride far fewer fused launches
+    # than the (tenant, measure/objective) draws they carry
+    assert svc.stats["sample_batches"] >= 1, svc.stats
+    assert svc.stats["sample_queries"] > svc.stats["sample_batches"], \
+        svc.stats
+    assert svc.stats["ehvi_batches"] >= 1, svc.stats
     C.emit("search_service_smoke", dt * 1e6 / (3 * max_iters), "ok")
 
 

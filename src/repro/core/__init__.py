@@ -11,8 +11,8 @@ from .bo import BOConfig, KarasuContext, run_search
 from .encoding import (SearchSpace, aws_search_space, scout_search_space,
                        tpu_search_space)
 from .gp import (GP, BatchedGP, batched_posterior, batched_posterior_multi,
-                 batched_sample, fit_gp, fit_gp_batched, gp_posterior,
-                 gp_posterior_raw, stack_gps)
+                 batched_sample, batched_sample_multi, fit_gp,
+                 fit_gp_batched, gp_posterior, gp_posterior_raw, stack_gps)
 from .moo import pareto_of_result, run_search_moo
 from .repository import Repository, SupportModelStore
 from .rgpe import (BatchedEnsemble, Ensemble, WeightJob, build_ensemble,
@@ -27,7 +27,8 @@ __all__ = [
     "SAR_METRICS", "aggregate_metrics", "BOConfig", "KarasuContext",
     "run_search", "SearchSpace", "aws_search_space", "scout_search_space",
     "tpu_search_space", "GP", "BatchedGP", "batched_posterior",
-    "batched_posterior_multi", "batched_sample", "fit_gp", "fit_gp_batched",
+    "batched_posterior_multi", "batched_sample", "batched_sample_multi",
+    "fit_gp", "fit_gp_batched",
     "gp_posterior", "gp_posterior_raw", "stack_gps", "pareto_of_result",
     "run_search_moo",
     "Repository", "SupportModelStore", "BatchedEnsemble", "Ensemble",

@@ -8,7 +8,7 @@ objectives by the probability of feasibility under every constraint.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -177,3 +177,97 @@ def mc_ehvi_batched(samples_a: np.ndarray, samples_b: np.ndarray,
                 0.0, None)
     h = np.clip(np.minimum(heights, ref[1]) - pb, 0.0, None)
     return np.sum(w * h, axis=-1).mean(axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Fused EHVI: MANY sessions' staircases in one vmapped launch
+# ---------------------------------------------------------------------------
+
+
+EhviJob = Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]
+# (samples_a (S, q), samples_b (S, q), observed (n, 2), ref (2,))
+
+
+@jax.jit
+def _ehvi_staircase_launch(lefts, rights, heights, refs, pa, pb):
+    """Per-lane staircase EHVI. lefts/rights/heights: (L, K) segment
+    bounds (padding segments have left = right = +inf, contributing
+    exactly zero width); refs: (L, 2); pa/pb: (L, S, q). -> (L, q)."""
+    ref_a = refs[:, 0][:, None, None, None]
+    ref_b = refs[:, 1][:, None, None, None]
+    seg_l = lefts[:, None, None, :]
+    seg_r = rights[:, None, None, :]
+    seg_h = heights[:, None, None, :]
+    w = jnp.clip(jnp.minimum(seg_r, ref_a)
+                 - jnp.maximum(seg_l, pa[..., None]), 0.0, None)
+    h = jnp.clip(jnp.minimum(seg_h, ref_b) - pb[..., None], 0.0, None)
+    return jnp.mean(jnp.sum(w * h, axis=-1), axis=1)
+
+
+def mc_ehvi_multi(jobs: Sequence[EhviJob], *,
+                  q_round_to: int = 8, m_round_pow2: bool = True,
+                  counters: Optional[dict] = None) -> List[np.ndarray]:
+    """MANY sessions' MC-EHVI evaluations as ONE vmapped staircase
+    launch per (S, q) bucket — the acquisition-side leg of the sample
+    query plan (every MOO session of a service step becomes a lane
+    instead of a per-session numpy broadcast).
+
+    Each job is ``(samples_a, samples_b, observed, ref)`` exactly as
+    ``mc_ehvi_batched`` takes them. For jit-shape stability while
+    candidate sets shrink and fronts grow step to step, fronts pad to a
+    power-of-two segment count with zero-width (+inf) segments, the
+    candidate axis to a ``q_round_to`` bucket with +inf sample points
+    (zero hypervolume gain, sliced off), and the lane axis to a power of
+    two — mirroring the posterior/sample plans' shape discipline.
+    Returns one ``(q,)`` array per job, in input order, matching
+    ``mc_ehvi_batched`` to float32 roundoff (the fused kernel computes
+    in f32; the numpy twin stays the f64 parity oracle).
+    """
+    results: List[Optional[np.ndarray]] = [None] * len(jobs)
+    stairs = [_staircase(pareto_front(np.asarray(obs)), np.asarray(ref))
+              for _, _, obs, ref in jobs]
+    groups: dict = {}
+    for i, (sa, _, _, _) in enumerate(jobs):
+        sa = np.asarray(sa)
+        groups.setdefault((int(sa.shape[0]), int(sa.shape[1])),
+                          []).append(i)
+
+    for (_s, q), idxs in groups.items():
+        k_max = max(stairs[i][0].shape[0] for i in idxs)
+        k_pad = 1 << (k_max - 1).bit_length()
+        q_pad = q
+        if q_round_to > 1:
+            q_pad = ((q + q_round_to - 1) // q_round_to) * q_round_to
+        ls, rs, hs, refs, pas, pbs = [], [], [], [], [], []
+        for i in idxs:
+            lefts, rights, heights = stairs[i]
+            p = k_pad - lefts.shape[0]
+            # zero-width padding: left = right = +inf clips to w = 0
+            ls.append(np.pad(lefts, (0, p), constant_values=np.inf))
+            rs.append(np.pad(rights, (0, p), constant_values=np.inf))
+            hs.append(np.pad(heights, (0, p), constant_values=0.0))
+            refs.append(np.asarray(jobs[i][3], np.float32))
+            # +inf candidates gain nothing and are sliced off below
+            pas.append(np.pad(np.asarray(jobs[i][0], np.float32),
+                              ((0, 0), (0, q_pad - q)),
+                              constant_values=np.inf))
+            pbs.append(np.pad(np.asarray(jobs[i][1], np.float32),
+                              ((0, 0), (0, q_pad - q)),
+                              constant_values=np.inf))
+        parts = [jnp.asarray(np.stack(a).astype(np.float32))
+                 for a in (ls, rs, hs, refs, pas, pbs)]
+        l_total = len(idxs)
+        if m_round_pow2:
+            l_pad = 1 << (l_total - 1).bit_length()
+            if l_pad > l_total:
+                parts = [jnp.concatenate(
+                    [a, jnp.broadcast_to(a[:1],
+                                         (l_pad - l_total,) + a.shape[1:])])
+                    for a in parts]
+        out = _ehvi_staircase_launch(*parts)
+        for j, i in enumerate(idxs):
+            results[i] = np.asarray(out[j])[:q]
+        if counters is not None:
+            counters["launches"] = counters.get("launches", 0) + 1
+            counters["queries"] = counters.get("queries", 0) + len(idxs)
+    return results

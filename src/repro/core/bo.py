@@ -34,6 +34,23 @@ ProfileFn = Callable[[Mapping], Tuple[Dict[str, float], np.ndarray]]
 # profile_fn(config) -> (measures, compact metric matrix)
 
 
+# PRNG purpose tags. Every per-iteration key consumer derives its keys
+# as nested fold_ins of (purpose, iteration, index) — distinct purposes
+# give disjoint subtrees, so no arithmetic on tag integers can make two
+# consumers collide (the old ``1000 + it * 10 + oi`` MOO tag shared the
+# integer space with every other single-fold tag).
+KEY_PURPOSE_RGPE = 0          # RGPE support-sample draws (index: measure)
+KEY_PURPOSE_MOO_EHVI = 1      # MC-EHVI posterior draws (index: objective)
+
+
+def derive_key(base: jax.Array, purpose: int, it: int,
+               index: int) -> jax.Array:
+    """Collision-free per-(purpose, iteration, index) PRNG key."""
+    k = jax.random.fold_in(base, purpose)
+    k = jax.random.fold_in(k, it)
+    return jax.random.fold_in(k, index)
+
+
 @dataclasses.dataclass(frozen=True)
 class BOConfig:
     n_init: int = 3
@@ -133,15 +150,21 @@ class KarasuContext:
 
     @staticmethod
     def score_ensembles(jobs: Sequence[WeightJob], *,
-                        impl: str = "xla") -> List:
+                        impl: str = "xla", fuse_samples: bool = True,
+                        sample_counters: Optional[dict] = None) -> List:
         """RGPE weights for every queued (tenant, measure) ensemble of a
-        scheduling round in ONE padded ranking-loss launch. Static — the
+        scheduling round in ONE padded ranking-loss launch, with every
+        job's support-sample draw fused into the sample query plan
+        (``batched_sample_multi``; ``fuse_samples=False`` restores the
+        per-job draw loop, the parity/benchmark baseline). Static — the
         weighting depends only on the jobs, never on context state, so a
         service may score jobs spanning several contexts in one call.
         Single-tenant ``run_search`` batches its measures through the
         same entry point, so the serving path and the reference loop
         cannot diverge."""
-        return compute_weights_multi(jobs, impl=impl)
+        return compute_weights_multi(jobs, impl=impl,
+                                     fuse_samples=fuse_samples,
+                                     sample_counters=sample_counters)
 
 
 def _target_runs(observations) -> List[RunRecord]:
@@ -274,9 +297,13 @@ def run_search(
         xq = xq_all[remaining]
 
         if method == "karasu" and repository is not None:
+            # per-measure jobs fold_in(mi) below this root, completing
+            # the derive_key(key, RGPE, it, mi) schedule the service's
+            # _rgpe_jobs derives identically
+            rgpe_root = jax.random.fold_in(
+                jax.random.fold_in(key, KEY_PURPOSE_RGPE), it)
             post, selected = _model_posteriors_karasu(
-                observations, measures, cfg, ctx,
-                jax.random.fold_in(key, it), xq)
+                observations, measures, cfg, ctx, rgpe_root, xq)
             meta["selected"].append([z for z, _ in selected])
         elif method == "augmented":
             post = _model_posteriors_augmented(observations, measures, cfg,

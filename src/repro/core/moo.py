@@ -37,13 +37,17 @@ def run_search_moo(
     bo_config: BOConfig = BOConfig(),
     seed: int = 0,
     n_mc: int = 64,
+    fuse_posteriors: bool = True,
+    fuse_samples: bool = True,
 ) -> BOResult:
     assert len(objectives) == 2, "MC-EHVI path implemented for 2 objectives"
     # imported here: serve sits above core in the layering, and the
     # driver is the one place core reaches back up into it
     from repro.serve.search_service import SearchRequest, SearchService
 
-    svc = SearchService(repository, slots=1)
+    svc = SearchService(repository, slots=1,
+                        fuse_posteriors=fuse_posteriors,
+                        fuse_samples=fuse_samples)
     svc.submit(SearchRequest(space, profile_fn, None, constraints,
                              method=method, bo_config=bo_config, seed=seed,
                              objectives=tuple(objectives), n_mc=n_mc))

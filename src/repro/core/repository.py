@@ -130,6 +130,9 @@ class SupportModelStore:
         self._min_runs = min_runs
         # (workload, measure) -> (repo version at fit time, GP | None)
         self._cache: Dict[Tuple[str, str], Tuple[int, Optional[object]]] = {}
+        # (workload ids, measure) -> (versions at stack time, stack, ids)
+        self._stacked: Dict[Tuple[Tuple[str, ...], str],
+                            Tuple[Tuple[int, ...], object, list]] = {}
         self.hits = 0
         self.misses = 0
 
@@ -161,22 +164,45 @@ class SupportModelStore:
 
     def get_stacked(self, workload_ids: Sequence[str], measure: str):
         """BatchedGP over the available support models for ``measure``
-        (skipping unusable workloads); returns (BatchedGP | None, ids)."""
+        (skipping unusable workloads); returns (BatchedGP | None, ids).
+
+        Stacks are version-cached like the per-model fits (a service
+        step re-requests the same support stacks every round — without
+        the cache each request re-assembles and re-uploads the padded
+        arrays) and padded to multiples of 8, so the posterior/sample
+        query plans see stable, already-bucketed shapes."""
         from .gp import stack_gps
+        key = (tuple(workload_ids), measure)
+        vers = tuple(self._repo.version(z) for z in workload_ids)
+        hit = self._stacked.get(key)
+        if hit is not None and hit[0] == vers:
+            self.hits += len(hit[2])
+            return hit[1], list(hit[2])
         gps, ids = [], []
         for z in workload_ids:
             gp = self.get(z, measure)
             if gp is not None:
                 gps.append(gp)
                 ids.append(z)
-        if not gps:
-            return None, []
-        return stack_gps(gps), ids
+        stack = stack_gps(gps, round_to=8) if gps else None
+        # misses are rare (a repo version moved, or a new support set):
+        # use them to evict version-stale entries, so a long-running
+        # service's cache tracks the live support sets instead of
+        # accumulating dead padded stacks
+        stale = [k for k, (v, _, _) in self._stacked.items()
+                 if v != tuple(self._repo.version(z) for z in k[0])]
+        for k in stale:
+            del self._stacked[k]
+        self._stacked[key] = (vers, stack, ids)
+        return stack, list(ids)
 
     def invalidate(self, workload_id: Optional[str] = None) -> None:
         """Drop cached fits (one workload, or everything)."""
         if workload_id is None:
             self._cache.clear()
+            self._stacked.clear()
         else:
             for k in [k for k in self._cache if k[0] == workload_id]:
                 del self._cache[k]
+            for k in [k for k in self._stacked if workload_id in k[0]]:
+                del self._stacked[k]

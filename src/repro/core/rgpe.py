@@ -39,7 +39,8 @@ import numpy as np
 
 from repro.kernels.ranking_loss import ranking_loss, ranking_loss_padded
 from .gp import (GP, BatchedGP, batched_posterior, batched_sample,
-                 gp_loo_samples, gp_posterior, gp_sample)
+                 batched_sample_multi, gp_loo_samples, gp_posterior,
+                 gp_sample, loo_sample_multi)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,6 +100,25 @@ def _weights_from_losses(loss_mat: jnp.ndarray,
     return w / jnp.sum(w)
 
 
+def _weights_from_losses_batched(loss_mats: jnp.ndarray,
+                                 dilution_percentile: float) -> jnp.ndarray:
+    """(J, m+1, S) stacked ranking losses -> (J, m+1) simplex weights.
+    Same per-job ops as ``_weights_from_losses``, vectorised over the
+    job axis so a scoring round reduces all ensembles of a (m, S) shape
+    group in one pass of array ops instead of a per-job Python loop."""
+    tar_pct = jnp.percentile(loss_mats[:, -1, :], dilution_percentile,
+                             axis=-1)
+    medians = jnp.median(loss_mats, axis=-1)
+    diluted = medians > tar_pct[:, None]
+    diluted = diluted.at[:, -1].set(False)                # never drop target
+    lm = jnp.where(diluted[:, :, None], jnp.inf, loss_mats)
+
+    mins = jnp.min(lm, axis=1, keepdims=True)
+    is_min = (lm == mins).astype(jnp.float32)
+    w = jnp.mean(is_min / jnp.sum(is_min, axis=1, keepdims=True), axis=2)
+    return w / jnp.sum(w, axis=1, keepdims=True)
+
+
 def compute_weights_batched(
     bases: BatchedGP,
     target: GP,
@@ -144,6 +164,8 @@ def compute_weights_multi(
     *,
     dilution_percentile: float = 95.0,
     impl: str = "xla",
+    fuse_samples: bool = True,
+    sample_counters: Optional[dict] = None,
 ) -> List[jnp.ndarray]:
     """Score MANY ensembles with ONE padded ranking-loss launch.
 
@@ -154,20 +176,49 @@ def compute_weights_multi(
     ``ranking_loss_padded`` call — ragged n_obs is handled by per-row
     validity masks, mirroring ``BatchedGP``'s padding contract. Jobs with
     n_obs < 2 short-circuit to uniform weights (no rankable pair).
+
+    With ``fuse_samples`` (the default) every job's support-sample draw
+    joins ONE ``batched_sample_multi`` launch per (S, q, d) bucket and
+    every target's closed-form LOO draw ONE ``loo_sample_multi`` launch
+    per (S, n) bucket — the sample query plan — instead of per-job
+    ``batched_sample`` / ``gp_loo_samples`` loops; draw streams are
+    identical either way, so weights agree to float roundoff.
+    ``sample_counters`` forwards to the plans' ``counters``. The final
+    weight reduction runs vectorised per (m, S) shape group
+    (``_weights_from_losses_batched``) on both paths.
     """
     out: List[Optional[jnp.ndarray]] = [None] * len(jobs)
-    rows_p, rows_y, rows_nv, spans = [], [], [], []
+    live: List[Tuple[int, WeightJob, jax.Array]] = []
     for ji, job in enumerate(jobs):
-        y_tar = job.target.y
-        n = int(y_tar.shape[0])
+        n = int(job.target.y.shape[0])
         m = job.bases.m
         if n < 2:
             out[ji] = jnp.full((m + 1,), 1.0 / (m + 1))
             continue
-        keys = jax.random.split(job.key, m + 1)
-        s_base = batched_sample(job.bases, job.target.x, keys[:m],
-                                job.n_samples, impl=impl)    # (m, S, n)
-        s_tar = gp_loo_samples(job.target, keys[-1], job.n_samples)
+        live.append((ji, job, jax.random.split(job.key, m + 1)))
+
+    if fuse_samples:
+        s_bases = batched_sample_multi(
+            [(job.bases, job.target.x, keys[:job.bases.m], job.n_samples)
+             for _, job, keys in live],
+            impl=impl, counters=sample_counters)
+        s_tars = loo_sample_multi(
+            [(job.target, keys[-1], job.n_samples)
+             for _, job, keys in live],
+            counters=sample_counters)
+    else:
+        s_bases = [batched_sample(job.bases, job.target.x,
+                                  keys[:job.bases.m], job.n_samples,
+                                  impl=impl)
+                   for _, job, keys in live]
+        s_tars = [gp_loo_samples(job.target, keys[-1], job.n_samples)
+                  for _, job, keys in live]
+
+    rows_p, rows_y, rows_nv, spans = [], [], [], []
+    for (ji, job, keys), s_base, s_tar in zip(live, s_bases, s_tars):
+        y_tar = job.target.y
+        n = int(y_tar.shape[0])
+        m = job.bases.m
         stacked = jnp.concatenate(
             [s_base.reshape(m * job.n_samples, n), s_tar])  # ((m+1)S, n)
         rows_p.append(stacked)
@@ -184,12 +235,21 @@ def compute_weights_multi(
         [jnp.pad(y, ((0, 0), (0, n_max - y.shape[1]))) for y in rows_y])
     loss = ranking_loss_padded(preds, ys, jnp.concatenate(rows_nv),
                                impl=impl)
-    off = 0
+    # one vectorised weight reduction per (m, S) shape group instead of
+    # a per-job loop of small eager ops
+    offs, off = [], 0
     for ji, m, s in spans:
-        rows = (m + 1) * s
-        loss_mat = loss[off:off + rows].reshape(m + 1, s)
-        out[ji] = _weights_from_losses(loss_mat, dilution_percentile)
-        off += rows
+        offs.append(off)
+        off += (m + 1) * s
+    wgroups: dict = {}
+    for (ji, m, s), o in zip(spans, offs):
+        wgroups.setdefault((m, s), []).append((ji, o))
+    for (m, s), entries in wgroups.items():
+        mats = jnp.stack([loss[o:o + (m + 1) * s].reshape(m + 1, s)
+                          for _, o in entries])
+        ws = _weights_from_losses_batched(mats, dilution_percentile)
+        for (ji, _), w in zip(entries, ws):
+            out[ji] = w
     return out
 
 

@@ -31,6 +31,12 @@ _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\S.*?)\s(\S+)\(")
 _COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{\s*$")
 _WHILE_RE = re.compile(
     r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+# one operand of an op: an optional typed shape prefix, then the %name
+# (XLA prints `dot(f32[16,64]{1,0} %lhs, ...)` in compiled modules but
+# bare `dot(%lhs, ...)` in hand-written ones — both must parse)
+_OPERAND_RE = re.compile(
+    r"(?:(\w+\[[\d,]*\](?:\{[^}]*\})?)\s+)?%([\w.\-]+)")
 _CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
 _TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
 _GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
@@ -90,9 +96,11 @@ def _dot_stats(line: str, symtab: Dict[str, str]) -> Tuple[int, int]:
     flops = 0
     op_bytes = result_bytes
     if ops:
-        operands = [o.strip().lstrip("%") for o in ops.group(1).split(",")]
-        lhs_def = symtab.get(operands[0], "")
-        lhs_m = _SHAPE_RE.search(lhs_def)
+        # each operand is `[type ]%name`; resolve its shape from the
+        # inline type when present, else from the defining line
+        operands = [(shape or symtab.get(name, ""))
+                    for shape, name in _OPERAND_RE.findall(ops.group(1))]
+        lhs_m = _SHAPE_RE.search(operands[0]) if operands else None
         contract = 1
         if lhs_m and cm and cm.group(1):
             dims = [int(x) for x in lhs_m.group(2).split(",")] \
@@ -103,7 +111,7 @@ def _dot_stats(line: str, symtab: Dict[str, str]) -> Tuple[int, int]:
                     contract *= dims[ci]
         flops = 2 * result_els * contract
         for o in operands:
-            _, b = _first_shape(symtab.get(o, ""))
+            _, b = _first_shape(o)
             op_bytes += b
     return flops, op_bytes
 
@@ -165,8 +173,14 @@ def parse_hlo(text: str) -> Dict[str, Computation]:
                         break
         wm = _WHILE_RE.search(line)
         if wm:
+            # XLA's loop analysis attaches the exact trip count as
+            # backend_config={"known_trip_count":{"n":...}}; prefer it
+            # over the max-constant heuristic on the condition
+            tm = _TRIP_RE.search(line)
+            known = tm.group(1) if tm else ""
             current.edges.append((wm.group(1), "cond"))
-            current.edges.append((wm.group(2), "while_body:" + wm.group(1)))
+            current.edges.append(
+                (wm.group(2), f"while_body:{wm.group(1)}:{known}"))
         else:
             for cm in _CALLS_RE.finditer(line):
                 current.edges.append((cm.group(1), "call"))
@@ -204,27 +218,33 @@ def analyze(text: str) -> Dict[str, float]:
 
     mult: Dict[str, float] = defaultdict(float)
     mult[entry.name] = 1.0
-    # BFS through call graph propagating multipliers
-    order = [entry.name]
-    seen = {entry.name}
-    i = 0
-    while i < len(order):
-        name = order[i]
-        i += 1
-        c = comps.get(name)
-        if c is None:
-            continue
-        for callee, kind in c.edges:
-            m = mult[name]
-            if kind.startswith("while_body:"):
-                cond = kind.split(":", 1)[1]
-                m = m * _trip_count(comps, cond)
-            if callee in comps:
-                mult[callee] += 0.0  # ensure key
-                mult[callee] = max(mult[callee], m)
-                if callee not in seen:
-                    seen.add(callee)
-                    order.append(callee)
+    # Propagate multipliers through the call graph to a fixed point.
+    # A single-visit BFS is NOT enough: a computation first discovered
+    # via a low-multiplier edge (e.g. a fused computation `calls=`-ed
+    # from the entry) would keep its stale multiplier for its own
+    # callees when a while body later reaches it at trip-count weight —
+    # exactly how scan-body dot flops used to lose the loop factor.
+    # HLO call graphs are acyclic, so len(comps) sweeps always reach the
+    # fixed point; the explicit bound keeps malformed (cyclic) input
+    # from hanging the parser instead of returning a finite answer.
+    changed = True
+    sweeps = 0
+    while changed and sweeps <= len(comps):
+        changed = False
+        sweeps += 1
+        for name in list(mult):
+            c = comps.get(name)
+            if c is None:
+                continue
+            for callee, kind in c.edges:
+                m = mult[name]
+                if kind.startswith("while_body:"):
+                    _, cond, known = kind.split(":", 2)
+                    m = m * (int(known) if known
+                             else _trip_count(comps, cond))
+                if callee in comps and mult[callee] < m:
+                    mult[callee] = m
+                    changed = True
 
     dot_flops = dot_bytes = coll_bytes = coll_bf16eq = 0.0
     coll_by_kind: Dict[str, float] = defaultdict(float)

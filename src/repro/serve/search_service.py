@@ -21,12 +21,18 @@ Two axes are batched/overlapped across tenants:
     constraint models, across all tenants — as ONE fused
     ``batched_posterior_multi`` launch (the posterior/acquisition query
     plan; ``impl="auto"`` routes it to the Pallas matern kernel on TPU
-    when the fused models x grid batch justifies it). RGPE mixing and
+    when the fused models x grid batch justifies it). The step's SAMPLE
+    draws ride the same plan architecture: every RGPE ensemble's
+    support-sample draw fuses into one ``batched_sample_multi`` launch
+    per (n_samples, grid, dim) bucket, and every MOO session's MC-EHVI
+    draws + staircase evaluations into one vmapped launch per bucket
+    (``_moo_sample_launch`` + ``mc_ehvi_multi``). RGPE mixing and
     the acquisitions (EI, constrained EI, MC-EHVI) are applied to the
     returned rows as vectorised array ops, not per-session loops.
     ``fuse_posteriors=False`` restores the per-ensemble posterior loop
-    and the per-candidate MC-EHVI reference — the parity/benchmark
-    baseline.
+    and the per-candidate MC-EHVI reference, ``fuse_samples=False`` the
+    per-job draw loop and per-session numpy EHVI — the
+    parity/benchmark baselines.
   - **Profiling**: cluster runs execute through a ``ProfileExecutor``
     (``serve/profile_executor.py``). A session whose run is in flight
     sits in the explicit ``WAITING_PROFILE`` state while every session
@@ -58,13 +64,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.acquisition import (mc_ehvi, mc_ehvi_batched,
+from repro.core.acquisition import (mc_ehvi, mc_ehvi_batched, mc_ehvi_multi,
                                     pareto_of_observations,
                                     probability_of_feasibility)
-from repro.core.bo import (BOConfig, KarasuContext, ProfileFn,
-                           _acquisition, _best_index_so_far, _feasible,
+from repro.core.bo import (KEY_PURPOSE_MOO_EHVI, KEY_PURPOSE_RGPE, BOConfig,
+                           KarasuContext, ProfileFn, _acquisition,
+                           _best_index_so_far, _feasible,
                            _model_posteriors_augmented, _should_stop_early,
-                           _target_runs)
+                           _target_runs, derive_key)
 from repro.core.encoding import SearchSpace
 from repro.core.gp import (batched_posterior, batched_posterior_multi,
                            fit_gp_batched)
@@ -78,6 +85,22 @@ from repro.serve.profile_executor import (ProfileJob, ProfileOutcome,
 # session states
 READY = "ready"                        # observations current, can fit/score
 WAITING_PROFILE = "waiting_profile"    # >=1 profiling run in flight
+
+
+def _moo_sample_launch(keys, mu, var, y_std, y_mean, n_mc: int):
+    """All (MOO session, objective) lanes' raw-scale posterior draws in
+    one stacked batch. keys: (L,) per-lane PRNG keys; mu/var: (L, q)
+    rows already gathered at the remaining candidates; y_std/y_mean:
+    (L,). Per-lane eps is ``normal(key, (n_mc, q))`` — the identical
+    stream the per-session loop consumes, so fusion never changes
+    draws. Deliberately NOT jitted: q shrinks every iteration, so a
+    jitted program would recompile each step for a trivially cheap
+    affine combine; the fusion win is the single vmapped draw + stacked
+    arithmetic across lanes."""
+    q = mu.shape[1]
+    eps = jax.vmap(lambda k: jax.random.normal(k, (n_mc, q)))(keys)
+    sm = mu[:, None, :] + eps * jnp.sqrt(var)[:, None, :]
+    return sm * y_std[:, None, None] + y_mean[:, None, None]
 
 
 def _absorb_target_posts(posts, owners, tgts, mu, var) -> None:
@@ -257,12 +280,19 @@ class SearchService:
     ``batched_posterior_multi`` launch and uses the vectorised MC-EHVI;
     False restores the per-ensemble posterior loop and the
     per-candidate EHVI reference (the parity/benchmark baseline).
+    ``fuse_samples`` (default True) does the same for the step's sample
+    draws: all RGPE support-sample draws in one
+    ``batched_sample_multi`` launch per bucket and all MOO sessions'
+    EHVI sampling/staircases in vmapped launches; False restores the
+    per-job / per-session loops. Fusion is visible in ``stats``:
+    ``sample_batches``/``sample_queries`` and
+    ``ehvi_batches``/``ehvi_jobs``.
     """
 
     def __init__(self, repository: Optional[Repository] = None, *,
                  slots: int = 8, executor=None, wait_mode: str = "any",
                  profile_timeout: Optional[float] = None,
-                 fuse_posteriors: bool = True):
+                 fuse_posteriors: bool = True, fuse_samples: bool = True):
         if wait_mode not in ("any", "all"):
             raise ValueError(f"unknown wait_mode {wait_mode!r}")
         self.repo = repository if repository is not None else Repository()
@@ -272,6 +302,7 @@ class SearchService:
         self.wait_mode = wait_mode
         self.profile_timeout = profile_timeout
         self.fuse_posteriors = fuse_posteriors
+        self.fuse_samples = fuse_samples
         self.queue: List[_Session] = []
         self.active: Dict[int, _Session] = {}
         self.done: List[SearchCompletion] = []
@@ -282,7 +313,9 @@ class SearchService:
         self.stats = {"steps": 0, "fit_batches": 0, "fit_jobs": 0,
                       "iterations": 0, "rgpe_batches": 0, "rgpe_jobs": 0,
                       "profile_waits": 0, "posterior_batches": 0,
-                      "posterior_queries": 0}
+                      "posterior_queries": 0, "sample_batches": 0,
+                      "sample_queries": 0, "ehvi_batches": 0,
+                      "ehvi_jobs": 0}
 
     # -- request lifecycle --------------------------------------------------
     def submit(self, req: SearchRequest) -> int:
@@ -413,12 +446,16 @@ class SearchService:
             return 0
 
         posts = self._batched_posteriors([s for s, _ in ready])
+        # MC-EHVI for every MOO session of the step in fused launches
+        # (per-session loop when fuse_samples=False)
+        moo_acq = self._moo_acquisitions(
+            [(s, rem) for s, rem in ready if s.is_moo], posts)
 
         advanced = 0
         for s, rem in ready:
             if s.is_moo:
                 # MC-EHVI x PoF; no scalar incumbent, so no early stop
-                acq = self._moo_acquisition(s, posts[s.rid], rem)
+                acq = moo_acq[s.rid]
             else:
                 acq, best_raw, obj_post = _acquisition(
                     posts[s.rid], s.observations, s.req.objective,
@@ -525,10 +562,14 @@ class SearchService:
         for idx, (s, *_rest) in enumerate(rgpe_jobs):
             by_impl.setdefault(s.cfg.kernel_impl, []).append(idx)
         for impl, idxs in by_impl.items():
+            sc: Dict[str, int] = {}
             ws = KarasuContext.score_ensembles(
-                [rgpe_jobs[i][3] for i in idxs], impl=impl)
+                [rgpe_jobs[i][3] for i in idxs], impl=impl,
+                fuse_samples=self.fuse_samples, sample_counters=sc)
             self.stats["rgpe_batches"] += 1
             self.stats["rgpe_jobs"] += len(idxs)
+            self.stats["sample_batches"] += sc.get("launches", 0)
+            self.stats["sample_queries"] += sc.get("queries", 0)
             for i, w in zip(idxs, ws):
                 weights[i] = w
 
@@ -585,7 +626,7 @@ class SearchService:
             bases, _ids = ctx.store.get_stacked([z for z, _ in selected], m)
             if bases is None:
                 continue
-            key = jax.random.fold_in(jax.random.fold_in(s.key, it), mi)
+            key = derive_key(s.key, KEY_PURPOSE_RGPE, it, mi)
             jobs.append((s, m, bases,
                          WeightJob(bases, tgts.extract(job_of[m]), key,
                                    s.cfg.rgpe_samples)))
@@ -603,29 +644,110 @@ class SearchService:
                    "y_std": post[m]["y_std"],
                    "weights": np.asarray(w)}
 
+    @staticmethod
+    def _moo_front_ref(s: _Session) -> Tuple[np.ndarray, np.ndarray]:
+        """The (observed, ref) pair EHVI is computed against: feasible
+        observations (all, if none feasible yet) and the 1.1-scaled
+        nadir — one rule shared by the fused and loop paths."""
+        a, b = s.objectives
+        feas = [o for o in s.observations
+                if _feasible(o, s.req.constraints)] or s.observations
+        observed = np.array([[o.measures[a.name], o.measures[b.name]]
+                             for o in feas])
+        return observed, observed.max(axis=0) * 1.1 + 1e-9
+
+    def _moo_acquisitions(self, moo_ready: List[Tuple[_Session, List[int]]],
+                          posts: Dict[int, Dict[str, Dict]]
+                          ) -> Dict[int, np.ndarray]:
+        """MC-EHVI x PoF for EVERY MOO session of the step (paper
+        §III-D), fed by the same fused grid posteriors as the
+        single-objective sessions. With ``fuse_samples`` all sessions'
+        posterior draws execute as one ``_moo_sample_launch`` per
+        (n_mc, n_rem) bucket and all staircase EHVI evaluations as one
+        vmapped ``mc_ehvi_multi`` launch per bucket — the sample query
+        plan's acquisition leg. ``fuse_samples=False`` restores the
+        per-session sampling + numpy EHVI loop (the parity/bench
+        baseline). Keys derive per (MOO_EHVI, iteration, objective), so
+        fusion order can never change a session's draws."""
+        if not moo_ready:
+            return {}
+        if not self.fuse_samples:
+            return {s.rid: self._moo_acquisition(s, posts[s.rid], rem)
+                    for s, rem in moo_ready}
+
+        samples = self._moo_samples_fused(moo_ready, posts)
+        ehvi_jobs = []
+        for s, _rem in moo_ready:
+            observed, ref = self._moo_front_ref(s)
+            sa, sb = samples[s.rid]
+            ehvi_jobs.append((sa, sb, observed, ref))
+        ec: Dict[str, int] = {}
+        ehvis = mc_ehvi_multi(ehvi_jobs, counters=ec)
+        self.stats["ehvi_batches"] += ec.get("launches", 0)
+        self.stats["ehvi_jobs"] += ec.get("queries", 0)
+
+        out: Dict[int, np.ndarray] = {}
+        for (s, rem), acq in zip(moo_ready, ehvis):
+            idx = np.asarray(rem)
+            acq = np.asarray(acq)
+            for c in s.req.constraints:
+                cp = posts[s.rid][c.name]
+                ub_std = (c.upper_bound - cp["y_mean"]) / cp["y_std"]
+                pof = np.asarray(probability_of_feasibility(
+                    cp["mu"][idx], cp["var"][idx], float(ub_std)))
+                acq = acq * pof
+            out[s.rid] = acq
+        return out
+
+    def _moo_samples_fused(self, moo_ready, posts
+                           ) -> Dict[int, List[np.ndarray]]:
+        """Raw-scale MC posterior draws for every (MOO session,
+        objective) lane of the step in ONE ``_moo_sample_launch`` per
+        (n_mc, n_rem) bucket."""
+        lanes = []          # (rid, oi, mu_row, var_row, y_std, y_mean, key)
+        for s, rem in moo_ready:
+            idx = np.asarray(rem)
+            it = len(s.observations)
+            for oi, obj in enumerate(s.objectives):
+                p = posts[s.rid][obj.name]
+                k = derive_key(s.key, KEY_PURPOSE_MOO_EHVI, it, oi)
+                lanes.append((s.rid, oi, p["mu"][idx], p["var"][idx],
+                              p["y_std"], p["y_mean"], k, s.req.n_mc))
+        out: Dict[int, List[Optional[np.ndarray]]] = {
+            s.rid: [None, None] for s, _ in moo_ready}
+        groups: Dict[Tuple[int, int], List[int]] = {}
+        for i, lane in enumerate(lanes):
+            groups.setdefault((lane[7], int(lane[2].shape[0])),
+                              []).append(i)
+        for (n_mc, _q), idxs in groups.items():
+            parts = [
+                jnp.stack([jnp.asarray(lanes[i][j]) for i in idxs])
+                for j in (6, 2, 3, 4, 5)]       # keys, mu, var, std, mean
+            draws = _moo_sample_launch(*parts, n_mc=n_mc)
+            for j, i in enumerate(idxs):
+                rid, oi = lanes[i][0], lanes[i][1]
+                out[rid][oi] = np.asarray(draws[j])
+            self.stats["sample_batches"] += 1
+            self.stats["sample_queries"] += len(idxs)
+        return out
+
     def _moo_acquisition(self, s: _Session, post: Dict[str, Dict],
                          rem: List[int]) -> np.ndarray:
-        """MC expected hypervolume improvement over the remaining
-        candidates, feasibility-weighted under every constraint (paper
-        §III-D) — fed by the same fused grid posteriors as the
-        single-objective sessions. The key schedule matches the
-        historical ``run_search_moo`` loop, so the thin driver over this
-        service reproduces its per-iteration sampling."""
+        """The per-session MC-EHVI x PoF loop (``fuse_samples=False``
+        only — the fused path batches all sessions' draws and staircases
+        instead). Same key schedule and front rule as the fused path, so
+        both produce the same acquisition up to float roundoff."""
         idx = np.asarray(rem)
         it = len(s.observations)
         a, b = s.objectives
         samples = []
         for oi, obj in enumerate((a, b)):
             p = post[obj.name]
-            k = jax.random.fold_in(s.key, 1000 + it * 10 + oi)
+            k = derive_key(s.key, KEY_PURPOSE_MOO_EHVI, it, oi)
             eps = jax.random.normal(k, (s.req.n_mc, len(rem)))
             sm = p["mu"][idx][None] + eps * jnp.sqrt(p["var"][idx])[None]
             samples.append(np.asarray(sm * p["y_std"] + p["y_mean"]))
-        feas = [o for o in s.observations
-                if _feasible(o, s.req.constraints)] or s.observations
-        observed = np.array([[o.measures[a.name], o.measures[b.name]]
-                             for o in feas])
-        ref = observed.max(axis=0) * 1.1 + 1e-9
+        observed, ref = self._moo_front_ref(s)
         ehvi = mc_ehvi_batched if self.fuse_posteriors else mc_ehvi
         acq = np.asarray(ehvi(samples[0], samples[1], observed, ref))
         for c in s.req.constraints:

@@ -6,8 +6,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (batched_posterior, batched_posterior_multi,
-                        batched_sample, build_ensemble, compute_weights,
-                        compute_weights_batched, ensemble_posterior,
+                        batched_sample, batched_sample_multi, build_ensemble,
+                        compute_weights, compute_weights_batched,
+                        compute_weights_multi, ensemble_posterior,
                         ensemble_posterior_batched, fit_gp, fit_gp_batched,
                         gp_posterior, stack_gps)
 from repro.core.rgpe import BatchedEnsemble
@@ -91,6 +92,113 @@ def test_batched_sample_matches_per_model():
         si = gp_sample(gp, xq, keys[i], 32)
         np.testing.assert_allclose(np.asarray(s[i]), np.asarray(si),
                                    atol=1e-5)
+
+
+# -- fused sample query plan --------------------------------------------------
+
+
+def test_batched_sample_multi_matches_per_stack():
+    """Many stacks' posterior draws fused into one padded launch per
+    (S, q, d) bucket must reproduce each per-stack ``batched_sample`` —
+    including edge buckets: a single-model stack, an n_obs=1 model,
+    mixed dims, and differing n_samples."""
+    rng = np.random.default_rng(21)
+    queries, singles = [], []
+    cases = [((5, 9, 14), 3, 64, 7),     # sizes, d, S, q
+             ((4, 7), 3, 64, 7),         # same bucket as above
+             ((6,), 3, 64, 7),           # single-model stack, same bucket
+             ((1, 8), 3, 64, 7),         # n_obs=1 lane, same bucket
+             ((5, 9), 2, 64, 7),         # different dim -> own bucket
+             ((5, 9), 3, 32, 7),         # different S -> own bucket
+             ((5, 9), 3, 64, 11)]        # different q -> own bucket
+    for j, (sizes, d, S, q) in enumerate(cases):
+        xs = [rng.random((n, d)) for n in sizes]
+        ys = [x[:, 0] + np.sin(3 * x[:, 1]) for x in xs]
+        st = fit_gp_batched(xs, ys)
+        xq = rng.random((q, d))
+        keys = jax.random.split(jax.random.PRNGKey(j), len(sizes))
+        queries.append((st, xq, keys, S))
+        singles.append(batched_sample(st, xq, keys, S))
+
+    counters = {}
+    res = batched_sample_multi(queries, counters=counters)
+    # first four cases share one (64, 7, 3) bucket; the rest are singletons
+    assert counters["launches"] == 4
+    assert counters["queries"] == len(cases)
+    for (st, xq, _, S), got, want in zip(queries, res, singles):
+        assert got.shape == (st.m, S, xq.shape[0])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=TOL)
+
+
+def test_batched_sample_multi_draw_streams_are_fusion_invariant():
+    """Each lane consumes normal(key_i, (S, q)) regardless of which
+    other queries share its launch, so adding an unrelated query to the
+    plan must not perturb existing draws (beyond posterior roundoff)."""
+    rng = np.random.default_rng(22)
+    xs = [rng.random((n, 2)) for n in (5, 8)]
+    st = fit_gp_batched(xs, [x[:, 0] for x in xs])
+    xq = rng.random((6, 2))
+    keys = jax.random.split(jax.random.PRNGKey(0), 2)
+    alone, = batched_sample_multi([(st, xq, keys, 48)])
+    other = fit_gp_batched([rng.random((12, 2))], [np.zeros(12)])
+    joined, _ = batched_sample_multi(
+        [(st, xq, keys, 48), (other, xq, jax.random.split(
+            jax.random.PRNGKey(9), 1), 48)])
+    np.testing.assert_allclose(np.asarray(alone), np.asarray(joined),
+                               atol=TOL)
+
+
+def test_loo_sample_multi_matches_per_target():
+    """Fused leave-one-out draws (padded cho_solve, exact-shape eps)
+    must reproduce per-target gp_loo_samples — including an n_obs=1
+    target and mixed observation counts in one call."""
+    import jax.random as jr
+    from repro.core.gp import gp_loo_samples, loo_sample_multi
+    rng = np.random.default_rng(31)
+    targets = []
+    for n in (6, 6, 9, 1):
+        x = rng.random((n, 2))
+        targets.append(fit_gp(x, x[:, 0] + 0.1 * rng.normal(size=n)))
+    queries = [(gp, jr.PRNGKey(i), 32) for i, gp in enumerate(targets)]
+    counters = {}
+    res = loo_sample_multi(queries, counters=counters)
+    assert counters["launches"] == 3        # n=6 bucket shared, 9, 1
+    assert counters["queries"] == 4
+    for (gp, key, S), got in zip(queries, res):
+        want = gp_loo_samples(gp, key, S)
+        assert got.shape == want.shape == (S, gp.n)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=TOL)
+
+
+def test_compute_weights_multi_fused_samples_match_loop():
+    """fuse_samples=True (the sample query plan) and the per-job draw
+    loop consume identical PRNG streams, so weights must agree — and
+    the fused path must report its launch fusion via sample_counters."""
+    from repro.core.rgpe import WeightJob
+    rng = np.random.default_rng(23)
+    jobs = []
+    for j in range(3):
+        xs = [rng.random((10 + i, 2)) for i in range(2)]
+        bases = fit_gp_batched(xs, [_surface(x) for x in xs])
+        xt = rng.random((6, 2))         # same n_obs -> one sample bucket
+        jobs.append(WeightJob(bases, fit_gp(xt, _surface(xt)),
+                              jax.random.PRNGKey(j), 64))
+    # an n_obs=1 job: uniform short-circuit, never enters the plan
+    x1 = rng.random((1, 2))
+    jobs.append(WeightJob(bases, fit_gp(x1, x1[:, 0]),
+                          jax.random.PRNGKey(9), 64))
+    sc = {}
+    w_fused = compute_weights_multi(jobs, fuse_samples=True,
+                                    sample_counters=sc)
+    w_loop = compute_weights_multi(jobs, fuse_samples=False)
+    # one fused base-draw launch + one fused LOO launch for all 3 jobs
+    assert sc["launches"] == 2 and sc["queries"] == 6
+    for a, b in zip(w_fused, w_loop):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=TOL)
+    np.testing.assert_allclose(np.asarray(w_fused[-1]),
+                               np.full(3, 1.0 / 3.0), atol=1e-7)
 
 
 # -- fused posterior query plan ---------------------------------------------

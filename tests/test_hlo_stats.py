@@ -64,6 +64,88 @@ def test_shape_parsing():
     assert els == 7 and by == 28
 
 
+_FUSED_SYNTH = textwrap.dedent("""
+    HloModule fused_test
+
+    %mm (p0: f32[8,16]) -> f32[8,16] {
+      %p0 = f32[8,16]{1,0} parameter(0)
+      %w = f32[16,16]{1,0} constant({...})
+      ROOT %dot.7 = f32[8,16]{1,0} dot(f32[8,16]{1,0} %p0, f32[16,16]{1,0} %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+    }
+
+    %body.2 (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+      %p = (s32[], f32[8,16]{1,0}) parameter(0)
+      %g0 = s32[] get-tuple-element(%p), index=0
+      %c1 = s32[] constant(1)
+      %add.5 = s32[] add(%g0, %c1)
+      %g1 = f32[8,16]{1,0} get-tuple-element(%p), index=1
+      %fusion.1 = f32[8,16]{1,0} fusion(%g1), kind=kOutput, calls=%mm
+      ROOT %t = (s32[], f32[8,16]{1,0}) tuple(%add.5, %fusion.1)
+    }
+
+    %cond.2 (pc: (s32[], f32[8,16])) -> pred[] {
+      %pc = (s32[], f32[8,16]{1,0}) parameter(0)
+      %gc = s32[] get-tuple-element(%pc), index=0
+      %c9 = s32[] constant(9)
+      ROOT %lt = pred[] compare(%gc, %c9), direction=LT
+    }
+
+    ENTRY %main (x: f32[8,16]) -> f32[8,16] {
+      %x = f32[8,16]{1,0} parameter(0)
+      %pre = f32[8,16]{1,0} fusion(%x), kind=kLoop, calls=%mm
+      %c0 = s32[] constant(0)
+      %tup = (s32[], f32[8,16]{1,0}) tuple(%c0, %pre)
+      %while.2 = (s32[], f32[8,16]{1,0}) while(%tup), condition=%cond.2, body=%body.2
+      ROOT %out = f32[8,16]{1,0} get-tuple-element(%while.2), index=1
+    }
+""")
+
+
+def test_fused_dot_under_while_gets_trip_multiplier():
+    """Regression: a dot living in a fused computation reached via
+    ``calls=`` from the while BODY must carry the trip count even when
+    the entry also calls the same computation at multiplier 1 — the
+    stale single-visit BFS used to freeze it at whichever multiplier
+    discovered it first."""
+    s = hlo_stats.analyze(_FUSED_SYNTH)
+    per_call = 2 * 8 * 16 * 16
+    # diamond: 1 entry call + 9 trips through the body's fusion; the
+    # shared computation is counted at its MAX multiplier (9), which is
+    # the honest per-site accounting short of call-site cloning
+    assert s["dot_flops"] == 9 * per_call
+
+
+def test_typed_operands_resolve_contracting_dims():
+    """Compiled modules print `dot(f32[16,64]{1,0} %lhs, ...)`; the lhs
+    contracting extent must come from the inline type, not a failed
+    symbol-table lookup (which silently yielded contract=1)."""
+    hlo = textwrap.dedent("""
+        HloModule t
+
+        ENTRY %main (x: f32[4,8]) -> f32[4,2] {
+          %x = f32[4,8]{1,0} parameter(0)
+          %w = f32[8,2]{1,0} constant({...})
+          ROOT %dot.1 = f32[4,2]{1,0} dot(f32[4,8]{1,0} %x, f32[8,2]{1,0} %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+        }
+    """)
+    s = hlo_stats.analyze(hlo)
+    assert s["dot_flops"] == 2 * 4 * 2 * 8
+    # operand + result bytes: (4*8 + 8*2 + 4*2) * 4
+    assert s["dot_bytes"] == (32 + 16 + 8) * 4
+
+
+def test_known_trip_count_overrides_condition_constant():
+    """backend_config known_trip_count is exact; the max-constant walk
+    of the condition is only the fallback (a condition comparing
+    against an unrelated large constant must not inflate the count)."""
+    hlo = _SYNTH.replace(
+        "condition=%cond.1, body=%body.1",
+        'condition=%cond.1, body=%body.1, '
+        'backend_config={"known_trip_count":{"n":"3"}}')
+    s = hlo_stats.analyze(hlo)
+    assert s["dot_flops"] == 3 * 2 * 8 * 16 * 16
+
+
 def test_end_to_end_against_known_scan():
     """Compiled 7-step scan of one (16x64)@(64x32) matmul: the parser must
     report 7x the per-iteration dots (cost_analysis reports ~1x)."""

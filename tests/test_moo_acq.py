@@ -3,7 +3,8 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.acquisition import (_hv_2d, expected_improvement, mc_ehvi,
-                                    mc_ehvi_batched, pareto_front,
+                                    mc_ehvi_batched, mc_ehvi_multi,
+                                    pareto_front,
                                     probability_of_feasibility)
 from repro.core import (BOConfig, Constraint, Objective, run_search_moo,
                         scout_search_space, pareto_of_result)
@@ -114,6 +115,36 @@ def test_mc_ehvi_batched_matches_per_candidate_loop():
         mc_ehvi_batched(np.array([[1.0]]), np.array([[1.0]]),
                         np.empty((0, 2)), ref),
         [9.0], atol=1e-12)
+
+
+def test_mc_ehvi_multi_matches_per_session_batched():
+    """The vmapped multi-session EHVI (one launch per (S, q) bucket,
+    fronts padded with zero-width segments) must agree with the f64
+    numpy oracle per job — including single-point, duplicate-heavy,
+    and empty fronts sharing one launch."""
+    rng = np.random.default_rng(11)
+    jobs = []
+    fronts = [rng.random((int(rng.integers(2, 10)), 2)) * 4.0,
+              np.array([[1.0, 1.0]]),                       # single point
+              np.array([[1.0, 3.0], [1.0, 3.0], [2.0, 2.0]]),  # dups
+              np.empty((0, 2))]                             # empty front
+    for obs in fronts:
+        ref = (obs.max(axis=0) * 1.1 + 1e-9 if len(obs)
+               else np.array([4.0, 4.0]))
+        sa = rng.normal(2.0, 1.5, (16, 9))
+        sb = rng.normal(2.0, 1.5, (16, 9))
+        jobs.append((sa, sb, obs, ref))
+    # a (S, q) bucket of its own
+    jobs.append((rng.normal(2.0, 1.0, (8, 5)),
+                 rng.normal(2.0, 1.0, (8, 5)),
+                 fronts[0], fronts[0].max(axis=0) * 1.1 + 1e-9))
+    counters = {}
+    outs = mc_ehvi_multi(jobs, counters=counters)
+    assert counters["launches"] == 2 and counters["queries"] == 5
+    for (sa, sb, obs, ref), got in zip(jobs, outs):
+        want = mc_ehvi_batched(sa, sb, obs, ref)
+        scale = max(1.0, float(np.abs(want).max()))
+        np.testing.assert_allclose(got, want, atol=1e-4 * scale)
 
 
 def test_mc_ehvi_prefers_dominating_point():

@@ -452,6 +452,117 @@ def test_service_mixed_so_moo_cohort_deterministic():
         np.testing.assert_array_equal(front, b[rid].meta["pareto_front"])
 
 
+def test_service_step_fuses_sample_draws():
+    """All RGPE support-sample draws and MOO EHVI draws of a step ride
+    the sample query plan: sample_batches counts fused launches, far
+    fewer than the (tenant, measure/objective) draws they carry."""
+    repo = _support_repo()
+    svc = SearchService(repo, slots=4)
+    for s in range(2):
+        svc.submit(_request(s, method="karasu", max_iters=6))
+    for s in range(2):
+        svc.submit(_moo_request(10 + s, method="karasu", max_iters=6))
+    done = svc.run()
+    assert len(done) == 4
+    assert svc.stats["sample_batches"] >= 1
+    assert svc.stats["sample_queries"] > svc.stats["sample_batches"]
+    # both MOO sessions' EHVI staircases shared vmapped launches
+    assert svc.stats["ehvi_jobs"] > svc.stats["ehvi_batches"] >= 1
+
+    # the loop baseline never enters the plan
+    svc_l = SearchService(_support_repo(), slots=2, fuse_samples=False)
+    for s in range(2):
+        svc_l.submit(_request(s, method="karasu", max_iters=5))
+    svc_l.run()
+    assert svc_l.stats["sample_batches"] == 0
+    assert svc_l.stats["ehvi_batches"] == 0
+
+
+def test_service_fused_samples_match_loop():
+    """Acceptance: fuse_samples=True (fused RGPE draws + vmapped EHVI)
+    agrees with the per-job/per-session loop baseline to 1e-4 — same
+    PRNG streams, so RGPE weights are identical and EHVI differs only
+    by f32-vs-f64 roundoff."""
+    def build(fuse):
+        svc = SearchService(_support_repo(), slots=4, fuse_samples=fuse)
+        for s in range(2):
+            svc.submit(_request(s, method="karasu"))
+        svc.submit(_moo_request(7, method="karasu"))
+        svc.step()
+        return svc
+
+    fused, loop = build(True), build(False)
+    s_f = [fused.active[r] for r in sorted(fused.active)]
+    s_l = [loop.active[r] for r in sorted(loop.active)]
+    for a, b in zip(s_f, s_l):
+        assert [o.config for o in a.observations] == \
+            [o.config for o in b.observations]
+    posts_f = fused._batched_posteriors(s_f)
+    posts_l = loop._batched_posteriors(s_l)
+    assert fused.stats["sample_batches"] >= 1
+    assert loop.stats["sample_batches"] == 0
+    for a in s_f:
+        for m in a.measures:
+            if "weights" in posts_f[a.rid][m]:
+                np.testing.assert_allclose(
+                    posts_f[a.rid][m]["weights"],
+                    posts_l[a.rid][m]["weights"], atol=1e-4)
+            np.testing.assert_allclose(
+                np.asarray(posts_f[a.rid][m]["mu"]),
+                np.asarray(posts_l[a.rid][m]["mu"]), atol=1e-4)
+    moo_f = next(s for s in s_f if s.is_moo)
+    moo_l = next(s for s in s_l if s.is_moo)
+    rem = moo_f.remaining()
+    acq_f = fused._moo_acquisitions([(moo_f, rem)], posts_f)[moo_f.rid]
+    acq_l = loop._moo_acquisitions([(moo_l, rem)], posts_l)[moo_l.rid]
+    scale = max(1.0, float(np.abs(acq_l).max()))
+    np.testing.assert_allclose(acq_f, acq_l, atol=1e-4 * scale)
+
+
+def test_prng_key_schedule_collision_free():
+    """Regression for the arithmetic key tags (1000 + it*10 + oi): every
+    (purpose, iteration, index) must derive a distinct key, and the two
+    purposes' subtrees must never overlap for any (it, index) pair."""
+    from repro.core.bo import (KEY_PURPOSE_MOO_EHVI, KEY_PURPOSE_RGPE,
+                               derive_key)
+    import jax
+    base = jax.random.PRNGKey(42)
+    seen = set()
+    for purpose in (KEY_PURPOSE_RGPE, KEY_PURPOSE_MOO_EHVI):
+        for it in range(25):
+            for idx in range(10):
+                k = tuple(np.asarray(
+                    jax.random.key_data(derive_key(base, purpose, it, idx))
+                ).ravel().tolist())
+                assert k not in seen, (purpose, it, idx)
+                seen.add(k)
+    assert len(seen) == 2 * 25 * 10
+
+
+def test_prng_consumers_bitwise_deterministic():
+    """Bit-for-bit determinism across BOTH derived-key consumers (RGPE
+    support draws and MOO EHVI draws) on the fake executor: a karasu
+    MOO tenant exercises RGPE and EHVI keys every scoring step, and two
+    runs must produce identical trajectories and Pareto fronts."""
+    def run_once():
+        svc = SearchService(
+            _support_repo(), slots=2,
+            executor=FakeProfileExecutor(lambda j: 1 + j.rid),
+            wait_mode="any")
+        svc.submit(_moo_request(3, method="karasu", max_iters=6))
+        svc.submit(_request(4, method="karasu", max_iters=6))
+        done = {c.rid: c.result for c in svc.run()}
+        assert svc.stats["rgpe_jobs"] > 0 and svc.stats["ehvi_jobs"] > 0
+        return done
+
+    a, b = run_once(), run_once()
+    for rid in a:
+        assert (_result_fingerprint(a[rid])
+                == _result_fingerprint(b[rid])), rid
+    np.testing.assert_array_equal(a[0].meta["pareto_front"],
+                                  b[0].meta["pareto_front"])
+
+
 def test_run_search_moo_routes_through_service():
     """run_search_moo is a thin driver over SearchService: one slot,
     sync executor, identical trajectory to an explicit submission."""
