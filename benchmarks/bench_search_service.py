@@ -37,14 +37,19 @@ reference):
   search_service_moo_sample_speedup — fused-samples-vs-sample-loop
                                 contribution (posteriors fused in both)
 
-With ``--smoke`` it runs a tiny mixed cohort (3 tenants incl. one MOO,
-4 iterations) end to end, asserts completion AND that the sample-draw
-fusion actually engaged (sample_batches << sample_queries) — the CPU CI
-hook that fails fast when the serving path regresses, instead of
-waiting for the weekly slow job.
+With ``--smoke`` it runs a tiny mixed cohort (4 tenants: naive SO,
+karasu SO, karasu 2-objective, karasu 3-objective; 4 iterations) end to
+end, asserts completion AND that the query-plan layer actually engaged
+(``plan_batches <= plan_queries`` with fusion on every leg:
+posterior/sample/EHVI) — the CPU CI hook that fails fast when the
+serving path regresses, instead of waiting for the weekly slow job.
+``REPRO_BENCH_STATS_JSON=path`` (or ``--stats-json path``) additionally
+dumps the service stats as JSON, which CI uploads as an artifact so
+fusion regressions are diagnosable from the run page.
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
@@ -253,12 +258,14 @@ def moo_mixed() -> None:
 
 
 def smoke() -> None:
-    """CI smoke: a 3-tenant mixed cohort (naive SO, karasu SO, karasu
-    MOO) over 4 iterations must complete, fuse its posteriors, and
-    produce a Pareto front — fast enough for the tier-1 CPU job."""
+    """CI smoke: a 4-tenant mixed cohort (naive SO, karasu SO, karasu
+    2-objective, karasu 3-objective) over 4 iterations must complete,
+    route its model math through the query-plan layer, and produce
+    (k, 2) and (k, 3) Pareto fronts — fast enough for the tier-1 CPU
+    job. Stats are dumped as JSON when requested (CI artifact)."""
     sp, tenants, repo, targets = _setup(3)
     max_iters = 4
-    svc = SearchService(_fresh_repo(repo), slots=3)
+    svc = SearchService(_fresh_repo(repo), slots=4)
     wid0, wid1, wid2 = tenants[:3]
     svc.submit(SearchRequest(
         sp, C.profile_fn(wid0, 0), Objective("cost"),
@@ -273,23 +280,47 @@ def smoke() -> None:
         [Constraint("runtime", targets[wid2])], method="karasu",
         bo_config=BOConfig(max_iters=max_iters), seed=2,
         objectives=[Objective("cost"), Objective("energy")], n_mc=8))
+    # n=3 objectives: the box-decomposition EHVI plan node
+    svc.submit(SearchRequest(
+        sp, C.profile_fn(wid0, 3), None, [], method="karasu",
+        bo_config=BOConfig(max_iters=max_iters), seed=3,
+        objectives=[Objective("cost"), Objective("energy"),
+                    Objective("runtime")], n_mc=8))
     t0 = time.time()
     done = {c.rid: c.result for c in svc.run()}
     dt = time.time() - t0
-    assert sorted(done) == [0, 1, 2], done
+    assert sorted(done) == [0, 1, 2, 3], done
     for res in done.values():
         assert len(res.observations) == max_iters
     assert done[2].meta["moo"] is True
     assert len(done[2].meta["pareto_front"]) >= 1
-    assert svc.stats["posterior_batches"] >= 1, svc.stats
-    # the sample query plan must have engaged: every scoring step's RGPE
-    # support draws and MOO EHVI draws ride far fewer fused launches
-    # than the (tenant, measure/objective) draws they carry
-    assert svc.stats["sample_batches"] >= 1, svc.stats
-    assert svc.stats["sample_queries"] > svc.stats["sample_batches"], \
-        svc.stats
-    assert svc.stats["ehvi_batches"] >= 1, svc.stats
-    C.emit("search_service_smoke", dt * 1e6 / (3 * max_iters), "ok")
+    front3 = done[3].meta["pareto_front"]
+    assert front3.ndim == 2 and front3.shape[1] == 3 and len(front3) >= 1
+    # the query-plan layer must have engaged on every leg: far fewer
+    # fused launches (plan_batches) than the query nodes they carried
+    # (plan_queries), with per-kind fusion for posteriors, the RGPE/MOO
+    # sample draws, and the EHVI evaluations
+    s = svc.stats
+    assert s["plan_batches"] >= 1, s
+    assert s["plan_batches"] <= s["plan_queries"], s
+    assert s["plan_batches"] == (s["posterior_batches"]
+                                 + s["sample_batches"]
+                                 + s["ehvi_batches"]), s
+    assert s["posterior_batches"] < s["posterior_queries"], s
+    assert s["sample_batches"] >= 1, s
+    assert s["sample_queries"] > s["sample_batches"], s
+    assert s["ehvi_batches"] >= 1, s
+    stats_path = os.environ.get("REPRO_BENCH_STATS_JSON")
+    if "--stats-json" in sys.argv[1:]:
+        at = sys.argv.index("--stats-json")
+        if at + 1 >= len(sys.argv):
+            raise SystemExit("--stats-json needs a path argument")
+        stats_path = sys.argv[at + 1]
+    if stats_path:
+        with open(stats_path, "w") as f:
+            json.dump({**s, "elapsed_s": dt, "tenants": 4,
+                       "max_iters": max_iters}, f, indent=2)
+    C.emit("search_service_smoke", dt * 1e6 / (4 * max_iters), "ok")
 
 
 def main() -> None:

@@ -14,6 +14,9 @@ from .gp import (GP, BatchedGP, batched_posterior, batched_posterior_multi,
                  batched_sample, batched_sample_multi, fit_gp,
                  fit_gp_batched, gp_posterior, gp_posterior_raw, stack_gps)
 from .moo import pareto_of_result, run_search_moo
+from .plan import (Bucket, EhviQuery, LooSampleQuery, PlanExecutor,
+                   PosteriorDrawQuery, PosteriorQuery, SampleQuery,
+                   StepPlan, StepPlanner)
 from .repository import Repository, SupportModelStore
 from .rgpe import (BatchedEnsemble, Ensemble, WeightJob, build_ensemble,
                    build_ensemble_batched, compute_weights,
@@ -39,4 +42,7 @@ __all__ = [
     "mix_weighted", "CandidateIndex", "select_similar",
     "select_similar_batched", "BOResult", "Constraint", "Objective",
     "Observation", "RunRecord",
+    "Bucket", "StepPlan", "StepPlanner", "PlanExecutor",
+    "PosteriorQuery", "SampleQuery", "LooSampleQuery",
+    "PosteriorDrawQuery", "EhviQuery",
 ]

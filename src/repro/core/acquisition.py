@@ -100,15 +100,14 @@ def pareto_front(points: np.ndarray) -> np.ndarray:
 
 def pareto_of_observations(observations, objectives,
                            constraints: Sequence = ()) -> np.ndarray:
-    """Feasible non-dominated (k, 2) objective points of a profiling
+    """Feasible non-dominated (k, n_obj) objective points of a profiling
     history (duck-typed over ``core.types.Observation``). The one
     front-extraction rule shared by ``pareto_of_result`` and the
     serving layer's MOO completions."""
-    pts = np.array([[o.measures[objectives[0].name],
-                     o.measures[objectives[1].name]]
+    pts = np.array([[o.measures[obj.name] for obj in objectives]
                     for o in observations if feasible(o, constraints)])
     if len(pts) == 0:
-        return np.empty((0, 2))
+        return np.empty((0, len(objectives)))
     return pareto_front(pts)
 
 
@@ -180,94 +179,195 @@ def mc_ehvi_batched(samples_a: np.ndarray, samples_b: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
-# Fused EHVI: MANY sessions' staircases in one vmapped launch
+# n-objective hypervolume (box decomposition + recursive-sweep oracle)
+# ---------------------------------------------------------------------------
+
+
+def hv_nd(points: np.ndarray, ref: np.ndarray) -> float:
+    """Hypervolume dominated by ``points`` wrt ``ref`` (minimization),
+    any dimension — the recursive dimension-sweep reference: slice along
+    the last axis at every distinct coordinate and recurse on the
+    projection of the points at or below the slice. Independent of the
+    box decomposition below, so it serves as its parity oracle. f64."""
+    ref = np.asarray(ref, np.float64)
+    d = ref.shape[0]
+    pts = np.asarray(points, np.float64).reshape(-1, d)
+    pts = pts[np.all(pts <= ref, axis=1)]
+    if len(pts) == 0:
+        return 0.0
+    if d == 1:
+        return float(ref[0] - pts.min())
+    hv = 0.0
+    zs = np.unique(pts[:, -1])
+    for i, z in enumerate(zs):
+        z_hi = zs[i + 1] if i + 1 < len(zs) else ref[-1]
+        if z_hi <= z:
+            continue
+        hv += (z_hi - z) * hv_nd(pts[pts[:, -1] <= z][:, :-1], ref[:-1])
+    return float(hv)
+
+
+def mc_ehvi_nd(samples: Sequence[np.ndarray], observed: np.ndarray,
+               ref: np.ndarray) -> np.ndarray:
+    """MC expected hypervolume improvement for n objectives — reference
+    per-(sample, candidate) loop over the recursive-sweep ``hv_nd``.
+    The f64 parity oracle the fused box-decomposition path is tested
+    against (and the ``fuse_samples=False`` serving baseline for n>2).
+
+    ``samples``: one (S, q) raw-scale posterior draw array per
+    objective; ``observed``: (n, n_obj); ``ref``: (n_obj,). -> (q,)."""
+    ref = np.asarray(ref, np.float64)
+    front = pareto_front(np.asarray(observed, np.float64)
+                         .reshape(-1, ref.shape[0]))
+    hv0 = hv_nd(front, ref)
+    s, q = np.asarray(samples[0]).shape
+    out = np.zeros(q)
+    for j in range(q):
+        gain = 0.0
+        for i in range(s):
+            p = np.array([np.asarray(sm)[i, j] for sm in samples])
+            gain += max(hv_nd(np.vstack([front, p[None]]), ref) - hv0, 0.0)
+        out[j] = gain / s
+    return out
+
+
+def nondominated_boxes(front: np.ndarray, ref: np.ndarray
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Disjoint axis-aligned boxes covering the NON-dominated region
+    ``{x <= ref, no front point dominates x}`` — the decomposition MC
+    box-EHVI integrates against: the hypervolume a candidate p adds is
+    exactly ``sum_b vol([p, ref] ∩ b)`` over these boxes.
+
+    Returns ``(los, his)``, each (K, n_obj); lower bounds may be -inf
+    (the region is unbounded below). 2 objectives use the staircase
+    envelope (k+1 boxes); n >= 3 use the coordinate grid spanned by the
+    front's per-axis values with dominated cells dropped — within one
+    grid cell domination by the front is constant, so keeping exactly
+    the cells whose lower corner is undominated tiles the region. Cell
+    count is O((k+1)^n): fine for profiling-scale fronts (k <= tens),
+    the regime Karasu serves."""
+    ref = np.asarray(ref, np.float64)
+    d = ref.shape[0]
+    pts = np.asarray(front, np.float64).reshape(-1, d)
+    pts = pts[np.all(pts <= ref, axis=1)]
+    if d == 2:
+        lefts, rights, heights = _staircase(pts, ref)
+        los = np.column_stack([lefts, np.full_like(lefts, -np.inf)])
+        his = np.column_stack([rights, heights])
+        return los, his
+    axes_lo = [np.concatenate([[-np.inf], np.unique(pts[:, k])])
+               for k in range(d)]
+    axes_hi = [np.concatenate([np.unique(pts[:, k]), [ref[k]]])
+               for k in range(d)]
+    grids_lo = np.meshgrid(*axes_lo, indexing="ij")
+    grids_hi = np.meshgrid(*axes_hi, indexing="ij")
+    los = np.stack([g.ravel() for g in grids_lo], axis=1)   # (cells, d)
+    his = np.stack([g.ravel() for g in grids_hi], axis=1)
+    if len(pts):
+        dominated = np.any(np.all(pts[None, :, :] <= los[:, None, :],
+                                  axis=2), axis=1)
+        los, his = los[~dominated], his[~dominated]
+    nonempty = np.all(his > los, axis=1)
+    return los[nonempty], his[nonempty]
+
+
+# ---------------------------------------------------------------------------
+# Fused EHVI: MANY sessions' box decompositions in one vmapped launch
 # ---------------------------------------------------------------------------
 
 
 EhviJob = Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]
-# (samples_a (S, q), samples_b (S, q), observed (n, 2), ref (2,))
+# legacy 2-objective form: (samples_a (S, q), samples_b (S, q),
+# observed (n, 2), ref (2,)); the n-objective form is
+# ((samples_0, ..., samples_{D-1}), observed (n, D), ref (D,))
+
+
+EHVI_BOX_CHUNK = 1024
+# boxes per fused-EHVI block: the launch materialises (L, S, q, K_blk)
+# intermediates, so past this many boxes (deep n>=3 fronts — the grid
+# decomposition is O((k+1)^n)) the box axis is processed as a scan of
+# fixed-size blocks instead of one broadcast, bounding peak memory while
+# keeping one compiled program per (K / chunk) count
+
+
+def _ehvi_box_block(los, his, refs, ps):
+    """Sum over one block of boxes of each (sample, candidate) point's
+    overlap volume. -> (L, S, q)."""
+    vol = None
+    for dim in range(los.shape[-1]):
+        lo = los[:, None, None, :, dim]                # (L, 1, 1, K)
+        hi = his[:, None, None, :, dim]
+        ref = refs[:, dim][:, None, None, None]
+        p = ps[:, dim, :, :, None]                     # (L, S, q, 1)
+        w = jnp.clip(jnp.minimum(hi, ref) - jnp.maximum(lo, p), 0.0, None)
+        vol = w if vol is None else vol * w
+    return jnp.sum(vol, axis=-1)
 
 
 @jax.jit
-def _ehvi_staircase_launch(lefts, rights, heights, refs, pa, pb):
-    """Per-lane staircase EHVI. lefts/rights/heights: (L, K) segment
-    bounds (padding segments have left = right = +inf, contributing
-    exactly zero width); refs: (L, 2); pa/pb: (L, S, q). -> (L, q)."""
-    ref_a = refs[:, 0][:, None, None, None]
-    ref_b = refs[:, 1][:, None, None, None]
-    seg_l = lefts[:, None, None, :]
-    seg_r = rights[:, None, None, :]
-    seg_h = heights[:, None, None, :]
-    w = jnp.clip(jnp.minimum(seg_r, ref_a)
-                 - jnp.maximum(seg_l, pa[..., None]), 0.0, None)
-    h = jnp.clip(jnp.minimum(seg_h, ref_b) - pb[..., None], 0.0, None)
-    return jnp.mean(jnp.sum(w * h, axis=-1), axis=1)
+def _ehvi_box_launch(los, his, refs, ps):
+    """Per-lane box-decomposition EHVI, any objective count. los/his:
+    (L, K, D) box bounds of each lane's non-dominated region (padding
+    boxes have lo = hi = +inf, contributing exactly zero volume); refs:
+    (L, D); ps: (L, D, S, q) raw-scale draws. -> (L, q). The dominated
+    volume a point p adds is, per box, the product over objectives of
+    (overlap of [p_d, ref_d] with the box's d-extent) — the staircase
+    launch this generalises is the D=2 case (segments are boxes with
+    lo_1 = -inf). Past ``EHVI_BOX_CHUNK`` boxes (the planner pads K to
+    a chunk multiple there) the box axis runs as a scan of fixed-size
+    blocks, so peak memory never scales with front depth."""
+    l, k, d = los.shape
+    if k <= EHVI_BOX_CHUNK:
+        return jnp.mean(_ehvi_box_block(los, his, refs, ps), axis=1)
+    nc = k // EHVI_BOX_CHUNK
+    los_c = jnp.moveaxis(los.reshape(l, nc, EHVI_BOX_CHUNK, d), 1, 0)
+    his_c = jnp.moveaxis(his.reshape(l, nc, EHVI_BOX_CHUNK, d), 1, 0)
+
+    def body(acc, blk):
+        lo_i, hi_i = blk
+        return acc + _ehvi_box_block(lo_i, hi_i, refs, ps), None
+
+    init = jnp.zeros(ps.shape[:1] + ps.shape[2:], ps.dtype)   # (L, S, q)
+    acc, _ = jax.lax.scan(body, init, (los_c, his_c))
+    return jnp.mean(acc, axis=1)
 
 
-def mc_ehvi_multi(jobs: Sequence[EhviJob], *,
-                  q_round_to: int = 8, m_round_pow2: bool = True,
+def _normalize_ehvi_job(job) -> Tuple[Tuple[np.ndarray, ...], np.ndarray,
+                                      np.ndarray]:
+    """Accept both the legacy 4-tuple 2-objective job and the
+    n-objective ``(samples_tuple, observed, ref)`` form."""
+    if len(job) == 4:
+        sa, sb, observed, ref = job
+        return (sa, sb), observed, ref
+    samples, observed, ref = job
+    return tuple(samples), observed, ref
+
+
+def mc_ehvi_multi(jobs: Sequence, *,
+                  q_round_to: Optional[int] = None,
+                  m_round_pow2: Optional[bool] = None,
                   counters: Optional[dict] = None) -> List[np.ndarray]:
-    """MANY sessions' MC-EHVI evaluations as ONE vmapped staircase
-    launch per (S, q) bucket — the acquisition-side leg of the sample
-    query plan (every MOO session of a service step becomes a lane
-    instead of a per-session numpy broadcast).
+    """MANY sessions' MC-EHVI evaluations as ONE vmapped box launch per
+    (n_obj, S, q) bucket — the acquisition-side leg of the sample query
+    plan (every MOO session of a service step becomes a lane instead of
+    a per-session numpy broadcast). Thin wrapper over the query-plan
+    layer (``core.plan``): builds one ``EhviQuery`` per job and lets the
+    ``StepPlanner`` / ``PlanExecutor`` own all bucketing and padding
+    (fronts pad to power-of-two box counts with zero-volume boxes, the
+    candidate axis to a ``q_round_to`` bucket with +inf sample points,
+    the lane axis to a power of two).
 
     Each job is ``(samples_a, samples_b, observed, ref)`` exactly as
-    ``mc_ehvi_batched`` takes them. For jit-shape stability while
-    candidate sets shrink and fronts grow step to step, fronts pad to a
-    power-of-two segment count with zero-width (+inf) segments, the
-    candidate axis to a ``q_round_to`` bucket with +inf sample points
-    (zero hypervolume gain, sliced off), and the lane axis to a power of
-    two — mirroring the posterior/sample plans' shape discipline.
-    Returns one ``(q,)`` array per job, in input order, matching
-    ``mc_ehvi_batched`` to float32 roundoff (the fused kernel computes
-    in f32; the numpy twin stays the f64 parity oracle).
-    """
-    results: List[Optional[np.ndarray]] = [None] * len(jobs)
-    stairs = [_staircase(pareto_front(np.asarray(obs)), np.asarray(ref))
-              for _, _, obs, ref in jobs]
-    groups: dict = {}
-    for i, (sa, _, _, _) in enumerate(jobs):
-        sa = np.asarray(sa)
-        groups.setdefault((int(sa.shape[0]), int(sa.shape[1])),
-                          []).append(i)
-
-    for (_s, q), idxs in groups.items():
-        k_max = max(stairs[i][0].shape[0] for i in idxs)
-        k_pad = 1 << (k_max - 1).bit_length()
-        q_pad = q
-        if q_round_to > 1:
-            q_pad = ((q + q_round_to - 1) // q_round_to) * q_round_to
-        ls, rs, hs, refs, pas, pbs = [], [], [], [], [], []
-        for i in idxs:
-            lefts, rights, heights = stairs[i]
-            p = k_pad - lefts.shape[0]
-            # zero-width padding: left = right = +inf clips to w = 0
-            ls.append(np.pad(lefts, (0, p), constant_values=np.inf))
-            rs.append(np.pad(rights, (0, p), constant_values=np.inf))
-            hs.append(np.pad(heights, (0, p), constant_values=0.0))
-            refs.append(np.asarray(jobs[i][3], np.float32))
-            # +inf candidates gain nothing and are sliced off below
-            pas.append(np.pad(np.asarray(jobs[i][0], np.float32),
-                              ((0, 0), (0, q_pad - q)),
-                              constant_values=np.inf))
-            pbs.append(np.pad(np.asarray(jobs[i][1], np.float32),
-                              ((0, 0), (0, q_pad - q)),
-                              constant_values=np.inf))
-        parts = [jnp.asarray(np.stack(a).astype(np.float32))
-                 for a in (ls, rs, hs, refs, pas, pbs)]
-        l_total = len(idxs)
-        if m_round_pow2:
-            l_pad = 1 << (l_total - 1).bit_length()
-            if l_pad > l_total:
-                parts = [jnp.concatenate(
-                    [a, jnp.broadcast_to(a[:1],
-                                         (l_pad - l_total,) + a.shape[1:])])
-                    for a in parts]
-        out = _ehvi_staircase_launch(*parts)
-        for j, i in enumerate(idxs):
-            results[i] = np.asarray(out[j])[:q]
-        if counters is not None:
-            counters["launches"] = counters.get("launches", 0) + 1
-            counters["queries"] = counters.get("queries", 0) + len(idxs)
+    ``mc_ehvi_batched`` takes them, or ``(samples_tuple, observed,
+    ref)`` for n objectives. Returns one ``(q,)`` array per job, in
+    input order, matching ``mc_ehvi_batched`` / ``mc_ehvi_nd`` to
+    float32 roundoff (the fused kernel computes in f32; the numpy twins
+    stay the f64 parity oracles)."""
+    from .plan import (EhviQuery, PlanExecutor, StepPlanner,
+                       flatten_counters)
+    planner = StepPlanner(q_round_to=q_round_to, m_round_pow2=m_round_pow2)
+    queries = [EhviQuery(*_normalize_ehvi_job(job)) for job in jobs]
+    nested: dict = {}
+    results = PlanExecutor().execute(planner.plan(queries), counters=nested)
+    flatten_counters(nested, counters, ("ehvi",))
     return results

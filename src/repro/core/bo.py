@@ -24,7 +24,8 @@ from .acquisition import (constrained_ei, expected_improvement, feasible,
                           probability_of_feasibility)
 from .encoding import SearchSpace
 from .extra_trees import fit_extra_trees
-from .gp import batched_posterior, batched_posterior_multi, fit_gp_batched
+from .gp import batched_posterior
+from .plan import PlanExecutor, PosteriorQuery, StepPlanner
 from .repository import Repository, SupportModelStore
 from .rgpe import WeightJob, compute_weights_multi, mix_weighted
 from .selection import CandidateIndex
@@ -32,6 +33,14 @@ from .types import BOResult, Constraint, Objective, Observation, RunRecord
 
 ProfileFn = Callable[[Mapping], Tuple[Dict[str, float], np.ndarray]]
 # profile_fn(config) -> (measures, compact metric matrix)
+
+# the single-tenant drivers share one planner/executor pair with default
+# policy — the same query-plan layer a SearchService step uses, so the
+# serving path and the reference loop literally share one plan
+# implementation (m_round_pow2=False on fits: a fixed-size measure
+# cohort never varies step to step, so lane padding buys nothing)
+_PLANNER = StepPlanner()
+_EXECUTOR = PlanExecutor()
 
 
 # PRNG purpose tags. Every per-iteration key consumer derives its keys
@@ -151,20 +160,24 @@ class KarasuContext:
     @staticmethod
     def score_ensembles(jobs: Sequence[WeightJob], *,
                         impl: str = "xla", fuse_samples: bool = True,
-                        sample_counters: Optional[dict] = None) -> List:
+                        sample_counters: Optional[dict] = None,
+                        planner: Optional[StepPlanner] = None) -> List:
         """RGPE weights for every queued (tenant, measure) ensemble of a
         scheduling round in ONE padded ranking-loss launch, with every
-        job's support-sample draw fused into the sample query plan
-        (``batched_sample_multi``; ``fuse_samples=False`` restores the
-        per-job draw loop, the parity/benchmark baseline). Static — the
-        weighting depends only on the jobs, never on context state, so a
-        service may score jobs spanning several contexts in one call.
-        Single-tenant ``run_search`` batches its measures through the
-        same entry point, so the serving path and the reference loop
-        cannot diverge."""
+        job's support-sample draw emitted as ``SampleQuery`` /
+        ``LooSampleQuery`` nodes into the query plan
+        (``fuse_samples=False`` restores the per-job draw loop, the
+        parity/benchmark baseline; ``planner`` shares the caller's
+        bucketing policy). Static — the weighting depends only on the
+        jobs, never on context state, so a service may score jobs
+        spanning several contexts in one call. Single-tenant
+        ``run_search`` batches its measures through the same entry
+        point, so the serving path and the reference loop cannot
+        diverge."""
         return compute_weights_multi(jobs, impl=impl,
                                      fuse_samples=fuse_samples,
-                                     sample_counters=sample_counters)
+                                     sample_counters=sample_counters,
+                                     planner=planner)
 
 
 def _target_runs(observations) -> List[RunRecord]:
@@ -176,21 +189,22 @@ def _model_posteriors_karasu(observations, measures, cfg,
                              ctx: KarasuContext, key, xq):
     """RGPE ensemble posterior per measure + target scalers.
 
-    All target GPs (one per measure) are fit in ONE vmapped batch, and
-    every grid posterior the iteration needs — the target stack AND all
-    measures' RGPE support stacks — executes as ONE fused
-    ``batched_posterior_multi`` launch (the same query plan the
-    ``SearchService`` step uses), followed by one padded ranking-loss
-    launch for the weights. The old per-ensemble posterior loop lives on
-    only in ``ensemble_posterior_batched``, the parity oracle."""
+    All target GPs (one per measure) are fit in ONE vmapped batch under
+    the planner's shape policy, and every grid posterior the iteration
+    needs — the target stack AND all measures' RGPE support stacks —
+    is emitted as ``PosteriorQuery`` nodes and executed by the SAME
+    collect → plan → execute → scatter layer a ``SearchService`` step
+    uses, preceded by one padded ranking-loss launch for the weights.
+    The old per-ensemble posterior loop lives on only in
+    ``ensemble_posterior_batched``, the parity oracle."""
     selected = ctx.candidate_index().query(
         _target_runs(observations), cfg.n_support, impl=cfg.kernel_impl)
 
     x = np.stack([o.x for o in observations])
     ys = [np.array([o.measures[m] for o in observations])
           for m in measures]
-    tgts = fit_gp_batched([x] * len(measures), ys, noise=cfg.noise,
-                          round_to=8)
+    tgts = _PLANNER.fit_targets([x] * len(measures), ys, noise=cfg.noise,
+                                m_round_pow2=False)
     jobs, job_meta = [], []
     for mi, m in enumerate(measures):
         bases, _ids = ctx.store.get_stacked([z for z, _ in selected], m)
@@ -200,11 +214,13 @@ def _model_posteriors_karasu(observations, measures, cfg,
                                   cfg.rgpe_samples))
             job_meta.append((mi, m, bases))
     # all measures' ensembles scored in one padded ranking-loss launch
-    ws = ctx.score_ensembles(jobs, impl=cfg.kernel_impl)
-    # ... and ALL grid posteriors (targets + ensemble members) in one
-    # fused launch
-    res = batched_posterior_multi(
-        [(tgts, xq)] + [(bases, xq) for _, _, bases in job_meta],
+    ws = ctx.score_ensembles(jobs, impl=cfg.kernel_impl, planner=_PLANNER)
+    # ... and ALL grid posteriors (targets + ensemble members) planned
+    # into fused launches
+    res = _EXECUTOR.execute(
+        _PLANNER.plan([PosteriorQuery(tgts, xq)]
+                      + [PosteriorQuery(bases, xq)
+                         for _, _, bases in job_meta]),
         impl=cfg.kernel_impl)
     mu_t, var_t = res[0]
     out = {}
@@ -225,8 +241,8 @@ def _model_posteriors_naive(observations, measures, cfg, xq):
     x = np.stack([o.x for o in observations])
     ys = [np.array([o.measures[m] for o in observations])
           for m in measures]
-    b = fit_gp_batched([x] * len(measures), ys, noise=cfg.noise,
-                       round_to=8)
+    b = _PLANNER.fit_targets([x] * len(measures), ys, noise=cfg.noise,
+                             m_round_pow2=False)
     mu, var = batched_posterior(b, xq)
     return {m: {"mu": mu[i], "var": var[i], "y_mean": b.y_mean[i],
                 "y_std": b.y_std[i]}

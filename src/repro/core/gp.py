@@ -413,9 +413,6 @@ def batched_posterior(bgp: BatchedGP, xq: jnp.ndarray, *, impl: str = "xla"
 # ---------------------------------------------------------------------------
 
 
-PosteriorQuery = Tuple[BatchedGP, jnp.ndarray]   # (stack, (q, d) | (m, q, d))
-
-
 def _pad_stack_obs(st: BatchedGP, n_pad: int):
     """Pad one stack's observation axis to ``n_pad``: zero rows masked
     out of the kernel, unit diagonal on the padded Cholesky block — the
@@ -435,76 +432,35 @@ def _pad_stack_obs(st: BatchedGP, n_pad: int):
 
 
 def batched_posterior_multi(
-    queries: Sequence[PosteriorQuery], *,
-    impl: str = "auto", round_to: int = 8, m_round_pow2: bool = True,
+    queries, *,
+    impl: str = "auto", round_to: Optional[int] = None,
+    m_round_pow2: Optional[bool] = None,
     counters: Optional[dict] = None,
 ) -> List[Tuple[jnp.ndarray, jnp.ndarray]]:
     """Execute MANY ``(stack, grid)`` posterior queries as ONE padded
     ``_batched_posterior`` launch per (q, d) bucket.
 
-    This is the query-plan entry point a service step (and run_search's
-    per-iteration model refresh) routes every grid posterior through:
-    target GPs, every RGPE ensemble's support stack, and MOO
-    objective/constraint models all become lanes of the same vmapped
-    triangular solve instead of separate Python-loop launches. Queries
-    whose grids share (q, d) fuse even when the grids differ (each
-    stack's grid is broadcast to its lanes); the observation axis is
-    padded to a common ``round_to`` bucket and the fused model axis to a
-    power of two, mirroring ``fit_gp_batched``'s jit-shape discipline so
-    step-to-step cohort changes reuse compiled shapes.
+    Thin wrapper over the query-plan layer (``core.plan``): each tuple
+    becomes a ``PosteriorQuery`` node and the ``StepPlanner`` /
+    ``PlanExecutor`` own all bucketing and padding — target GPs, every
+    RGPE ensemble's support stack, and MOO objective/constraint models
+    become lanes of the same vmapped triangular solve instead of
+    separate Python-loop launches. ``round_to`` / ``m_round_pow2``
+    default to the planner's policy (observation axis to multiples of
+    8, fused model axis to a power of two).
 
     Returns one ``(mu, var)`` pair per query, shapes ``(m_i, q)``, in
     input order. ``counters`` (optional dict) is incremented with
     ``launches`` / ``queries`` / ``lanes`` for callers tracking fusion.
     """
-    results: List[Optional[Tuple[jnp.ndarray, jnp.ndarray]]] = \
-        [None] * len(queries)
-    grids = [jnp.asarray(xq, jnp.float32) for _, xq in queries]
-    groups: dict = {}
-    for i, ((st, _), xq) in enumerate(zip(queries, grids)):
-        groups.setdefault((int(xq.shape[-2]), int(st.x.shape[-1])),
-                          []).append(i)
-
-    for (q, d), idxs in groups.items():
-        n_pad = max(queries[i][0].n_max for i in idxs)
-        if round_to > 1:
-            n_pad = ((n_pad + round_to - 1) // round_to) * round_to
-        xs, masks, chols, alphas, lss, sfs, xqs = [], [], [], [], [], [], []
-        for i in idxs:
-            st = queries[i][0]
-            x, mask, chol, alpha = _pad_stack_obs(st, n_pad)
-            xs.append(x)
-            masks.append(mask)
-            chols.append(chol)
-            alphas.append(alpha)
-            lss.append(st.log_lengthscales)
-            sfs.append(st.log_signal)
-            xq = grids[i]
-            if xq.ndim == 2:
-                xq = jnp.broadcast_to(xq[None], (st.m, q, d))
-            xqs.append(xq)
-        parts = [jnp.concatenate(a) for a in
-                 (lss, sfs, xs, masks, chols, alphas, xqs)]
-        m_total = int(parts[0].shape[0])
-        m_pad = m_total
-        if m_round_pow2:
-            m_pad = 1 << (m_total - 1).bit_length()
-            if m_pad > m_total:
-                parts = [jnp.concatenate(
-                    [a, jnp.broadcast_to(a[:1],
-                                         (m_pad - m_total,) + a.shape[1:])])
-                    for a in parts]
-        r_impl = resolve_impl(impl, cells=m_pad * q * n_pad)
-        mu, var = _batched_posterior(*parts, impl=r_impl)
-        off = 0
-        for i in idxs:
-            m_i = queries[i][0].m
-            results[i] = (mu[off:off + m_i], var[off:off + m_i])
-            off += m_i
-        if counters is not None:
-            counters["launches"] = counters.get("launches", 0) + 1
-            counters["queries"] = counters.get("queries", 0) + len(idxs)
-            counters["lanes"] = counters.get("lanes", 0) + m_pad
+    from .plan import (PlanExecutor, PosteriorQuery, StepPlanner,
+                       flatten_counters)
+    planner = StepPlanner(obs_round_to=round_to, m_round_pow2=m_round_pow2)
+    nested: dict = {}
+    results = PlanExecutor(impl=impl).execute(
+        planner.plan([PosteriorQuery(st, xq) for st, xq in queries]),
+        counters=nested)
+    flatten_counters(nested, counters, ("posterior",))
     return results
 
 
@@ -523,10 +479,6 @@ def batched_sample(bgp: BatchedGP, xq: jnp.ndarray, keys: jax.Array,
 # ---------------------------------------------------------------------------
 
 
-SampleQuery = Tuple[BatchedGP, jnp.ndarray, jax.Array, int]
-# (stack, (q, d) | (m, q, d) grid, (m,) PRNG keys, n_samples)
-
-
 @partial(jax.jit, static_argnames=("impl",))
 def _batched_sample_launch(log_ls, log_sf, x, mask, chol, alpha, xq, eps,
                            impl: str = "xla"):
@@ -541,99 +493,43 @@ def _batched_sample_launch(log_ls, log_sf, x, mask, chol, alpha, xq, eps,
 
 
 def batched_sample_multi(
-    queries: Sequence[SampleQuery], *,
-    impl: str = "auto", round_to: int = 8, q_round_to: int = 8,
-    m_round_pow2: bool = True, counters: Optional[dict] = None,
+    queries, *,
+    impl: str = "auto", round_to: Optional[int] = None,
+    q_round_to: Optional[int] = None,
+    m_round_pow2: Optional[bool] = None,
+    counters: Optional[dict] = None,
 ) -> List[jnp.ndarray]:
     """Execute MANY ``(stack, grid, keys, n_samples)`` posterior-sample
     draws as ONE padded ``_batched_sample_launch`` per (S, q, d) bucket.
 
-    The sample-side twin of ``batched_posterior_multi``: every RGPE
-    ensemble's support-sample draw of a service step (each a
-    ``batched_sample`` at the tenant's observed target points) becomes a
-    lane of the same fused vmapped posterior + draw combine instead of a
-    per-(tenant, measure) Python-loop launch. Same exact-padding
-    contract: the observation axis pads to a ``round_to`` bucket (masked
-    rows, unit Cholesky diagonal), the GRID axis to a ``q_round_to``
-    bucket (edge-repeated rows whose draws are sliced off — posterior
-    columns are independent, so real columns are untouched), and the
-    fused model axis to a power of two by repeating lane 0 (throwaway
-    lanes). Grid padding matters: a tenant's observation count grows
-    every step, and without the bucket the fused program would recompile
-    each step instead of ~once per bucket. Draw streams are untouched by
-    fusion OR padding: lane i consumes ``normal(keys[i], (S, q))`` at
-    the exact query shape, just as ``batched_sample`` does.
+    The sample-side twin of ``batched_posterior_multi`` and likewise a
+    thin wrapper over the query-plan layer (each tuple becomes a
+    ``SampleQuery`` node; all bucketing/padding policy lives in
+    ``core.plan.StepPlanner``). Exact-padding contract: the observation
+    axis pads to a ``round_to`` bucket (masked rows, unit Cholesky
+    diagonal), the GRID axis to a ``q_round_to`` bucket (edge-repeated
+    rows whose draws are sliced off — posterior columns are
+    independent, so real columns are untouched), and the fused model
+    axis to a power of two by repeating lane 0 (throwaway lanes). Draw
+    streams are untouched by fusion OR padding: lane i consumes
+    ``normal(keys[i], (S, q))`` at the exact query shape, just as
+    ``batched_sample`` does.
 
     Returns one ``(m_i, n_samples, q)`` array per query, in input order.
     ``counters`` (optional dict) is incremented with ``launches`` /
     ``queries`` / ``lanes`` for callers tracking fusion.
     """
-    results: List[Optional[jnp.ndarray]] = [None] * len(queries)
-    grids = [jnp.asarray(xq, jnp.float32) for _, xq, _, _ in queries]
-    groups: dict = {}
-    for i, ((st, _, _, ns), xq) in enumerate(zip(queries, grids)):
-        groups.setdefault(
-            (int(ns), int(xq.shape[-2]), int(st.x.shape[-1])),
-            []).append(i)
-
-    for (n_samples, q, d), idxs in groups.items():
-        n_pad = max(queries[i][0].n_max for i in idxs)
-        if round_to > 1:
-            n_pad = ((n_pad + round_to - 1) // round_to) * round_to
-        q_pad = q
-        if q_round_to > 1:
-            q_pad = ((q + q_round_to - 1) // q_round_to) * q_round_to
-        xs, masks, chols, alphas, lss, sfs, xqs, keys = \
-            [], [], [], [], [], [], [], []
-        for i in idxs:
-            st = queries[i][0]
-            x, mask, chol, alpha = _pad_stack_obs(st, n_pad)
-            xs.append(x)
-            masks.append(mask)
-            chols.append(chol)
-            alphas.append(alpha)
-            lss.append(st.log_lengthscales)
-            sfs.append(st.log_signal)
-            xq = grids[i]
-            if xq.ndim == 2:
-                xq = jnp.broadcast_to(xq[None], (st.m, q, d))
-            if q_pad > q:
-                xq = jnp.pad(xq, ((0, 0), (0, q_pad - q), (0, 0)),
-                             mode="edge")
-            xqs.append(xq)
-            keys.append(jnp.asarray(queries[i][2]))
-        keys_cat = jnp.concatenate(keys)
-        # exact-shape draws (one dispatch for the whole bucket), THEN pad
-        eps = jax.vmap(
-            lambda k: jax.random.normal(k, (n_samples, q)))(keys_cat)
-        if q_pad > q:
-            eps = jnp.pad(eps, ((0, 0), (0, 0), (0, q_pad - q)))
-        parts = [jnp.concatenate(a) for a in
-                 (lss, sfs, xs, masks, chols, alphas, xqs)] + [eps]
-        m_total = int(parts[0].shape[0])
-        m_pad = m_total
-        if m_round_pow2:
-            m_pad = 1 << (m_total - 1).bit_length()
-            if m_pad > m_total:
-                parts = [jnp.concatenate(
-                    [a, jnp.broadcast_to(a[:1],
-                                         (m_pad - m_total,) + a.shape[1:])])
-                    for a in parts]
-        r_impl = resolve_impl(impl, cells=m_pad * q_pad * n_pad)
-        s = _batched_sample_launch(*parts, impl=r_impl)
-        off = 0
-        for i in idxs:
-            m_i = queries[i][0].m
-            results[i] = s[off:off + m_i, :, :q]
-            off += m_i
-        if counters is not None:
-            counters["launches"] = counters.get("launches", 0) + 1
-            counters["queries"] = counters.get("queries", 0) + len(idxs)
-            counters["lanes"] = counters.get("lanes", 0) + m_pad
+    from .plan import (PlanExecutor, SampleQuery, StepPlanner,
+                       flatten_counters)
+    planner = StepPlanner(obs_round_to=round_to, q_round_to=q_round_to,
+                          m_round_pow2=m_round_pow2)
+    nested: dict = {}
+    results = PlanExecutor(impl=impl).execute(
+        planner.plan([SampleQuery(st, xq, keys, ns)
+                      for st, xq, keys, ns in queries]),
+        counters=nested)
+    flatten_counters(nested, counters, ("sample",))
     return results
-
-
-LooQuery = Tuple[GP, jax.Array, int]    # (target, PRNG key, n_samples)
 
 
 @jax.jit
@@ -654,48 +550,26 @@ def _batched_loo_launch(chol, alpha, y, eps):
 
 
 def loo_sample_multi(
-    queries: Sequence[LooQuery], *,
-    round_to: int = 8, counters: Optional[dict] = None,
+    queries, *,
+    round_to: Optional[int] = None, counters: Optional[dict] = None,
 ) -> List[jnp.ndarray]:
     """MANY targets' leave-one-out posterior draws (``gp_loo_samples``)
     as ONE ``_batched_loo_launch`` per (S, n) bucket — the last
     per-ensemble draw of an RGPE scoring round joins the sample query
-    plan. The observation axis pads to a ``round_to`` bucket (unit
-    Cholesky diagonal, so the valid block's LOO moments are exact); eps
-    is drawn OUTSIDE at each target's exact (S, n) shape, so streams
-    match the per-target path bit for bit. Returns one ``(S, n_i)``
-    array per query, in input order."""
-    results: List[Optional[jnp.ndarray]] = [None] * len(queries)
-    groups: dict = {}
-    for i, (gp, _, ns) in enumerate(queries):
-        groups.setdefault((int(ns), gp.n), []).append(i)
-
-    for (n_samples, n), idxs in groups.items():
-        n_pad = n
-        if round_to > 1:
-            n_pad = ((n + round_to - 1) // round_to) * round_to
-        p = n_pad - n
-        chols, alphas, ys = [], [], []
-        for i in idxs:
-            gp = queries[i][0]
-            chol = jnp.pad(gp.chol, ((0, p), (0, p)))
-            if p:
-                bump = jnp.concatenate([jnp.zeros((n,), jnp.float32),
-                                        jnp.ones((p,), jnp.float32)])
-                chol = chol + jnp.diag(bump)
-            chols.append(chol)
-            alphas.append(jnp.pad(gp.alpha, (0, p)))
-            ys.append(jnp.pad(gp.y, (0, p)))
-        keys = jnp.stack([jnp.asarray(queries[i][1]) for i in idxs])
-        eps = jax.vmap(
-            lambda k: jax.random.normal(k, (n_samples, n)))(keys)
-        if p:
-            eps = jnp.pad(eps, ((0, 0), (0, 0), (0, p)))
-        s = _batched_loo_launch(jnp.stack(chols), jnp.stack(alphas),
-                                jnp.stack(ys), eps)
-        for j, i in enumerate(idxs):
-            results[i] = s[j, :, :n]
-        if counters is not None:
-            counters["launches"] = counters.get("launches", 0) + 1
-            counters["queries"] = counters.get("queries", 0) + len(idxs)
+    plan (each ``(target, key, n_samples)`` tuple becomes a
+    ``LooSampleQuery`` node; bucketing/padding policy lives in
+    ``core.plan.StepPlanner``). The observation axis pads to a
+    ``round_to`` bucket (unit Cholesky diagonal, so the valid block's
+    LOO moments are exact); eps is drawn OUTSIDE at each target's exact
+    (S, n) shape, so streams match the per-target path bit for bit.
+    Returns one ``(S, n_i)`` array per query, in input order."""
+    from .plan import (LooSampleQuery, PlanExecutor, StepPlanner,
+                       flatten_counters)
+    planner = StepPlanner(obs_round_to=round_to)
+    nested: dict = {}
+    results = PlanExecutor().execute(
+        planner.plan([LooSampleQuery(gp, key, ns)
+                      for gp, key, ns in queries]),
+        counters=nested)
+    flatten_counters(nested, counters, ("loo",))
     return results

@@ -4,8 +4,10 @@ Each objective and each constraint gets its OWN model (GP or RGPE
 ensemble) — treated as independent, so the approach applies without
 correlation priors and workloads optimised under different objective
 sets can still share models. Acquisition: MC expected hypervolume
-improvement over the (2-objective) posterior, weighted by the
-probability of feasibility under every constraint.
+improvement over the posterior (2 objectives via the staircase
+envelope, n >= 3 via the non-dominated box decomposition in
+``core/acquisition.py``), weighted by the probability of feasibility
+under every constraint.
 
 ``run_search_moo`` is a thin driver over the multi-tenant
 ``SearchService`` (one slot, synchronous executor): MOO tenants use the
@@ -40,7 +42,7 @@ def run_search_moo(
     fuse_posteriors: bool = True,
     fuse_samples: bool = True,
 ) -> BOResult:
-    assert len(objectives) == 2, "MC-EHVI path implemented for 2 objectives"
+    assert len(objectives) >= 2, "MOO needs at least 2 objectives"
     # imported here: serve sits above core in the layering, and the
     # driver is the one place core reaches back up into it
     from repro.serve.search_service import SearchRequest, SearchService

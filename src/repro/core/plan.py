@@ -1,0 +1,502 @@
+"""The declarative query-plan layer: collect -> plan -> execute -> scatter.
+
+PRs 1-4 fused every posterior, sample draw, and EHVI evaluation of a
+multi-tenant service step into padded batched launches, but the "plan"
+was implicit: the bucketing and padding policy (observation axis rounded
+to multiples of 8, fused model axis to a power of two, (q, d) / (S, q,
+d) bucket keys) was restated in ``core/gp.py``, ``core/acquisition.py``
+and ``serve/search_service.py``. This module makes the plan an explicit,
+testable IR:
+
+  - **Query nodes** — one dataclass per kind of launch a scheduling
+    round needs, each carrying an opaque ``owner`` tag for scatter:
+
+    ==================== ================================== =============
+    node                 one logical request                bucket key
+    ==================== ================================== =============
+    ``PosteriorQuery``   grid posterior of a BatchedGP      (q, d)
+    ``SampleQuery``      marginal posterior draws of a      (S, q, d)
+                         BatchedGP at a grid
+    ``LooSampleQuery``   closed-form leave-one-out draws    (S, n)
+                         of a single target GP
+    ``PosteriorDrawQuery`` affine draws from precomputed    (S, q)
+                         posterior rows (MOO EHVI sampling)
+    ``EhviQuery``        MC-EHVI of raw-scale draws against (n_obj, S, q)
+                         a session's front (any n_obj >= 2)
+    ==================== ================================== =============
+
+  - ``StepPlanner`` — owns ALL bucketing/padding policy in one place.
+    ``plan(queries)`` groups queries into ``Bucket``\\ s (one fused
+    launch each) and records every pad decision on the bucket, so tests
+    can assert the exact launch shapes a query set produces without
+    running anything.
+
+  - ``PlanExecutor`` — runs one launch per bucket (the jitted kernels
+    live with their model math in ``core/gp.py`` /
+    ``core/acquisition.py``) and scatters results back to owners:
+    results come back in query order, and any query whose ``owner`` is
+    callable has it invoked with the result.
+
+``SearchService.step`` collects query nodes from every ready session,
+plans, executes, and scatters; ``run_search`` / ``run_search_moo`` /
+``KarasuContext.score_ensembles`` route through the same planner, and
+the historical entry points (``batched_posterior_multi``,
+``batched_sample_multi``, ``loo_sample_multi``, ``mc_ehvi_multi``) are
+thin wrappers over it — so the serving path and the driver path share
+one plan implementation, and new workload kinds (e.g. the n>=3-objective
+EHVI) are plan-node additions instead of another fused-step rewrite.
+
+Exact-padding contract (inherited from the fused launches this layer
+absorbs): padded observations are masked out of the kernel and carry
+unit Cholesky diagonals, padded grid points are edge-repeats or +inf
+points whose rows are sliced off, padded model lanes repeat lane 0 and
+are thrown away, padded EHVI boxes have lo = hi = +inf (zero volume) —
+fusing or padding a query NEVER changes its result beyond float
+roundoff, and PRNG draws always happen at each query's exact shape
+before any padding, so draw streams are plan-invariant.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.routing import resolve_impl
+
+from .acquisition import (EHVI_BOX_CHUNK, _ehvi_box_launch,
+                          nondominated_boxes, pareto_front)
+from .gp import (GP, BatchedGP, _batched_loo_launch, _batched_posterior,
+                 _batched_sample_launch, _pad_stack_obs, fit_gp_batched)
+
+# -- the one home of the shape policy ---------------------------------------
+OBS_ROUND_TO = 8        # observation axis pads to multiples of this
+GRID_ROUND_TO = 8       # sample/EHVI candidate axis pads to multiples
+M_ROUND_POW2 = True     # fused model/lane axis pads to a power of two
+
+
+# ---------------------------------------------------------------------------
+# Query nodes
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PosteriorQuery:
+    """Posterior mean/variance of one ``BatchedGP`` stack on a grid.
+    ``grid``: (q, d) shared across the stack's models or (m, q, d)
+    per-model. Result: ``(mu, var)``, each (m, q)."""
+    stack: BatchedGP
+    grid: Any
+    owner: Any = None
+
+
+@dataclasses.dataclass(frozen=True)
+class SampleQuery:
+    """Marginal-posterior draws of one stack at a grid: ``keys`` is one
+    PRNG key per model. Result: (m, n_samples, q)."""
+    stack: BatchedGP
+    grid: Any
+    keys: Any
+    n_samples: int
+    owner: Any = None
+
+
+@dataclasses.dataclass(frozen=True)
+class LooSampleQuery:
+    """Closed-form leave-one-out posterior draws of a single target GP
+    at its own inputs (RGPE's target honesty device). Result: (S, n)."""
+    gp: GP
+    key: Any
+    n_samples: int
+    owner: Any = None
+
+
+@dataclasses.dataclass(frozen=True)
+class PosteriorDrawQuery:
+    """Raw-scale affine draws from precomputed posterior rows — the MOO
+    EHVI sampling leg, where the grid posterior already ran and only
+    ``mu + eps * sqrt(var)`` (rescaled) remains. ``mu``/``var``: (q,)
+    standardised rows at the remaining candidates. Result: (n_mc, q)."""
+    mu: Any
+    var: Any
+    y_mean: Any
+    y_std: Any
+    key: Any
+    n_mc: int
+    owner: Any = None
+
+
+@dataclasses.dataclass(frozen=True)
+class EhviQuery:
+    """MC expected hypervolume improvement of per-objective raw-scale
+    draws against a session's observed front. ``samples``: one (S, q)
+    array per objective (any count >= 2); ``observed``: (n, n_obj);
+    ``ref``: (n_obj,). Result: (q,) numpy."""
+    samples: Tuple[Any, ...]
+    observed: Any
+    ref: Any
+    owner: Any = None
+
+
+# ---------------------------------------------------------------------------
+# The plan IR
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """One fused launch: the queries at ``indices`` share ``key`` and
+    execute together under the pad decisions in ``pads`` (every padded
+    axis length the launch will use, for golden-shape tests)."""
+    kind: str
+    key: Tuple
+    indices: Tuple[int, ...]
+    pads: Dict[str, int]
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """The planned step: ``queries`` in emission order, ``buckets`` one
+    per fused launch, ``prep`` per-query planner precomputation (the
+    EHVI box decompositions). ``stats()`` reports the fusion shape."""
+    queries: List[Any]
+    buckets: List[Bucket]
+    prep: Dict[int, Any] = dataclasses.field(default_factory=dict)
+
+    def stats(self) -> Dict[str, int]:
+        return {"batches": len(self.buckets), "queries": len(self.queries)}
+
+
+def _round_up(n: int, mult: int) -> int:
+    return n if mult <= 1 else ((n + mult - 1) // mult) * mult
+
+
+def _pow2(n: int) -> int:
+    return 1 << (n - 1).bit_length()
+
+
+class StepPlanner:
+    """Owns ALL bucketing/padding policy: which queries fuse (the bucket
+    keys) and what every launch's padded shapes are. The historical
+    contracts — observation axis to multiples of ``obs_round_to``,
+    sample/EHVI candidate axis to ``q_round_to``, fused model/lane axis
+    to a power of two, EHVI box count to a power of two — live here and
+    nowhere else."""
+
+    def __init__(self, *, obs_round_to: Optional[int] = None,
+                 q_round_to: Optional[int] = None,
+                 m_round_pow2: Optional[bool] = None):
+        self.obs_round_to = (OBS_ROUND_TO if obs_round_to is None
+                             else obs_round_to)
+        self.q_round_to = (GRID_ROUND_TO if q_round_to is None
+                           else q_round_to)
+        self.m_round_pow2 = (M_ROUND_POW2 if m_round_pow2 is None
+                             else m_round_pow2)
+
+    # -- shared shape policy -------------------------------------------------
+    def round_obs(self, n: int) -> int:
+        return _round_up(n, self.obs_round_to)
+
+    def round_grid(self, q: int) -> int:
+        return _round_up(q, self.q_round_to)
+
+    def round_models(self, m: int) -> int:
+        return _pow2(m) if self.m_round_pow2 else m
+
+    def fit_targets(self, xs, ys, *, noise: float, steps: int = 120,
+                    m_round_pow2: Optional[bool] = None) -> BatchedGP:
+        """Fit a cohort of target GPs under the planner's jit-shape
+        policy (the fused-fit twin of ``plan``: same observation-axis
+        bucketing, same model-axis rule). ``m_round_pow2=False`` opts a
+        fixed-size cohort (e.g. single-tenant ``run_search``) out of the
+        power-of-two lane padding that only pays off when cohort size
+        varies step to step."""
+        return fit_gp_batched(
+            xs, ys, noise=noise, steps=steps, round_to=self.obs_round_to,
+            m_round_pow2=(self.m_round_pow2 if m_round_pow2 is None
+                          else m_round_pow2))
+
+    # -- bucketing -----------------------------------------------------------
+    def bucket_key(self, query) -> Tuple[str, Tuple]:
+        """(kind, key): queries fuse into one launch iff both match.
+        Shapes are read via ``np.shape`` — no materialisation, so
+        device-resident grids/rows never sync to host just to plan."""
+        if isinstance(query, PosteriorQuery):
+            return "posterior", (int(np.shape(query.grid)[-2]),
+                                 int(query.stack.x.shape[-1]))
+        if isinstance(query, SampleQuery):
+            return "sample", (int(query.n_samples),
+                              int(np.shape(query.grid)[-2]),
+                              int(query.stack.x.shape[-1]))
+        if isinstance(query, LooSampleQuery):
+            return "loo", (int(query.n_samples), query.gp.n)
+        if isinstance(query, PosteriorDrawQuery):
+            return "draw", (int(query.n_mc),
+                            int(np.shape(query.mu)[0]))
+        if isinstance(query, EhviQuery):
+            s_shape = np.shape(query.samples[0])
+            return "ehvi", (len(query.samples), int(s_shape[0]),
+                            int(s_shape[1]))
+        raise TypeError(f"not a query node: {query!r}")
+
+    def plan(self, queries: Sequence) -> StepPlan:
+        """Group queries into one ``Bucket`` per fused launch and fix
+        every pad decision. No launches execute here; the one
+        non-trivial planning cost is the EHVI box decomposition
+        (``_pads_ehvi`` must know each front's box count to fix
+        ``k_pad``), which is computed once per query on the host and
+        carried to the executor via ``StepPlan.prep``."""
+        groups: Dict[Tuple[str, Tuple], List[int]] = {}
+        for i, query in enumerate(queries):
+            groups.setdefault(self.bucket_key(query), []).append(i)
+        prep: Dict[int, Any] = {}
+        buckets = []
+        for (kind, key), idxs in groups.items():
+            pads = getattr(self, f"_pads_{kind}")(
+                key, [queries[i] for i in idxs], idxs, prep)
+            buckets.append(Bucket(kind, key, tuple(idxs), pads))
+        return StepPlan(list(queries), buckets, prep)
+
+    def _pads_posterior(self, key, queries, idxs, prep) -> Dict[str, int]:
+        lanes = sum(q.stack.m for q in queries)
+        return {"n_pad": self.round_obs(max(q.stack.n_max for q in queries)),
+                "m_pad": self.round_models(lanes), "lanes": lanes}
+
+    def _pads_sample(self, key, queries, idxs, prep) -> Dict[str, int]:
+        lanes = sum(q.stack.m for q in queries)
+        return {"n_pad": self.round_obs(max(q.stack.n_max for q in queries)),
+                "q_pad": self.round_grid(key[1]),
+                "m_pad": self.round_models(lanes), "lanes": lanes}
+
+    def _pads_loo(self, key, queries, idxs, prep) -> Dict[str, int]:
+        return {"n_pad": self.round_obs(key[1]), "lanes": len(queries)}
+
+    def _pads_draw(self, key, queries, idxs, prep) -> Dict[str, int]:
+        # deliberately exact: the draw combine is not jitted (q shrinks
+        # every iteration and the arithmetic is trivially cheap), so
+        # padding would buy nothing and only perturb memory traffic
+        return {"lanes": len(queries)}
+
+    def _pads_ehvi(self, key, queries, idxs, prep) -> Dict[str, int]:
+        n_obj = key[0]
+        k_max = 1
+        for i, query in zip(idxs, queries):
+            observed = np.asarray(query.observed, np.float64)
+            if observed.size and (observed.ndim != 2
+                                  or observed.shape[1] != n_obj):
+                raise ValueError(
+                    f"EhviQuery observed has shape {observed.shape} but "
+                    f"carries {n_obj} objective sample arrays")
+            los, his = nondominated_boxes(
+                pareto_front(observed.reshape(-1, n_obj)),
+                np.asarray(query.ref, np.float64))
+            prep[i] = (los, his)
+            k_max = max(k_max, los.shape[0])
+        # small fronts pad to a power of two; past one launch block the
+        # box axis pads to a chunk multiple instead (the launch scans
+        # fixed-size blocks there, bounding peak memory)
+        k_pad = (_pow2(k_max) if k_max <= EHVI_BOX_CHUNK
+                 else _round_up(k_max, EHVI_BOX_CHUNK))
+        return {"k_pad": k_pad, "q_pad": self.round_grid(key[2]),
+                "l_pad": self.round_models(len(queries)),
+                "lanes": len(queries)}
+
+
+# ---------------------------------------------------------------------------
+# Execution: one launch per bucket, scatter to owners
+# ---------------------------------------------------------------------------
+
+
+def _count(counters: Optional[dict], kind: str, queries: int,
+           lanes: int) -> None:
+    if counters is None:
+        return
+    c = counters.setdefault(kind, {})
+    c["launches"] = c.get("launches", 0) + 1
+    c["queries"] = c.get("queries", 0) + queries
+    c["lanes"] = c.get("lanes", 0) + lanes
+
+
+def flatten_counters(nested: dict, counters: Optional[dict],
+                     kinds: Sequence[str]) -> None:
+    """Merge ``execute``'s per-kind counters into the historical flat
+    ``launches``/``queries``/``lanes`` dict the single-kind wrappers
+    (``batched_posterior_multi`` & co.) expose."""
+    if counters is None:
+        return
+    for kind in kinds:
+        for k, v in nested.get(kind, {}).items():
+            counters[k] = counters.get(k, 0) + v
+
+
+def _draw_launch(keys, mu, var, y_std, y_mean, n_mc: int):
+    """All draw lanes of one bucket in one stacked batch. Per-lane eps
+    is ``normal(key, (n_mc, q))`` — the identical stream the per-session
+    loop consumes, so fusion never changes draws."""
+    q = mu.shape[1]
+    eps = jax.vmap(lambda k: jax.random.normal(k, (n_mc, q)))(keys)
+    sm = mu[:, None, :] + eps * jnp.sqrt(var)[:, None, :]
+    return sm * y_std[:, None, None] + y_mean[:, None, None]
+
+
+class PlanExecutor:
+    """Executes a ``StepPlan``: one fused launch per bucket, results
+    returned in query order. Scatter: any query whose ``owner`` is
+    callable has ``owner(result)`` invoked (in query order, so owners
+    that overlay earlier owners' state — e.g. RGPE mixes over target
+    posteriors — see a deterministic sequence). ``counters`` (optional
+    dict) collects ``{kind: {launches, queries, lanes}}``."""
+
+    def __init__(self, *, impl: str = "auto"):
+        self.impl = impl
+
+    def execute(self, plan: StepPlan, *, counters: Optional[dict] = None,
+                impl: Optional[str] = None) -> List[Any]:
+        impl = self.impl if impl is None else impl
+        results: List[Any] = [None] * len(plan.queries)
+        for bucket in plan.buckets:
+            queries = [plan.queries[i] for i in bucket.indices]
+            out = getattr(self, f"_exec_{bucket.kind}")(
+                bucket, queries, plan, impl)
+            for i, r in zip(bucket.indices, out):
+                results[i] = r
+            _count(counters, bucket.kind, len(queries),
+                   bucket.pads.get("m_pad",
+                                   bucket.pads.get("l_pad",
+                                                   bucket.pads["lanes"])))
+        for query, result in zip(plan.queries, results):
+            if callable(query.owner):
+                query.owner(result)
+        return results
+
+    # -- per-kind launches ---------------------------------------------------
+    @staticmethod
+    def _stack_parts(queries, n_pad: int, q: int, d: int,
+                     q_pad: Optional[int] = None):
+        """Assemble the padded (ls, sf, x, mask, chol, alpha, xq) lanes
+        shared by the posterior and sample launches."""
+        xs, masks, chols, alphas, lss, sfs, xqs = [], [], [], [], [], [], []
+        for query in queries:
+            st = query.stack
+            x, mask, chol, alpha = _pad_stack_obs(st, n_pad)
+            xs.append(x)
+            masks.append(mask)
+            chols.append(chol)
+            alphas.append(alpha)
+            lss.append(st.log_lengthscales)
+            sfs.append(st.log_signal)
+            xq = jnp.asarray(query.grid, jnp.float32)
+            if xq.ndim == 2:
+                xq = jnp.broadcast_to(xq[None], (st.m, q, d))
+            if q_pad is not None and q_pad > q:
+                xq = jnp.pad(xq, ((0, 0), (0, q_pad - q), (0, 0)),
+                             mode="edge")
+            xqs.append(xq)
+        return [jnp.concatenate(a) for a in
+                (lss, sfs, xs, masks, chols, alphas, xqs)]
+
+    @staticmethod
+    def _pad_lanes(parts, m_pad: int):
+        m_total = int(parts[0].shape[0])
+        if m_pad > m_total:
+            parts = [jnp.concatenate(
+                [a, jnp.broadcast_to(a[:1],
+                                     (m_pad - m_total,) + a.shape[1:])])
+                for a in parts]
+        return parts
+
+    def _exec_posterior(self, bucket, queries, plan, impl):
+        q, d = bucket.key
+        n_pad, m_pad = bucket.pads["n_pad"], bucket.pads["m_pad"]
+        parts = self._pad_lanes(
+            self._stack_parts(queries, n_pad, q, d), m_pad)
+        r_impl = resolve_impl(impl, cells=m_pad * q * n_pad)
+        mu, var = _batched_posterior(*parts, impl=r_impl)
+        out, off = [], 0
+        for query in queries:
+            out.append((mu[off:off + query.stack.m],
+                        var[off:off + query.stack.m]))
+            off += query.stack.m
+        return out
+
+    def _exec_sample(self, bucket, queries, plan, impl):
+        n_samples, q, d = bucket.key
+        n_pad, q_pad, m_pad = (bucket.pads["n_pad"], bucket.pads["q_pad"],
+                               bucket.pads["m_pad"])
+        parts = self._stack_parts(queries, n_pad, q, d, q_pad=q_pad)
+        keys_cat = jnp.concatenate(
+            [jnp.asarray(query.keys) for query in queries])
+        # exact-shape draws (one dispatch for the bucket), THEN pad: the
+        # grid padding that keeps jit shapes stable across steps must
+        # never perturb a lane's PRNG stream
+        eps = jax.vmap(
+            lambda k: jax.random.normal(k, (n_samples, q)))(keys_cat)
+        if q_pad > q:
+            eps = jnp.pad(eps, ((0, 0), (0, 0), (0, q_pad - q)))
+        parts = self._pad_lanes(parts + [eps], m_pad)
+        r_impl = resolve_impl(impl, cells=m_pad * q_pad * n_pad)
+        s = _batched_sample_launch(*parts, impl=r_impl)
+        out, off = [], 0
+        for query in queries:
+            out.append(s[off:off + query.stack.m, :, :q])
+            off += query.stack.m
+        return out
+
+    def _exec_loo(self, bucket, queries, plan, impl):
+        n_samples, n = bucket.key
+        n_pad = bucket.pads["n_pad"]
+        p = n_pad - n
+        chols, alphas, ys = [], [], []
+        for query in queries:
+            gp = query.gp
+            chol = jnp.pad(gp.chol, ((0, p), (0, p)))
+            if p:
+                bump = jnp.concatenate([jnp.zeros((n,), jnp.float32),
+                                        jnp.ones((p,), jnp.float32)])
+                chol = chol + jnp.diag(bump)
+            chols.append(chol)
+            alphas.append(jnp.pad(gp.alpha, (0, p)))
+            ys.append(jnp.pad(gp.y, (0, p)))
+        keys = jnp.stack([jnp.asarray(query.key) for query in queries])
+        eps = jax.vmap(
+            lambda k: jax.random.normal(k, (n_samples, n)))(keys)
+        if p:
+            eps = jnp.pad(eps, ((0, 0), (0, 0), (0, p)))
+        s = _batched_loo_launch(jnp.stack(chols), jnp.stack(alphas),
+                                jnp.stack(ys), eps)
+        return [s[j, :, :n] for j in range(len(queries))]
+
+    def _exec_draw(self, bucket, queries, plan, impl):
+        n_mc, _q = bucket.key
+        parts = [jnp.stack([jnp.asarray(getattr(query, f))
+                            for query in queries])
+                 for f in ("key", "mu", "var", "y_std", "y_mean")]
+        draws = _draw_launch(*parts, n_mc=n_mc)
+        return [draws[j] for j in range(len(queries))]
+
+    def _exec_ehvi(self, bucket, queries, plan, impl):
+        n_obj, _s, q = bucket.key
+        k_pad, q_pad, l_pad = (bucket.pads["k_pad"], bucket.pads["q_pad"],
+                               bucket.pads["l_pad"])
+        los, his, refs, ps = [], [], [], []
+        for i, query in zip(bucket.indices, queries):
+            lo, hi = plan.prep[i]
+            pad = k_pad - lo.shape[0]
+            # zero-volume padding: lo = hi = +inf clips every overlap to 0
+            los.append(np.pad(lo, ((0, pad), (0, 0)),
+                              constant_values=np.inf))
+            his.append(np.pad(hi, ((0, pad), (0, 0)),
+                              constant_values=np.inf))
+            refs.append(np.asarray(query.ref, np.float32))
+            # +inf candidates gain nothing and are sliced off below
+            ps.append(np.stack(
+                [np.pad(np.asarray(sm, np.float32),
+                        ((0, 0), (0, q_pad - q)), constant_values=np.inf)
+                 for sm in query.samples]))
+        parts = [jnp.asarray(np.stack(a).astype(np.float32))
+                 for a in (los, his, refs, ps)]
+        parts = self._pad_lanes(parts, l_pad)
+        out = _ehvi_box_launch(*parts)
+        return [np.asarray(out[j])[:q] for j in range(len(queries))]

@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-from collections import defaultdict
+from collections import OrderedDict, defaultdict
 from typing import (Callable, Dict, Iterable, List, Mapping, Optional,
                     Sequence, Tuple)
 
@@ -120,21 +120,34 @@ class SupportModelStore:
     cached fit, i.e. ``add_run`` invalidates exactly the workloads it
     touched. Workloads with fewer than ``min_runs`` usable observations
     (or zero spread in the measure) cache ``None``.
+
+    The stack cache is LRU-bounded at ``max_entries`` (generous by
+    default — a steady multi-tenant cohort re-requests a handful of
+    support sets per step, but a LONG-lived service whose tenants churn
+    through many (support set, measure) combinations must not grow
+    memory without bound; each padded stack holds (m, n, n) Cholesky
+    factors). Capacity evictions are counted in ``evictions``;
+    version-stale entries are dropped separately (and for free) on
+    misses.
     """
 
     def __init__(self, repository: Repository, space, *,
-                 noise: float = 0.1, min_runs: int = 3):
+                 noise: float = 0.1, min_runs: int = 3,
+                 max_entries: int = 256):
         self._repo = repository
         self._space = space
         self._noise = noise
         self._min_runs = min_runs
+        self._max_entries = max_entries
         # (workload, measure) -> (repo version at fit time, GP | None)
         self._cache: Dict[Tuple[str, str], Tuple[int, Optional[object]]] = {}
         # (workload ids, measure) -> (versions at stack time, stack, ids)
-        self._stacked: Dict[Tuple[Tuple[str, ...], str],
-                            Tuple[Tuple[int, ...], object, list]] = {}
+        # in LRU order (most recently used last)
+        self._stacked: "OrderedDict[Tuple[Tuple[str, ...], str], " \
+            "Tuple[Tuple[int, ...], object, list]]" = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     @property
     def repository(self) -> Repository:
@@ -172,11 +185,13 @@ class SupportModelStore:
         arrays) and padded to multiples of 8, so the posterior/sample
         query plans see stable, already-bucketed shapes."""
         from .gp import stack_gps
+        from .plan import OBS_ROUND_TO
         key = (tuple(workload_ids), measure)
         vers = tuple(self._repo.version(z) for z in workload_ids)
         hit = self._stacked.get(key)
         if hit is not None and hit[0] == vers:
             self.hits += len(hit[2])
+            self._stacked.move_to_end(key)          # LRU touch
             return hit[1], list(hit[2])
         gps, ids = [], []
         for z in workload_ids:
@@ -184,7 +199,9 @@ class SupportModelStore:
             if gp is not None:
                 gps.append(gp)
                 ids.append(z)
-        stack = stack_gps(gps, round_to=8) if gps else None
+        # stack at the planner's observation bucket so repeated steps
+        # re-enter the query plans on already-bucketed shapes
+        stack = stack_gps(gps, round_to=OBS_ROUND_TO) if gps else None
         # misses are rare (a repo version moved, or a new support set):
         # use them to evict version-stale entries, so a long-running
         # service's cache tracks the live support sets instead of
@@ -194,6 +211,11 @@ class SupportModelStore:
         for k in stale:
             del self._stacked[k]
         self._stacked[key] = (vers, stack, ids)
+        # ... and the capacity bound evicts the least recently used
+        # live entries beyond it
+        while len(self._stacked) > self._max_entries:
+            self._stacked.popitem(last=False)
+            self.evictions += 1
         return stack, list(ids)
 
     def invalidate(self, workload_id: Optional[str] = None) -> None:

@@ -39,8 +39,9 @@ import numpy as np
 
 from repro.kernels.ranking_loss import ranking_loss, ranking_loss_padded
 from .gp import (GP, BatchedGP, batched_posterior, batched_sample,
-                 batched_sample_multi, gp_loo_samples, gp_posterior,
-                 gp_sample, loo_sample_multi)
+                 gp_loo_samples, gp_posterior, gp_sample)
+from .plan import (LooSampleQuery, PlanExecutor, SampleQuery,
+                   StepPlanner, flatten_counters)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,6 +167,7 @@ def compute_weights_multi(
     impl: str = "xla",
     fuse_samples: bool = True,
     sample_counters: Optional[dict] = None,
+    planner: Optional[StepPlanner] = None,
 ) -> List[jnp.ndarray]:
     """Score MANY ensembles with ONE padded ranking-loss launch.
 
@@ -177,15 +179,19 @@ def compute_weights_multi(
     validity masks, mirroring ``BatchedGP``'s padding contract. Jobs with
     n_obs < 2 short-circuit to uniform weights (no rankable pair).
 
-    With ``fuse_samples`` (the default) every job's support-sample draw
-    joins ONE ``batched_sample_multi`` launch per (S, q, d) bucket and
-    every target's closed-form LOO draw ONE ``loo_sample_multi`` launch
-    per (S, n) bucket — the sample query plan — instead of per-job
-    ``batched_sample`` / ``gp_loo_samples`` loops; draw streams are
-    identical either way, so weights agree to float roundoff.
-    ``sample_counters`` forwards to the plans' ``counters``. The final
-    weight reduction runs vectorised per (m, S) shape group
-    (``_weights_from_losses_batched``) on both paths.
+    With ``fuse_samples`` (the default) every job emits its draws as
+    query-plan nodes — one ``SampleQuery`` per support stack and one
+    ``LooSampleQuery`` per target — and ONE planned ``PlanExecutor``
+    round runs one launch per (S, q, d) / (S, n) bucket, the same
+    planner a ``SearchService`` step routes its grid posteriors
+    through (pass ``planner`` to share policy; default policy
+    otherwise). Draw streams are identical to the per-job
+    ``batched_sample`` / ``gp_loo_samples`` loops
+    (``fuse_samples=False``), so weights agree to float roundoff.
+    ``sample_counters`` (flat ``launches``/``queries``) reports the
+    fused launch count. The final weight reduction runs vectorised per
+    (m, S) shape group (``_weights_from_losses_batched``) on both
+    paths.
     """
     out: List[Optional[jnp.ndarray]] = [None] * len(jobs)
     live: List[Tuple[int, WeightJob, jax.Array]] = []
@@ -198,14 +204,17 @@ def compute_weights_multi(
         live.append((ji, job, jax.random.split(job.key, m + 1)))
 
     if fuse_samples:
-        s_bases = batched_sample_multi(
-            [(job.bases, job.target.x, keys[:job.bases.m], job.n_samples)
-             for _, job, keys in live],
-            impl=impl, counters=sample_counters)
-        s_tars = loo_sample_multi(
-            [(job.target, keys[-1], job.n_samples)
-             for _, job, keys in live],
-            counters=sample_counters)
+        planner = planner if planner is not None else StepPlanner()
+        queries = [SampleQuery(job.bases, job.target.x,
+                               keys[:job.bases.m], job.n_samples)
+                   for _, job, keys in live] + \
+                  [LooSampleQuery(job.target, keys[-1], job.n_samples)
+                   for _, job, keys in live]
+        nested: dict = {}
+        res = PlanExecutor(impl=impl).execute(planner.plan(queries),
+                                              counters=nested)
+        s_bases, s_tars = res[:len(live)], res[len(live):]
+        flatten_counters(nested, sample_counters, ("sample", "loo"))
     else:
         s_bases = [batched_sample(job.bases, job.target.x,
                                   keys[:job.bases.m], job.n_samples,

@@ -8,11 +8,15 @@ backends:
 
   - ``SyncProfileExecutor``        — runs the profiler inline at submit
     time. Zero concurrency; bitwise-identical to the pre-async service.
-  - ``ThreadPoolProfileExecutor``  — a ``concurrent.futures`` pool.
-    Profiling runs overlap each other and the service's fit/score work;
-    completion order is wall-clock, but outcomes are always *returned*
-    in submission order among the completed set, so absorbing them is
-    deterministic whenever the completed set is.
+  - ``ThreadPoolProfileExecutor``  — a ``concurrent.futures`` thread
+    pool. Profiling runs overlap each other and the service's fit/score
+    work; completion order is wall-clock, but outcomes are always
+    *returned* in submission order among the completed set, so absorbing
+    them is deterministic whenever the completed set is.
+  - ``ProcessPoolProfileExecutor`` — same semantics on a process pool,
+    for profilers that hold the GIL (heavy numpy in the measurement
+    path, C extensions that never release). Jobs, outcomes, and the
+    profile_fn cross a pickle boundary — see the class docstring.
   - ``FakeProfileExecutor``        — a deterministic virtual-clock fake:
     the profiler runs inline (deterministically, in submission order)
     but its outcome is withheld until the per-job latency has elapsed on
@@ -44,7 +48,7 @@ import dataclasses
 import heapq
 import threading
 import time
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
@@ -110,42 +114,39 @@ class SyncProfileExecutor:
         self._ready.clear()
 
 
-class ThreadPoolProfileExecutor:
-    """Real concurrency: profiling runs execute on a thread pool while
-    the service keeps fitting/scoring the sessions whose data landed."""
+class _PoolBackedExecutor:
+    """The ordered-outcome bookkeeping shared by the thread- and
+    process-pool backends: submissions take a monotonically increasing
+    seq, workers record outcomes under it, and ``poll``/``collect``/
+    ``drain`` return completed outcomes in submission order among the
+    completed set — so absorbing them is deterministic whenever the
+    completed set is (e.g. under a barrier, or after a full drain)."""
 
-    def __init__(self, max_workers: int = 8) -> None:
-        self._pool = ThreadPoolExecutor(max_workers=max_workers)
+    def __init__(self) -> None:
         self._lock = threading.Condition()
         self._seq = 0
         self._done: Dict[int, ProfileOutcome] = {}   # seq -> outcome
         self._inflight: set = set()
 
-    def submit(self, job: ProfileJob, fn: ProfileFn) -> None:
+    def _next_seq(self) -> int:
         with self._lock:
             seq = self._seq
             self._seq += 1
             self._inflight.add(seq)
+            return seq
 
-        def work() -> None:
-            out = _run(job, fn)
-            with self._lock:
-                self._inflight.discard(seq)
-                self._done[seq] = out
-                self._lock.notify_all()
-
-        self._pool.submit(work)
+    def _record(self, seq: int, out: ProfileOutcome) -> None:
+        with self._lock:
+            self._inflight.discard(seq)
+            self._done[seq] = out
+            self._lock.notify_all()
 
     def pending(self) -> int:
         with self._lock:
             return len(self._inflight) + len(self._done)
 
     def _take(self) -> List[ProfileOutcome]:
-        # submission order among the completed set: deterministic absorb
-        # whenever the completed set is (e.g. under a barrier, or after
-        # a full drain)
-        out = [self._done.pop(k) for k in sorted(self._done)]
-        return out
+        return [self._done.pop(k) for k in sorted(self._done)]
 
     def poll(self) -> List[ProfileOutcome]:
         with self._lock:
@@ -178,6 +179,68 @@ class ThreadPoolProfileExecutor:
 
     def shutdown(self) -> None:
         self._pool.shutdown(wait=True)
+
+
+class ThreadPoolProfileExecutor(_PoolBackedExecutor):
+    """Real concurrency: profiling runs execute on a thread pool while
+    the service keeps fitting/scoring the sessions whose data landed."""
+
+    def __init__(self, max_workers: int = 8) -> None:
+        super().__init__()
+        self._pool = ThreadPoolExecutor(max_workers=max_workers)
+
+    def submit(self, job: ProfileJob, fn: ProfileFn) -> None:
+        seq = self._next_seq()
+
+        def work() -> None:
+            self._record(seq, _run(job, fn))
+
+        self._pool.submit(work)
+
+
+class ProcessPoolProfileExecutor(_PoolBackedExecutor):
+    """Profiling runs on a PROCESS pool — for profile_fns that hold the
+    GIL (tight C loops, heavy in-process measurement), where threads
+    serialise instead of overlapping.
+
+    Everything submitted crosses a pickle boundary: ``ProfileJob`` /
+    ``ProfileOutcome`` are plain-data dataclasses and pickle as long as
+    the job's ``config`` mapping and the outcome's measures/metrics do
+    (dicts, floats, numpy arrays — yes); the ``profile_fn`` must be a
+    module-level callable (no lambdas/closures). A profiler exception is
+    captured onto ``outcome.error`` in the worker and pickled back —
+    same propagation contract as the other backends. Failures of the
+    pool machinery itself (unpicklable fn, a worker dying, a broken
+    pool) surface the same way, as an errored outcome for the job that
+    hit them, so the service's session state machine settles instead of
+    wedging.
+
+    ``mp_context`` forwards to ``ProcessPoolExecutor`` (e.g.
+    ``multiprocessing.get_context("spawn")`` where fork is unsafe)."""
+
+    def __init__(self, max_workers: int = 8, mp_context=None) -> None:
+        super().__init__()
+        self._pool = ProcessPoolExecutor(max_workers=max_workers,
+                                         mp_context=mp_context)
+
+    def submit(self, job: ProfileJob, fn: ProfileFn) -> None:
+        seq = self._next_seq()
+        try:
+            fut = self._pool.submit(_run, job, fn)
+        except BaseException as e:   # noqa: BLE001 — surfaced on outcome
+            # submit-time failure (pool already broken/shut down): the
+            # job still owes an outcome
+            self._record(seq, ProfileOutcome(job, error=e))
+            return
+
+        def on_done(f) -> None:
+            try:
+                out = f.result()
+            except BaseException as e:  # noqa: BLE001 — pickling error,
+                out = ProfileOutcome(job, error=e)  # BrokenProcessPool, ...
+            self._record(seq, out)
+
+        fut.add_done_callback(on_done)
 
 
 class FakeProfileExecutor:

@@ -11,24 +11,23 @@ BO iteration ("decode").
 
 Two axes are batched/overlapped across tenants:
 
-  - **Model math**: each step stacks every ready session's target-GP fit
-    jobs — one per (tenant, measure) — into a single ``BatchedGP`` per
-    (search space, noise) group (one vmapped Adam/Cholesky fit), scores
-    ALL karasu sessions' RGPE ensembles with ONE padded ranking-loss
-    launch (``compute_weights_multi``; ragged n_obs handled by masking),
-    and then executes EVERY grid posterior the step needs — target
-    stacks, every RGPE ensemble's support stack, MOO objective and
-    constraint models, across all tenants — as ONE fused
-    ``batched_posterior_multi`` launch (the posterior/acquisition query
-    plan; ``impl="auto"`` routes it to the Pallas matern kernel on TPU
-    when the fused models x grid batch justifies it). The step's SAMPLE
-    draws ride the same plan architecture: every RGPE ensemble's
-    support-sample draw fuses into one ``batched_sample_multi`` launch
-    per (n_samples, grid, dim) bucket, and every MOO session's MC-EHVI
-    draws + staircase evaluations into one vmapped launch per bucket
-    (``_moo_sample_launch`` + ``mc_ehvi_multi``). RGPE mixing and
-    the acquisitions (EI, constrained EI, MC-EHVI) are applied to the
-    returned rows as vectorised array ops, not per-session loops.
+  - **Model math**: every step is an explicit collect → plan → execute
+    → scatter round over the query-plan layer (``repro.serve.plan``):
+    the step COLLECTS query nodes from every ready session — one
+    ``PosteriorQuery`` per target stack and per RGPE support stack, one
+    ``PosteriorDrawQuery`` per (MOO session, objective) lane, one
+    ``EhviQuery`` per MOO session — each tagged with its owner; the
+    ``StepPlanner`` groups them into buckets (owning ALL
+    bucketing/padding policy); the ``PlanExecutor`` runs one fused
+    launch per bucket (``impl="auto"`` routes to the Pallas matern
+    kernel on TPU when the fused batch justifies it); and the step
+    SCATTERS results back to their owning sessions. Target fits share
+    one vmapped Adam/Cholesky per (search space, noise) group under the
+    same planner policy, and ALL karasu sessions' RGPE ensembles score
+    through ONE padded ranking-loss launch (``compute_weights_multi``,
+    whose sample draws ride the same plan). RGPE mixing and the
+    acquisitions (EI, constrained EI, MC-EHVI) are applied to the
+    scattered rows as vectorised array ops, not per-session loops.
     ``fuse_posteriors=False`` restores the per-ensemble posterior loop
     and the per-candidate MC-EHVI reference, ``fuse_samples=False`` the
     per-job draw loop and per-session numpy EHVI — the
@@ -42,10 +41,12 @@ Two axes are batched/overlapped across tenants:
     bitwise.
 
 Sessions may be single-objective (``objective=...``) or multi-objective
-(``objectives=[a, b]``, paper §III-D: MC-EHVI over two objectives,
-feasibility-weighted by every constraint); both kinds mix freely in one
-step and share the same fused fit/weight/posterior launches.
-``run_search_moo`` is a thin driver over this path.
+(``objectives=[a, b, ...]``, paper §III-D: MC-EHVI weighted by every
+constraint's probability of feasibility — 2 objectives evaluate via the
+staircase envelope, n >= 3 via the non-dominated box decomposition, both
+as ``EhviQuery`` plan nodes); all kinds mix freely in one step and share
+the same fused fit/weight/posterior launches. ``run_search_moo`` is a
+thin driver over this path.
 
 Support models come from one ``SupportModelStore`` shared by every
 tenant and invalidated incrementally per (workload, measure) when
@@ -64,7 +65,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.acquisition import (mc_ehvi, mc_ehvi_batched, mc_ehvi_multi,
+from repro.core.acquisition import (mc_ehvi, mc_ehvi_batched, mc_ehvi_nd,
                                     pareto_of_observations,
                                     probability_of_feasibility)
 from repro.core.bo import (KEY_PURPOSE_MOO_EHVI, KEY_PURPOSE_RGPE, BOConfig,
@@ -73,34 +74,19 @@ from repro.core.bo import (KEY_PURPOSE_MOO_EHVI, KEY_PURPOSE_RGPE, BOConfig,
                            _model_posteriors_augmented, _should_stop_early,
                            _target_runs, derive_key)
 from repro.core.encoding import SearchSpace
-from repro.core.gp import (batched_posterior, batched_posterior_multi,
-                           fit_gp_batched)
+from repro.core.gp import batched_posterior
 from repro.core.repository import Repository
 from repro.core.rgpe import WeightJob, mix_weighted
 from repro.core.types import (BOResult, Constraint, Objective, Observation,
                               RunRecord)
+from repro.serve.plan import (EhviQuery, PlanExecutor, PosteriorDrawQuery,
+                              PosteriorQuery, StepPlanner)
 from repro.serve.profile_executor import (ProfileJob, ProfileOutcome,
                                           SyncProfileExecutor)
 
 # session states
 READY = "ready"                        # observations current, can fit/score
 WAITING_PROFILE = "waiting_profile"    # >=1 profiling run in flight
-
-
-def _moo_sample_launch(keys, mu, var, y_std, y_mean, n_mc: int):
-    """All (MOO session, objective) lanes' raw-scale posterior draws in
-    one stacked batch. keys: (L,) per-lane PRNG keys; mu/var: (L, q)
-    rows already gathered at the remaining candidates; y_std/y_mean:
-    (L,). Per-lane eps is ``normal(key, (n_mc, q))`` — the identical
-    stream the per-session loop consumes, so fusion never changes
-    draws. Deliberately NOT jitted: q shrinks every iteration, so a
-    jitted program would recompile each step for a trivially cheap
-    affine combine; the fusion win is the single vmapped draw + stacked
-    arithmetic across lanes."""
-    q = mu.shape[1]
-    eps = jax.vmap(lambda k: jax.random.normal(k, (n_mc, q)))(keys)
-    sm = mu[:, None, :] + eps * jnp.sqrt(var)[:, None, :]
-    return sm * y_std[:, None, None] + y_mean[:, None, None]
 
 
 def _absorb_target_posts(posts, owners, tgts, mu, var) -> None:
@@ -117,8 +103,9 @@ def _absorb_target_posts(posts, owners, tgts, mu, var) -> None:
 class SearchRequest:
     """One tenant's search: the ``run_search`` (or ``run_search_moo``)
     arguments as a record. Exactly one of ``objective`` /
-    ``objectives`` must be set; ``objectives=[a, b]`` makes the session
-    multi-objective (2-objective MC-EHVI, §III-D)."""
+    ``objectives`` must be set; ``objectives=[a, b, ...]`` (two or
+    more) makes the session multi-objective (MC-EHVI, §III-D; n >= 3
+    objectives evaluate via the box-decomposition EHVI plan node)."""
     space: SearchSpace
     profile_fn: ProfileFn
     objective: Optional[Objective] = None
@@ -127,7 +114,7 @@ class SearchRequest:
     bo_config: BOConfig = dataclasses.field(default_factory=BOConfig)
     seed: int = 0
     share_as: Optional[str] = None    # publish runs to the repo under this id
-    objectives: Optional[Sequence[Objective]] = None   # MOO: exactly 2
+    objectives: Optional[Sequence[Objective]] = None   # MOO: two or more
     n_mc: int = 64                    # MC-EHVI posterior draws (MOO only)
 
 
@@ -275,24 +262,38 @@ class SearchService:
     ``profile_timeout`` caps any blocking wait on the executor (seconds
     of wall clock, or virtual ticks on the fake); ``None`` waits until
     results land.
-    ``fuse_posteriors`` (default True) executes every grid posterior of
-    a step — targets, RGPE support stacks, MOO models — as one fused
-    ``batched_posterior_multi`` launch and uses the vectorised MC-EHVI;
-    False restores the per-ensemble posterior loop and the
-    per-candidate EHVI reference (the parity/benchmark baseline).
-    ``fuse_samples`` (default True) does the same for the step's sample
-    draws: all RGPE support-sample draws in one
-    ``batched_sample_multi`` launch per bucket and all MOO sessions'
-    EHVI sampling/staircases in vmapped launches; False restores the
-    per-job / per-session loops. Fusion is visible in ``stats``:
-    ``sample_batches``/``sample_queries`` and
-    ``ehvi_batches``/``ehvi_jobs``.
+    ``fuse_posteriors`` (default True) collects every grid posterior of
+    a step — targets, RGPE support stacks, MOO models — as
+    ``PosteriorQuery`` nodes executed by the planned fused launches and
+    uses the vectorised MC-EHVI; False restores the per-ensemble
+    posterior loop and the per-candidate EHVI reference (the
+    parity/benchmark baseline). ``fuse_samples`` (default True) does
+    the same for the step's sample draws: RGPE support draws as
+    ``SampleQuery``/``LooSampleQuery`` nodes and MOO EHVI
+    sampling/evaluation as ``PosteriorDrawQuery``/``EhviQuery`` nodes;
+    False restores the per-job / per-session loops. Fusion is visible
+    in ``stats``: per-kind ``posterior_*`` / ``sample_*`` / ``ehvi_*``
+    counters plus the aggregate ``plan_batches`` (fused launches) /
+    ``plan_queries`` (query nodes they carried) across every planned
+    round.
     """
+
+    # how each plan-node kind rolls up into the service stats (the
+    # sample-side kinds share one pair: they are all "draws the step
+    # needed", whether from a support stack, a LOO target, or posterior
+    # rows)
+    _STAT_KEYS = {"posterior": ("posterior_batches", "posterior_queries"),
+                  "sample": ("sample_batches", "sample_queries"),
+                  "loo": ("sample_batches", "sample_queries"),
+                  "draw": ("sample_batches", "sample_queries"),
+                  "ehvi": ("ehvi_batches", "ehvi_jobs")}
 
     def __init__(self, repository: Optional[Repository] = None, *,
                  slots: int = 8, executor=None, wait_mode: str = "any",
                  profile_timeout: Optional[float] = None,
-                 fuse_posteriors: bool = True, fuse_samples: bool = True):
+                 fuse_posteriors: bool = True, fuse_samples: bool = True,
+                 planner: Optional[StepPlanner] = None,
+                 plan_executor: Optional[PlanExecutor] = None):
         if wait_mode not in ("any", "all"):
             raise ValueError(f"unknown wait_mode {wait_mode!r}")
         self.repo = repository if repository is not None else Repository()
@@ -303,6 +304,11 @@ class SearchService:
         self.profile_timeout = profile_timeout
         self.fuse_posteriors = fuse_posteriors
         self.fuse_samples = fuse_samples
+        # ALL bucketing/padding policy lives in the planner; the service
+        # only emits queries and scatters results
+        self.planner = planner if planner is not None else StepPlanner()
+        self.plan_executor = (plan_executor if plan_executor is not None
+                              else PlanExecutor())
         self.queue: List[_Session] = []
         self.active: Dict[int, _Session] = {}
         self.done: List[SearchCompletion] = []
@@ -315,7 +321,7 @@ class SearchService:
                       "profile_waits": 0, "posterior_batches": 0,
                       "posterior_queries": 0, "sample_batches": 0,
                       "sample_queries": 0, "ehvi_batches": 0,
-                      "ehvi_jobs": 0}
+                      "ehvi_jobs": 0, "plan_batches": 0, "plan_queries": 0}
 
     # -- request lifecycle --------------------------------------------------
     def submit(self, req: SearchRequest) -> int:
@@ -325,14 +331,14 @@ class SearchService:
             if req.objective is not None:
                 raise ValueError("pass either objective or objectives, "
                                  "not both")
-            if len(req.objectives) != 2:
-                raise ValueError("multi-objective serving implements the "
-                                 "2-objective MC-EHVI path")
+            if len(req.objectives) < 2:
+                raise ValueError("multi-objective serving needs "
+                                 "objectives=[a, b, ...] (two or more)")
             if req.method == "augmented":
                 raise ValueError("MOO supports methods naive|karasu")
         elif req.objective is None:
             raise ValueError("SearchRequest needs an objective "
-                             "(or objectives=[a, b])")
+                             "(or objectives=[a, b, ...])")
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(_Session(rid, req))
@@ -445,10 +451,11 @@ class SearchService:
             self._absorb(self.executor.poll())
             return 0
 
-        posts = self._batched_posteriors([s for s, _ in ready])
-        # MC-EHVI for every MOO session of the step in fused launches
-        # (per-session loop when fuse_samples=False)
-        moo_acq = self._moo_acquisitions(
+        # the model math of the step: two planned rounds over the query
+        # layer (collect -> plan -> execute -> scatter); the second
+        # consumes the first's scattered posteriors
+        posts = self._posterior_phase([s for s, _ in ready])
+        moo_acq = self._moo_phase(
             [(s, rem) for s, rem in ready if s.is_moo], posts)
 
         advanced = 0
@@ -499,17 +506,29 @@ class SearchService:
             out.append((s, rem))
         return out
 
-    def _batched_posteriors(self, sessions: List[_Session]
-                            ) -> Dict[int, Dict[str, Dict]]:
-        """Fit every (session, measure) target GP in one vmapped batch
-        per (space, noise) group, score ALL karasu ensembles' RGPE
-        weights by one padded ranking-loss launch per kernel impl, then
-        execute the step's posterior QUERY PLAN: every grid posterior —
-        target stacks, every ensemble's support stack, MOO models, all
-        tenants — in one fused ``batched_posterior_multi`` call (one
-        padded launch per (q, d) bucket; a single-space cohort is
-        exactly one launch). With ``fuse_posteriors=False`` the plan
-        degrades to the historical per-group + per-ensemble loop."""
+    def _count_plan(self, counters: Dict[str, Dict[str, int]]) -> None:
+        """Roll one planned round's per-kind counters into the service
+        stats: the per-kind pairs (``_STAT_KEYS``) plus the aggregate
+        ``plan_batches``/``plan_queries``."""
+        for kind, c in counters.items():
+            bk, qk = self._STAT_KEYS[kind]
+            self.stats[bk] += c.get("launches", 0)
+            self.stats[qk] += c.get("queries", 0)
+            self.stats["plan_batches"] += c.get("launches", 0)
+            self.stats["plan_queries"] += c.get("queries", 0)
+
+    def _posterior_phase(self, sessions: List[_Session]
+                         ) -> Dict[int, Dict[str, Dict]]:
+        """COLLECT every grid-posterior query of the step — target
+        stacks (fit in one vmapped batch per (space, noise) group under
+        the planner's shape policy), every karasu ensemble's support
+        stack, MOO models, all tenants — PLAN them into fused buckets,
+        EXECUTE one launch per bucket, and SCATTER the rows back to
+        their owning (session, measure) slots. RGPE weights score
+        between collect and scatter (one padded ranking-loss launch per
+        kernel impl, its sample draws planned through the same layer).
+        With ``fuse_posteriors=False`` the phase degrades to the
+        historical per-group + per-ensemble loop."""
         groups: Dict[Tuple[Any, float], List[_Session]] = {}
         posts: Dict[int, Dict[str, Dict]] = {}
         for s in sessions:
@@ -520,11 +539,10 @@ class SearchService:
                 continue
             groups.setdefault((s.space_key, s.cfg.noise), []).append(s)
 
+        # -- collect ---------------------------------------------------------
         # (session, measure, bases, WeightJob) across ALL groups
         rgpe_jobs: List[Tuple[_Session, str, Any, WeightJob]] = []
-        # fused plan: (stack, grid) queries + how to absorb each result
-        plan_queries: List[Tuple[Any, Any]] = []
-        plan_sinks: List[Tuple[str, Any]] = []
+        queries: List[PosteriorQuery] = []
         for (_, noise), group in groups.items():
             xs, ys, owners = [], [], []
             for s in group:
@@ -534,19 +552,18 @@ class SearchService:
                     ys.append(np.array([o.measures[m]
                                         for o in s.observations]))
                     owners.append((s, m))
-            # pad the observation axis to multiples of 8 and the job axis
-            # to a power of two: async cohorts vary step to step, and
-            # stable shapes keep the vmapped fit from recompiling
-            # (padding never changes results)
-            tgts = fit_gp_batched(xs, ys, noise=noise, round_to=8,
-                                  m_round_pow2=True)
+            # async cohorts vary step to step; the planner's jit-shape
+            # policy keeps the vmapped fit from recompiling
+            tgts = self.planner.fit_targets(xs, ys, noise=noise)
             self.stats["fit_batches"] += 1
             self.stats["fit_jobs"] += len(owners)
 
             xq_all = group[0].xq_all
             if self.fuse_posteriors:
-                plan_queries.append((tgts, xq_all))
-                plan_sinks.append(("targets", (owners, tgts)))
+                queries.append(PosteriorQuery(
+                    tgts, xq_all,
+                    owner=lambda res, o=owners, t=tgts:
+                        _absorb_target_posts(posts, o, t, *res)))
             else:
                 mu_all, var_all = batched_posterior(tgts, xq_all)
                 _absorb_target_posts(posts, owners, tgts, mu_all, var_all)
@@ -555,8 +572,35 @@ class SearchService:
                 if s.req.method == "karasu":
                     rgpe_jobs.extend(self._rgpe_jobs(s, tgts, owners))
 
-        # ONE padded ranking-loss launch for every ensemble of the step
-        # (per kernel impl — sessions normally share one)
+        weights = self._score_weights(rgpe_jobs)
+
+        if not self.fuse_posteriors:
+            for i, (s, m, bases, _job) in enumerate(rgpe_jobs):
+                self._mix_rgpe(s, m, bases, weights[i], posts[s.rid])
+            return posts
+
+        # support stacks join the targets' queries; the executor fires
+        # owners in query order, so mixes overlay the target rows the
+        # earlier queries already absorbed into ``posts``
+        for i, (s, m, bases, _job) in enumerate(rgpe_jobs):
+            queries.append(PosteriorQuery(
+                bases, s.xq_all,
+                owner=lambda res, s=s, m=m, w=weights[i]:
+                    self._mix_into(posts, s, m, w, res)))
+        if not queries:
+            return posts
+
+        # -- plan / execute / scatter (owner callbacks) ----------------------
+        counters: Dict[str, Dict[str, int]] = {}
+        self.plan_executor.execute(self.planner.plan(queries),
+                                   counters=counters)
+        self._count_plan(counters)
+        return posts
+
+    def _score_weights(self, rgpe_jobs) -> Dict[int, Any]:
+        """ONE padded ranking-loss launch for every ensemble of the step
+        (per kernel impl — sessions normally share one); the jobs'
+        sample draws ride the shared planner."""
         weights: Dict[int, Any] = {}
         by_impl: Dict[str, List[int]] = {}
         for idx, (s, *_rest) in enumerate(rgpe_jobs):
@@ -565,44 +609,28 @@ class SearchService:
             sc: Dict[str, int] = {}
             ws = KarasuContext.score_ensembles(
                 [rgpe_jobs[i][3] for i in idxs], impl=impl,
-                fuse_samples=self.fuse_samples, sample_counters=sc)
+                fuse_samples=self.fuse_samples, sample_counters=sc,
+                planner=self.planner)
             self.stats["rgpe_batches"] += 1
             self.stats["rgpe_jobs"] += len(idxs)
             self.stats["sample_batches"] += sc.get("launches", 0)
             self.stats["sample_queries"] += sc.get("queries", 0)
+            self.stats["plan_batches"] += sc.get("launches", 0)
+            self.stats["plan_queries"] += sc.get("queries", 0)
             for i, w in zip(idxs, ws):
                 weights[i] = w
+        return weights
 
-        if not self.fuse_posteriors:
-            for i, (s, m, bases, _job) in enumerate(rgpe_jobs):
-                self._mix_rgpe(s, m, bases, weights[i], posts[s.rid])
-            return posts
-
-        # the fused launch: support stacks join the targets' plan; the
-        # target rows come back first, so mixes overlay assembled posts
-        for i, (s, m, bases, _job) in enumerate(rgpe_jobs):
-            plan_queries.append((bases, s.xq_all))
-            plan_sinks.append(("mix", (s, m, weights[i])))
-        if not plan_queries:
-            return posts
-        counters: Dict[str, int] = {}
-        res = batched_posterior_multi(plan_queries, impl="auto",
-                                      counters=counters)
-        self.stats["posterior_batches"] += counters.get("launches", 0)
-        self.stats["posterior_queries"] += counters.get("queries", 0)
-        for (kind, payload), (mu, var) in zip(plan_sinks, res):
-            if kind == "targets":
-                owners, tgts = payload
-                _absorb_target_posts(posts, owners, tgts, mu, var)
-            else:
-                s, m, w = payload
-                p = posts[s.rid][m]
-                mu_m, var_m = mix_weighted(mu, var, p["mu"], p["var"], w)
-                posts[s.rid][m] = {"mu": mu_m, "var": var_m,
-                                   "y_mean": p["y_mean"],
-                                   "y_std": p["y_std"],
-                                   "weights": np.asarray(w)}
-        return posts
+    @staticmethod
+    def _mix_into(posts, s: _Session, m: str, w, res) -> None:
+        """Owner callback of an RGPE support-stack query: overlay the
+        weighted mixture on the already-scattered target posterior."""
+        mu, var = res
+        p = posts[s.rid][m]
+        mu_m, var_m = mix_weighted(mu, var, p["mu"], p["var"], w)
+        posts[s.rid][m] = {"mu": mu_m, "var": var_m,
+                           "y_mean": p["y_mean"], "y_std": p["y_std"],
+                           "weights": np.asarray(w)}
 
     def _rgpe_jobs(self, s: _Session, tgts, owners
                    ) -> List[Tuple[_Session, str, Any, WeightJob]]:
@@ -648,108 +676,19 @@ class SearchService:
     def _moo_front_ref(s: _Session) -> Tuple[np.ndarray, np.ndarray]:
         """The (observed, ref) pair EHVI is computed against: feasible
         observations (all, if none feasible yet) and the 1.1-scaled
-        nadir — one rule shared by the fused and loop paths."""
-        a, b = s.objectives
+        nadir — one rule shared by the fused and loop paths, any
+        objective count."""
+        names = [o.name for o in s.objectives]
         feas = [o for o in s.observations
                 if _feasible(o, s.req.constraints)] or s.observations
-        observed = np.array([[o.measures[a.name], o.measures[b.name]]
-                             for o in feas])
+        observed = np.array([[o.measures[n] for n in names] for o in feas])
         return observed, observed.max(axis=0) * 1.1 + 1e-9
 
-    def _moo_acquisitions(self, moo_ready: List[Tuple[_Session, List[int]]],
-                          posts: Dict[int, Dict[str, Dict]]
-                          ) -> Dict[int, np.ndarray]:
-        """MC-EHVI x PoF for EVERY MOO session of the step (paper
-        §III-D), fed by the same fused grid posteriors as the
-        single-objective sessions. With ``fuse_samples`` all sessions'
-        posterior draws execute as one ``_moo_sample_launch`` per
-        (n_mc, n_rem) bucket and all staircase EHVI evaluations as one
-        vmapped ``mc_ehvi_multi`` launch per bucket — the sample query
-        plan's acquisition leg. ``fuse_samples=False`` restores the
-        per-session sampling + numpy EHVI loop (the parity/bench
-        baseline). Keys derive per (MOO_EHVI, iteration, objective), so
-        fusion order can never change a session's draws."""
-        if not moo_ready:
-            return {}
-        if not self.fuse_samples:
-            return {s.rid: self._moo_acquisition(s, posts[s.rid], rem)
-                    for s, rem in moo_ready}
-
-        samples = self._moo_samples_fused(moo_ready, posts)
-        ehvi_jobs = []
-        for s, _rem in moo_ready:
-            observed, ref = self._moo_front_ref(s)
-            sa, sb = samples[s.rid]
-            ehvi_jobs.append((sa, sb, observed, ref))
-        ec: Dict[str, int] = {}
-        ehvis = mc_ehvi_multi(ehvi_jobs, counters=ec)
-        self.stats["ehvi_batches"] += ec.get("launches", 0)
-        self.stats["ehvi_jobs"] += ec.get("queries", 0)
-
-        out: Dict[int, np.ndarray] = {}
-        for (s, rem), acq in zip(moo_ready, ehvis):
-            idx = np.asarray(rem)
-            acq = np.asarray(acq)
-            for c in s.req.constraints:
-                cp = posts[s.rid][c.name]
-                ub_std = (c.upper_bound - cp["y_mean"]) / cp["y_std"]
-                pof = np.asarray(probability_of_feasibility(
-                    cp["mu"][idx], cp["var"][idx], float(ub_std)))
-                acq = acq * pof
-            out[s.rid] = acq
-        return out
-
-    def _moo_samples_fused(self, moo_ready, posts
-                           ) -> Dict[int, List[np.ndarray]]:
-        """Raw-scale MC posterior draws for every (MOO session,
-        objective) lane of the step in ONE ``_moo_sample_launch`` per
-        (n_mc, n_rem) bucket."""
-        lanes = []          # (rid, oi, mu_row, var_row, y_std, y_mean, key)
-        for s, rem in moo_ready:
-            idx = np.asarray(rem)
-            it = len(s.observations)
-            for oi, obj in enumerate(s.objectives):
-                p = posts[s.rid][obj.name]
-                k = derive_key(s.key, KEY_PURPOSE_MOO_EHVI, it, oi)
-                lanes.append((s.rid, oi, p["mu"][idx], p["var"][idx],
-                              p["y_std"], p["y_mean"], k, s.req.n_mc))
-        out: Dict[int, List[Optional[np.ndarray]]] = {
-            s.rid: [None, None] for s, _ in moo_ready}
-        groups: Dict[Tuple[int, int], List[int]] = {}
-        for i, lane in enumerate(lanes):
-            groups.setdefault((lane[7], int(lane[2].shape[0])),
-                              []).append(i)
-        for (n_mc, _q), idxs in groups.items():
-            parts = [
-                jnp.stack([jnp.asarray(lanes[i][j]) for i in idxs])
-                for j in (6, 2, 3, 4, 5)]       # keys, mu, var, std, mean
-            draws = _moo_sample_launch(*parts, n_mc=n_mc)
-            for j, i in enumerate(idxs):
-                rid, oi = lanes[i][0], lanes[i][1]
-                out[rid][oi] = np.asarray(draws[j])
-            self.stats["sample_batches"] += 1
-            self.stats["sample_queries"] += len(idxs)
-        return out
-
-    def _moo_acquisition(self, s: _Session, post: Dict[str, Dict],
-                         rem: List[int]) -> np.ndarray:
-        """The per-session MC-EHVI x PoF loop (``fuse_samples=False``
-        only — the fused path batches all sessions' draws and staircases
-        instead). Same key schedule and front rule as the fused path, so
-        both produce the same acquisition up to float roundoff."""
-        idx = np.asarray(rem)
-        it = len(s.observations)
-        a, b = s.objectives
-        samples = []
-        for oi, obj in enumerate((a, b)):
-            p = post[obj.name]
-            k = derive_key(s.key, KEY_PURPOSE_MOO_EHVI, it, oi)
-            eps = jax.random.normal(k, (s.req.n_mc, len(rem)))
-            sm = p["mu"][idx][None] + eps * jnp.sqrt(p["var"][idx])[None]
-            samples.append(np.asarray(sm * p["y_std"] + p["y_mean"]))
-        observed, ref = self._moo_front_ref(s)
-        ehvi = mc_ehvi_batched if self.fuse_posteriors else mc_ehvi
-        acq = np.asarray(ehvi(samples[0], samples[1], observed, ref))
+    def _apply_pof(self, s: _Session, post: Dict[str, Dict],
+                   idx: np.ndarray, acq: np.ndarray) -> np.ndarray:
+        """Weight an EHVI row by every constraint's probability of
+        feasibility — the scatter step both MOO paths share."""
+        acq = np.asarray(acq)
         for c in s.req.constraints:
             cp = post[c.name]
             ub_std = (c.upper_bound - cp["y_mean"]) / cp["y_std"]
@@ -757,6 +696,91 @@ class SearchService:
                 cp["mu"][idx], cp["var"][idx], float(ub_std)))
             acq = acq * pof
         return acq
+
+    def _moo_phase(self, moo_ready: List[Tuple[_Session, List[int]]],
+                   posts: Dict[int, Dict[str, Dict]]
+                   ) -> Dict[int, np.ndarray]:
+        """MC-EHVI x PoF for EVERY MOO session of the step (paper
+        §III-D), fed by the scattered grid posteriors. Two further
+        planned rounds: COLLECT one ``PosteriorDrawQuery`` per (session,
+        objective) lane (fused draw launch per (n_mc, n_rem) bucket),
+        scatter the draws, then COLLECT one ``EhviQuery`` per session
+        (fused box-decomposition launch per (n_obj, S, q) bucket — 2-
+        and n>=3-objective sessions just land in different buckets) and
+        scatter the acquisition rows through the PoF weighting.
+        ``fuse_samples=False`` restores the per-session sampling + numpy
+        EHVI loop (the parity/bench baseline). Keys derive per
+        (MOO_EHVI, iteration, objective), so fusion order can never
+        change a session's draws."""
+        if not moo_ready:
+            return {}
+        if not self.fuse_samples:
+            return {s.rid: self._moo_acquisition(s, posts[s.rid], rem)
+                    for s, rem in moo_ready}
+
+        # -- collect / plan / execute / scatter: the draw round --------------
+        samples: Dict[int, List[Optional[np.ndarray]]] = {
+            s.rid: [None] * len(s.objectives) for s, _ in moo_ready}
+        draw_queries: List[PosteriorDrawQuery] = []
+        for s, rem in moo_ready:
+            idx = np.asarray(rem)
+            it = len(s.observations)
+            for oi, obj in enumerate(s.objectives):
+                p = posts[s.rid][obj.name]
+                k = derive_key(s.key, KEY_PURPOSE_MOO_EHVI, it, oi)
+                draw_queries.append(PosteriorDrawQuery(
+                    p["mu"][idx], p["var"][idx], p["y_mean"], p["y_std"],
+                    k, s.req.n_mc,
+                    owner=lambda d, rid=s.rid, oi=oi:
+                        samples[rid].__setitem__(oi, np.asarray(d))))
+        dc: Dict[str, Dict[str, int]] = {}
+        self.plan_executor.execute(self.planner.plan(draw_queries),
+                                   counters=dc)
+        self._count_plan(dc)
+
+        # -- collect / plan / execute / scatter: the EHVI round --------------
+        out: Dict[int, np.ndarray] = {}
+        ehvi_queries = []
+        for s, rem in moo_ready:
+            observed, ref = self._moo_front_ref(s)
+            ehvi_queries.append(EhviQuery(
+                tuple(samples[s.rid]), observed, ref,
+                owner=lambda acq, s=s, rem=rem:
+                    out.__setitem__(s.rid, self._apply_pof(
+                        s, posts[s.rid], np.asarray(rem), acq))))
+        ec: Dict[str, Dict[str, int]] = {}
+        self.plan_executor.execute(self.planner.plan(ehvi_queries),
+                                   counters=ec)
+        self._count_plan(ec)
+        return out
+
+    def _moo_acquisition(self, s: _Session, post: Dict[str, Dict],
+                         rem: List[int]) -> np.ndarray:
+        """The per-session MC-EHVI x PoF loop (``fuse_samples=False``
+        only — the fused path plans all sessions' draws and EHVI
+        evaluations instead). Same key schedule and front rule as the
+        fused path, so both produce the same acquisition up to float
+        roundoff. Two objectives keep the staircase references
+        (vectorised when ``fuse_posteriors``, the per-candidate
+        ``_hv_2d`` loop otherwise); n >= 3 use the recursive-sweep
+        ``mc_ehvi_nd`` oracle — the parity baseline of the fused box
+        decomposition."""
+        idx = np.asarray(rem)
+        it = len(s.observations)
+        samples = []
+        for oi, obj in enumerate(s.objectives):
+            p = post[obj.name]
+            k = derive_key(s.key, KEY_PURPOSE_MOO_EHVI, it, oi)
+            eps = jax.random.normal(k, (s.req.n_mc, len(rem)))
+            sm = p["mu"][idx][None] + eps * jnp.sqrt(p["var"][idx])[None]
+            samples.append(np.asarray(sm * p["y_std"] + p["y_mean"]))
+        observed, ref = self._moo_front_ref(s)
+        if len(s.objectives) == 2:
+            ehvi = mc_ehvi_batched if self.fuse_posteriors else mc_ehvi
+            acq = np.asarray(ehvi(samples[0], samples[1], observed, ref))
+        else:
+            acq = mc_ehvi_nd(samples, observed, ref)
+        return self._apply_pof(s, post, idx, acq)
 
     # -- driver -------------------------------------------------------------
     def run(self, max_steps: int = 10_000) -> List[SearchCompletion]:

@@ -2,8 +2,9 @@
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.acquisition import (_hv_2d, expected_improvement, mc_ehvi,
-                                    mc_ehvi_batched, mc_ehvi_multi,
+from repro.core.acquisition import (_hv_2d, expected_improvement, hv_nd,
+                                    mc_ehvi, mc_ehvi_batched, mc_ehvi_multi,
+                                    mc_ehvi_nd, nondominated_boxes,
                                     pareto_front,
                                     probability_of_feasibility)
 from repro.core import (BOConfig, Constraint, Objective, run_search_moo,
@@ -147,6 +148,92 @@ def test_mc_ehvi_multi_matches_per_session_batched():
         np.testing.assert_allclose(got, want, atol=1e-4 * scale)
 
 
+# -- n-objective hypervolume -------------------------------------------------
+
+
+def test_hv_nd_matches_hv_2d():
+    rng = np.random.default_rng(3)
+    for _ in range(5):
+        pts = rng.random((int(rng.integers(1, 10)), 2)) * 4.0
+        ref = pts.max(axis=0) * 1.1 + 1e-9
+        np.testing.assert_allclose(hv_nd(pts, ref),
+                                   _hv_2d(pareto_front(pts), ref),
+                                   atol=1e-12)
+    assert hv_nd(np.empty((0, 2)), np.array([4.0, 4.0])) == 0.0
+
+
+def test_hv_nd_3d_known_values():
+    ref = np.array([2.0, 2.0, 2.0])
+    # one point dominates a unit cube's complement box
+    assert hv_nd(np.array([[1.0, 1.0, 1.0]]), ref) == 1.0
+    # two boxes of volume 2 overlapping in a unit cube -> union 3
+    front = np.array([[0.0, 1.0, 1.0], [1.0, 0.0, 1.0]])
+    assert hv_nd(front, ref) == 3.0
+    # dominated and out-of-reference points contribute nothing
+    assert hv_nd(np.array([[1.0, 1.0, 1.0], [1.5, 1.5, 1.5],
+                           [3.0, 0.0, 0.0]]), ref) == 1.0
+
+
+def test_nondominated_boxes_tile_the_complement():
+    """The boxes are a disjoint cover of the non-dominated region: for
+    any floor point f below the front, the clipped box volumes must sum
+    to vol([f, ref]) - hv(front) — in 2 and 3 objectives."""
+    rng = np.random.default_rng(4)
+    for d in (2, 3):
+        for _ in range(4):
+            front = pareto_front(rng.random((int(rng.integers(1, 8)), d))
+                                 * 4.0)
+            ref = front.max(axis=0) * 1.1 + 1e-9
+            floor = front.min(axis=0) - rng.random(d)
+            los, his = nondominated_boxes(front, ref)
+            vols = np.prod(np.clip(np.minimum(his, ref)
+                                   - np.maximum(los, floor), 0.0, None),
+                           axis=1)
+            want = np.prod(ref - floor) - hv_nd(front, ref)
+            np.testing.assert_allclose(vols.sum(), want, rtol=1e-10)
+
+
+def test_mc_ehvi_nd_matches_2d_references():
+    rng = np.random.default_rng(5)
+    obs = rng.random((6, 2)) * 4.0
+    ref = obs.max(axis=0) * 1.1 + 1e-9
+    sa = rng.normal(2.0, 1.5, (8, 5))
+    sb = rng.normal(2.0, 1.5, (8, 5))
+    want = mc_ehvi(sa, sb, obs, ref)
+    np.testing.assert_allclose(mc_ehvi_nd([sa, sb], obs, ref), want,
+                               atol=1e-10)
+
+
+def test_mc_ehvi_multi_3obj_matches_nd_oracle():
+    """3-objective jobs (the n-ary job form) through the fused box
+    launch vs the recursive-sweep f64 oracle — mixed with a legacy
+    2-objective job in the same call."""
+    rng = np.random.default_rng(6)
+    fronts = [rng.random((int(rng.integers(2, 7)), 3)) * 4.0,
+              np.array([[1.0, 1.0, 1.0]]),
+              np.array([[1.0, 2.0, 3.0], [1.0, 2.0, 3.0]]),   # dups
+              np.empty((0, 3))]
+    jobs, oracle = [], []
+    for obs in fronts:
+        ref = (obs.max(axis=0) * 1.1 + 1e-9 if len(obs)
+               else np.array([4.0, 4.0, 4.0]))
+        samples = tuple(rng.normal(2.0, 1.5, (8, 7)) for _ in range(3))
+        jobs.append((samples, obs, ref))
+        oracle.append(mc_ehvi_nd(samples, obs, ref))
+    # a legacy 4-tuple 2-objective job joins the same call (own bucket)
+    obs2 = rng.random((4, 2)) * 4.0
+    ref2 = obs2.max(axis=0) * 1.1 + 1e-9
+    sa, sb = rng.normal(2, 1.5, (8, 7)), rng.normal(2, 1.5, (8, 7))
+    jobs.append((sa, sb, obs2, ref2))
+    oracle.append(mc_ehvi_batched(sa, sb, obs2, ref2))
+    counters = {}
+    outs = mc_ehvi_multi(jobs, counters=counters)
+    assert counters["launches"] == 2 and counters["queries"] == 5
+    for got, want in zip(outs, oracle):
+        scale = max(1.0, float(np.abs(want).max()))
+        np.testing.assert_allclose(got, want, atol=1e-4 * scale)
+
+
 def test_mc_ehvi_prefers_dominating_point():
     obs = np.array([[2.0, 2.0]])
     ref = np.array([4.0, 4.0])
@@ -172,3 +259,22 @@ def test_moo_search_runs_and_finds_pareto():
     front = pareto_of_result(r, [Objective("cost"), Objective("energy")],
                              [Constraint("runtime", target_rt)])
     assert len(front) >= 1
+
+
+def test_moo_search_three_objectives_runs_and_finds_pareto():
+    """n=3 objectives ride the box-decomposition EHVI plan node end to
+    end through run_search_moo (which serves via SearchService)."""
+    emu = make_emulator()
+    space = scout_search_space()
+    wid = emu.workload_ids()[8]
+    objectives = [Objective("cost"), Objective("energy"),
+                  Objective("runtime")]
+    r = run_search_moo(space, lambda c: emu.run(wid, c, rng=None),
+                       objectives, method="naive",
+                       bo_config=BOConfig(max_iters=6), seed=1, n_mc=8)
+    assert len(r.observations) == 6
+    assert r.meta["moo"] is True
+    assert r.meta["objectives"] == ["cost", "energy", "runtime"]
+    front = r.meta["pareto_front"]
+    assert front.ndim == 2 and front.shape[1] == 3 and len(front) >= 1
+    np.testing.assert_array_equal(front, pareto_of_result(r, objectives))

@@ -1,0 +1,275 @@
+"""The query-plan layer (core/plan.py): golden bucketing (query set ->
+exact bucket keys / pad shapes), mixed-kind execution parity against the
+per-query references, scatter-to-owner semantics, and the plan-stats
+invariants on a mixed SO + MOO + 3-objective service cohort."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (BOConfig, Constraint, Objective, Repository,
+                        scout_search_space)
+from repro.core.acquisition import mc_ehvi_batched, mc_ehvi_nd
+from repro.core.gp import (batched_posterior, batched_sample, fit_gp,
+                           fit_gp_batched, gp_loo_samples)
+from repro.core.plan import (EhviQuery, LooSampleQuery, PlanExecutor,
+                             PosteriorDrawQuery, PosteriorQuery,
+                             SampleQuery, StepPlanner)
+from repro.serve.search_service import SearchRequest, SearchService
+from repro.simdata import make_emulator
+
+TOL = 1e-4
+
+
+def _stack(rng, sizes, d=3):
+    xs = [rng.random((n, d)) for n in sizes]
+    return fit_gp_batched(xs, [x[:, 0] + np.sin(3 * x[:, 1]) for x in xs])
+
+
+def _by_kind(plan):
+    return {(b.kind, b.key): b for b in plan.buckets}
+
+
+def test_golden_bucketing_posterior():
+    """(q, d) bucket keys; observation axis rounds to 8, fused lane axis
+    to a power of two — asserted from the PLAN alone, nothing runs."""
+    rng = np.random.default_rng(0)
+    st_a = _stack(rng, (5, 9))          # m=2, n_max=9
+    st_b = _stack(rng, (4,))            # m=1, n_max=4
+    g25, g13 = rng.random((25, 3)), rng.random((13, 3))
+    plan = StepPlanner().plan([
+        PosteriorQuery(st_a, g25), PosteriorQuery(st_b, g25),
+        PosteriorQuery(st_a, g13)])
+    assert plan.stats() == {"batches": 2, "queries": 3}
+    b = _by_kind(plan)
+    big = b[("posterior", (25, 3))]
+    assert big.indices == (0, 1)
+    assert big.pads == {"n_pad": 16, "m_pad": 4, "lanes": 3}
+    small = b[("posterior", (13, 3))]
+    assert small.indices == (2,)
+    assert small.pads == {"n_pad": 16, "m_pad": 2, "lanes": 2}
+
+
+def test_golden_bucketing_sample_loo_ehvi_draw():
+    """(S, q, d) / (S, n) / (n_obj, S, q) / (S, q) bucket keys with the
+    grid axis rounding to 8 and EHVI boxes to a power of two."""
+    rng = np.random.default_rng(1)
+    st = _stack(rng, (5, 9))
+    xt = rng.random((6, 3))
+    keys = jax.random.split(jax.random.PRNGKey(0), 2)
+    gp = fit_gp(rng.random((6, 2)), rng.random(6))
+    obs2 = np.array([[1.0, 3.0], [2.0, 2.0], [3.0, 1.0]])
+    sa = rng.normal(2.0, 1.0, (16, 9))
+    obs3 = np.array([[1.0, 2.0, 3.0], [3.0, 2.0, 1.0]])
+    planner = StepPlanner()
+    plan = planner.plan([
+        SampleQuery(st, xt, keys, 32),
+        LooSampleQuery(gp, jax.random.PRNGKey(1), 32),
+        EhviQuery((sa, sa + 1.0), obs2, np.array([4.0, 4.0])),
+        EhviQuery((sa, sa, sa), obs3, np.array([4.0, 4.0, 4.0])),
+        PosteriorDrawQuery(np.zeros(9), np.ones(9), 0.0, 1.0,
+                           jax.random.PRNGKey(2), 16),
+    ])
+    assert plan.stats() == {"batches": 5, "queries": 5}
+    b = _by_kind(plan)
+    assert b[("sample", (32, 6, 3))].pads == \
+        {"n_pad": 16, "q_pad": 8, "m_pad": 2, "lanes": 2}
+    assert b[("loo", (32, 6))].pads == {"n_pad": 8, "lanes": 1}
+    # 3 staircase points -> 4 segments (already a power of two)
+    assert b[("ehvi", (2, 16, 9))].pads == \
+        {"k_pad": 4, "q_pad": 16, "l_pad": 1, "lanes": 1}
+    # 2 front points, 3 objectives: the coordinate grid has 3*2*3 = 18
+    # cells, of which 3 are dominated -> 15 boxes, padded up to 16
+    e3 = b[("ehvi", (3, 16, 9))]
+    assert e3.pads["k_pad"] == 16 and e3.pads["q_pad"] == 16
+    # draw queries deliberately stay exact (not jitted)
+    assert b[("draw", (16, 9))].pads == {"lanes": 1}
+
+
+def test_policy_knobs_live_in_planner():
+    """Overriding the planner's policy changes the pads — no other
+    module needs touching (the acceptance criterion: one home for
+    shape policy)."""
+    rng = np.random.default_rng(2)
+    st = _stack(rng, (5, 9))
+    loose = StepPlanner(obs_round_to=1, m_round_pow2=False)
+    plan = loose.plan([PosteriorQuery(st, rng.random((25, 3)))])
+    assert plan.buckets[0].pads == {"n_pad": 9, "m_pad": 2, "lanes": 2}
+
+
+def test_mixed_kind_plan_executes_and_scatters_in_order():
+    """One plan carrying every node kind: per-query results match the
+    per-query references, and callable owners fire in query order."""
+    rng = np.random.default_rng(3)
+    st = _stack(rng, (5, 9))
+    grid = rng.random((12, 3))
+    xt = rng.random((6, 3))
+    skeys = jax.random.split(jax.random.PRNGKey(4), 2)
+    gp = fit_gp(rng.random((7, 2)), rng.random(7))
+    lkey = jax.random.PRNGKey(5)
+    dkey = jax.random.PRNGKey(6)
+    mu_row, var_row = rng.random(12), rng.random(12) + 0.1
+    obs = rng.random((5, 2)) * 3.0
+    ref = obs.max(axis=0) * 1.1 + 1e-9
+    sa, sb = rng.normal(2, 1, (16, 12)), rng.normal(2, 1, (16, 12))
+
+    fired = []
+    queries = [
+        PosteriorQuery(st, grid, owner=lambda r: fired.append("post")),
+        SampleQuery(st, xt, skeys, 32,
+                    owner=lambda r: fired.append("sample")),
+        LooSampleQuery(gp, lkey, 32, owner=lambda r: fired.append("loo")),
+        PosteriorDrawQuery(mu_row, var_row, 2.0, 3.0, dkey, 16,
+                           owner=lambda r: fired.append("draw")),
+        EhviQuery((sa, sb), obs, ref, owner=lambda r: fired.append("ehvi")),
+    ]
+    planner = StepPlanner()
+    res = PlanExecutor().execute(planner.plan(queries), counters=(c := {}))
+    assert fired == ["post", "sample", "loo", "draw", "ehvi"]
+    assert set(c) == {"posterior", "sample", "loo", "draw", "ehvi"}
+    assert all(v["launches"] == 1 and v["queries"] == 1
+               for v in c.values())
+
+    mu, var = res[0]
+    mu0, var0 = batched_posterior(st, grid)
+    np.testing.assert_allclose(np.asarray(mu), np.asarray(mu0), atol=TOL)
+    np.testing.assert_allclose(np.asarray(var), np.asarray(var0), atol=TOL)
+    np.testing.assert_allclose(np.asarray(res[1]),
+                               np.asarray(batched_sample(st, xt, skeys, 32)),
+                               atol=TOL)
+    np.testing.assert_allclose(np.asarray(res[2]),
+                               np.asarray(gp_loo_samples(gp, lkey, 32)),
+                               atol=TOL)
+    eps = jax.random.normal(dkey, (16, 12))
+    want_draw = (mu_row[None] + np.asarray(eps) * np.sqrt(var_row)[None]) \
+        * 3.0 + 2.0
+    np.testing.assert_allclose(np.asarray(res[3]), want_draw, atol=TOL)
+    want_ehvi = mc_ehvi_batched(sa, sb, obs, ref)
+    scale = max(1.0, float(np.abs(want_ehvi).max()))
+    np.testing.assert_allclose(res[4], want_ehvi, atol=TOL * scale)
+
+
+def test_ehvi_node_three_objectives_matches_oracle():
+    """The fused box-decomposition EHVI node vs the recursive-sweep f64
+    oracle, n=3 — including an empty and a single-point front sharing
+    one launch."""
+    rng = np.random.default_rng(7)
+    fronts = [rng.random((5, 3)) * 4.0,
+              np.array([[1.0, 1.0, 1.0]]),
+              np.empty((0, 3))]
+    queries, oracles = [], []
+    for obs in fronts:
+        ref = (obs.max(axis=0) * 1.1 + 1e-9 if len(obs)
+               else np.array([4.0, 4.0, 4.0]))
+        samples = tuple(rng.normal(2.0, 1.5, (8, 6)) for _ in range(3))
+        queries.append(EhviQuery(samples, obs, ref))
+        oracles.append(mc_ehvi_nd(samples, obs, ref))
+    plan = StepPlanner().plan(queries)
+    assert plan.stats() == {"batches": 1, "queries": 3}
+    res = PlanExecutor().execute(plan)
+    for got, want in zip(res, oracles):
+        scale = max(1.0, float(np.abs(want).max()))
+        np.testing.assert_allclose(got, want, atol=TOL * scale)
+
+
+def test_ehvi_deep_front_chunks_box_axis_and_matches_oracle():
+    """A deep 3-objective front whose decomposition exceeds one launch
+    block: the planner pads the box axis to a chunk multiple (not a
+    power of two) and the scanned launch still matches the oracle."""
+    from repro.core.acquisition import EHVI_BOX_CHUNK
+    rng = np.random.default_rng(9)
+    # anti-correlated points are mutually non-dominated -> deep front
+    a = np.linspace(0.0, 1.0, 12)
+    obs = np.column_stack([a, 1.0 - a, (a * 7.3) % 1.0]) * 4.0
+    ref = obs.max(axis=0) * 1.1 + 1e-9
+    samples = tuple(rng.normal(2.0, 1.5, (4, 3)) for _ in range(3))
+    plan = StepPlanner().plan([EhviQuery(samples, obs, ref)])
+    k_pad = plan.buckets[0].pads["k_pad"]
+    assert k_pad > EHVI_BOX_CHUNK and k_pad % EHVI_BOX_CHUNK == 0
+    (got,) = PlanExecutor().execute(plan)
+    want = mc_ehvi_nd(samples, obs, ref)
+    scale = max(1.0, float(np.abs(want).max()))
+    np.testing.assert_allclose(got, want, atol=TOL * scale)
+
+
+def test_ehvi_observed_shape_mismatch_rejected():
+    """observed columns must match the objective count — a mismatch is
+    an immediate planning error, not a silently garbled front."""
+    rng = np.random.default_rng(10)
+    sa = rng.normal(2.0, 1.0, (4, 3))
+    with pytest.raises(ValueError, match="observed"):
+        StepPlanner().plan([EhviQuery((sa, sa, sa),
+                                      rng.random((3, 2)) * 4.0,
+                                      np.array([4.0, 4.0, 4.0]))])
+
+
+# -- plan stats on a live mixed cohort ---------------------------------------
+
+
+EMU = make_emulator()
+SPACE = scout_search_space()
+WID = EMU.workload_ids()[6]
+
+
+def _support_repo(wid=WID, users=2, runs=12, seed=99):
+    repo = Repository()
+    rng = np.random.default_rng(seed)
+    for u in range(users):
+        for ci in rng.choice(len(SPACE), runs, replace=False):
+            repo.add_run(EMU.make_record(f"anon-{u}", wid,
+                                         SPACE.configs[ci], rng))
+    return repo
+
+
+def test_plan_stats_invariants_mixed_so_moo_3obj_cohort():
+    """plan_batches <= plan_queries always, and the aggregate counters
+    are exactly the sum of the per-kind ones — on a cohort mixing
+    single-objective, 2-objective, and 3-objective karasu tenants."""
+    svc = SearchService(_support_repo(), slots=3)
+    cons = [Constraint("runtime", EMU.runtime_target(WID, 50))]
+    cfg = BOConfig(max_iters=5)
+    svc.submit(SearchRequest(SPACE, lambda c: EMU.run(WID, c, rng=None),
+                             Objective("cost"), cons, method="karasu",
+                             bo_config=cfg, seed=0))
+    svc.submit(SearchRequest(
+        SPACE, lambda c: EMU.run(WID, c, rng=None), None, cons,
+        method="karasu", bo_config=cfg, seed=1,
+        objectives=[Objective("cost"), Objective("energy")], n_mc=8))
+    svc.submit(SearchRequest(
+        SPACE, lambda c: EMU.run(WID, c, rng=None), None, cons,
+        method="karasu", bo_config=cfg, seed=2,
+        objectives=[Objective("cost"), Objective("energy"),
+                    Objective("runtime")], n_mc=8))
+    done = {c.rid: c.result for c in svc.run()}
+    assert sorted(done) == [0, 1, 2]
+    # the 3-objective session produced a (k, 3) front
+    front = done[2].meta["pareto_front"]
+    assert front.ndim == 2 and front.shape[1] == 3 and len(front) >= 1
+
+    s = svc.stats
+    assert s["plan_batches"] >= 1
+    assert s["plan_batches"] <= s["plan_queries"]
+    assert s["plan_batches"] == (s["posterior_batches"]
+                                 + s["sample_batches"] + s["ehvi_batches"])
+    assert s["plan_queries"] == (s["posterior_queries"]
+                                 + s["sample_queries"] + s["ehvi_jobs"])
+    # fusion engaged on every leg
+    assert s["posterior_batches"] < s["posterior_queries"]
+    assert s["sample_batches"] < s["sample_queries"]
+    assert s["ehvi_batches"] <= s["ehvi_jobs"]
+
+
+def test_plan_stats_zero_without_fusion():
+    """The loop baselines never enter the plan: all plan counters stay
+    zero with fuse_posteriors=False, fuse_samples=False."""
+    svc = SearchService(_support_repo(), slots=1, fuse_posteriors=False,
+                        fuse_samples=False)
+    svc.submit(SearchRequest(
+        SPACE, lambda c: EMU.run(WID, c, rng=None), None,
+        [Constraint("runtime", EMU.runtime_target(WID, 50))],
+        method="karasu", bo_config=BOConfig(max_iters=4), seed=0,
+        objectives=[Objective("cost"), Objective("energy"),
+                    Objective("runtime")], n_mc=8))
+    (c,) = svc.run()
+    assert len(c.result.observations) == 4
+    assert svc.stats["plan_batches"] == 0
+    assert svc.stats["plan_queries"] == 0

@@ -102,3 +102,24 @@ def test_store_handles_unusable_workloads():
     assert bgp.m == 2
     none_bgp, none_ids = store.get_stacked(["c", "missing"], "cost")
     assert none_bgp is None and none_ids == []
+
+
+def test_stack_cache_lru_bound_and_evictions():
+    """The version-keyed stack cache is LRU-bounded: beyond max_entries
+    the least recently USED entry is evicted (counted), recently-hit
+    entries survive, and an evicted set is simply rebuilt on demand."""
+    repo = _filled_repo()
+    store = SupportModelStore(repo, SPACE, max_entries=2)
+    s_ab, _ = store.get_stacked(["a", "b"], "cost")
+    s_a, _ = store.get_stacked(["a"], "cost")
+    assert store.evictions == 0
+    # touch ("a","b") so ("a",) becomes the LRU victim of the next insert
+    assert store.get_stacked(["a", "b"], "cost")[0] is s_ab
+    store.get_stacked(["b"], "cost")
+    assert store.evictions == 1
+    assert len(store._stacked) == 2
+    assert store.get_stacked(["a", "b"], "cost")[0] is s_ab   # survived
+    # the evicted ("a",) set rebuilds transparently (a fresh stack)
+    s_a2, ids = store.get_stacked(["a"], "cost")
+    assert ids == ["a"] and s_a2 is not s_a
+    assert store.evictions == 2                    # its insert evicted again

@@ -8,8 +8,9 @@ import pytest
 
 from repro.core import (BOConfig, Constraint, Objective, Repository,
                         run_search, run_search_moo, scout_search_space)
-from repro.serve.profile_executor import (FakeProfileExecutor, ProfileJob,
-                                          SyncProfileExecutor,
+from repro.serve.profile_executor import (FakeProfileExecutor,
+                                          ProcessPoolProfileExecutor,
+                                          ProfileJob, SyncProfileExecutor,
                                           ThreadPoolProfileExecutor)
 from repro.serve.search_service import (SearchRequest, SearchService)
 from repro.simdata import make_emulator
@@ -352,7 +353,7 @@ def test_service_rejects_malformed_moo_requests():
             SPACE, lambda c: EMU.run(WID, c), Objective("cost"),
             objectives=[Objective("cost"), Objective("energy")]))
     # wrong arity
-    with pytest.raises(ValueError, match="2-objective"):
+    with pytest.raises(ValueError, match="two or more"):
         svc.submit(SearchRequest(SPACE, lambda c: EMU.run(WID, c), None,
                                  objectives=[Objective("cost")]))
     # neither
@@ -403,8 +404,8 @@ def test_service_fused_posteriors_match_per_session_loop():
     for a, b in zip(s_f, s_l):
         assert [o.config for o in a.observations] == \
             [o.config for o in b.observations]
-    posts_f = fused._batched_posteriors(s_f)
-    posts_l = loop._batched_posteriors(s_l)
+    posts_f = fused._posterior_phase(s_f)
+    posts_l = loop._posterior_phase(s_l)
     assert fused.stats["posterior_batches"] >= 1
     assert loop.stats["posterior_batches"] == 0
     for a in s_f:
@@ -497,8 +498,8 @@ def test_service_fused_samples_match_loop():
     for a, b in zip(s_f, s_l):
         assert [o.config for o in a.observations] == \
             [o.config for o in b.observations]
-    posts_f = fused._batched_posteriors(s_f)
-    posts_l = loop._batched_posteriors(s_l)
+    posts_f = fused._posterior_phase(s_f)
+    posts_l = loop._posterior_phase(s_l)
     assert fused.stats["sample_batches"] >= 1
     assert loop.stats["sample_batches"] == 0
     for a in s_f:
@@ -513,10 +514,150 @@ def test_service_fused_samples_match_loop():
     moo_f = next(s for s in s_f if s.is_moo)
     moo_l = next(s for s in s_l if s.is_moo)
     rem = moo_f.remaining()
-    acq_f = fused._moo_acquisitions([(moo_f, rem)], posts_f)[moo_f.rid]
-    acq_l = loop._moo_acquisitions([(moo_l, rem)], posts_l)[moo_l.rid]
+    acq_f = fused._moo_phase([(moo_f, rem)], posts_f)[moo_f.rid]
+    acq_l = loop._moo_phase([(moo_l, rem)], posts_l)[moo_l.rid]
     scale = max(1.0, float(np.abs(acq_l).max()))
     np.testing.assert_allclose(acq_f, acq_l, atol=1e-4 * scale)
+
+
+def test_service_three_objective_session_end_to_end():
+    """Acceptance: a 3-objective session runs end to end through the
+    service — (k, 3) Pareto front, EHVI fused-vs-oracle parity <= 1e-4
+    (the loop baseline for n >= 3 IS the recursive-sweep f64 oracle
+    mc_ehvi_nd), and bit-for-bit determinism across runs."""
+    def _req3(seed, **kw):
+        return SearchRequest(
+            SPACE, lambda c: EMU.run(WID, c, rng=None), None,
+            [Constraint("runtime", RT)], method="karasu",
+            bo_config=BOConfig(max_iters=5), seed=seed,
+            objectives=[Objective("cost"), Objective("energy"),
+                        Objective("runtime")], n_mc=8, **kw)
+
+    def build(fuse):
+        svc = SearchService(_support_repo(), slots=2, fuse_samples=fuse)
+        svc.submit(_req3(0))
+        svc.submit(_request(1, method="karasu"))
+        svc.step()
+        return svc
+
+    fused, loop = build(True), build(False)
+    s_f = [fused.active[r] for r in sorted(fused.active)]
+    s_l = [loop.active[r] for r in sorted(loop.active)]
+    for a, b in zip(s_f, s_l):
+        assert [o.config for o in a.observations] == \
+            [o.config for o in b.observations]
+    posts_f = fused._posterior_phase(s_f)
+    posts_l = loop._posterior_phase(s_l)
+    moo_f = next(s for s in s_f if s.is_moo)
+    moo_l = next(s for s in s_l if s.is_moo)
+    rem = moo_f.remaining()
+    acq_f = fused._moo_phase([(moo_f, rem)], posts_f)[moo_f.rid]
+    acq_l = loop._moo_phase([(moo_l, rem)], posts_l)[moo_l.rid]
+    scale = max(1.0, float(np.abs(acq_l).max()))
+    np.testing.assert_allclose(acq_f, acq_l, atol=1e-4 * scale)
+    assert fused.stats["ehvi_batches"] >= 1
+
+    # end to end: completes, carries a 3-column front, deterministic
+    def run_once():
+        svc = SearchService(_support_repo(), slots=2)
+        svc.submit(_req3(0))
+        svc.submit(_request(1, method="karasu", max_iters=5))
+        return {c.rid: c.result for c in svc.run()}
+
+    a, b = run_once(), run_once()
+    assert sorted(a) == [0, 1]
+    front = a[0].meta["pareto_front"]
+    assert front.ndim == 2 and front.shape[1] == 3 and len(front) >= 1
+    for rid in a:
+        assert (_result_fingerprint(a[rid])
+                == _result_fingerprint(b[rid])), rid
+    np.testing.assert_array_equal(front, b[0].meta["pareto_front"])
+
+
+# -- process-pool profiling -------------------------------------------------
+
+# forkserver: workers descend from a clean exec'd server process, not a
+# fork of this (JAX-threaded) one — no inherited locks to deadlock on.
+# Workers are long-lived, so the one-time import cost amortises.
+import multiprocessing
+
+MP_CTX = multiprocessing.get_context("forkserver")
+
+
+def _pp_profile(config):
+    """Module-level (picklable) noise-free profile fn for the process
+    pool: workers resolve it by qualified name."""
+    return EMU.run(WID, config, rng=None)
+
+
+def _pp_boom(config):
+    raise RuntimeError("cluster fell over")
+
+
+def test_process_pool_executor_matches_sync_service():
+    """Profiling on a process pool must complete every tenant with the
+    exact per-session trajectories of the synchronous service — jobs,
+    outcomes, and the profile_fn all cross the pickle boundary."""
+    n = 2
+    exe = ProcessPoolProfileExecutor(max_workers=n, mp_context=MP_CTX)
+    svc = SearchService(Repository(), slots=n, executor=exe)
+    for s in range(n):
+        svc.submit(SearchRequest(SPACE, _pp_profile, Objective("cost"),
+                                 [Constraint("runtime", RT)],
+                                 bo_config=BOConfig(max_iters=4), seed=s))
+    done = {c.rid: c.result for c in svc.run()}
+    svc.close()
+    assert sorted(done) == list(range(n))
+
+    sync_svc = SearchService(Repository(), slots=n)
+    for s in range(n):
+        sync_svc.submit(SearchRequest(SPACE, _pp_profile,
+                                      Objective("cost"),
+                                      [Constraint("runtime", RT)],
+                                      bo_config=BOConfig(max_iters=4),
+                                      seed=s))
+    sync_done = {c.rid: c.result for c in sync_svc.run()}
+    for rid in done:
+        assert (_result_fingerprint(done[rid])
+                == _result_fingerprint(sync_done[rid])), rid
+
+
+def test_process_pool_executor_error_propagates():
+    """A profiler exception in the worker process is pickled back onto
+    the outcome and re-raised by the service, which settles (not
+    wedges) the session — same contract as every other backend."""
+    exe = ProcessPoolProfileExecutor(max_workers=1, mp_context=MP_CTX)
+    svc = SearchService(Repository(), slots=1, executor=exe)
+    svc.submit(SearchRequest(SPACE, _pp_boom, Objective("cost"), [],
+                             bo_config=BOConfig(max_iters=4), seed=0))
+    with pytest.raises(RuntimeError, match="cluster fell over"):
+        svc.run()
+    # the remaining init runs are still in flight (async backend): each
+    # raises as it lands, and the session settles once all are absorbed
+    for _ in range(10):
+        if not (svc.executor.pending()
+                or any(s.inflight for s in svc.active.values())):
+            break
+        with pytest.raises(RuntimeError, match="cluster fell over"):
+            svc.step()
+    assert all(s.inflight == 0 for s in svc.active.values())
+    svc.close()
+
+
+def test_process_pool_executor_drain_and_order():
+    """poll/collect/drain semantics on the process pool: outcomes come
+    back in submission order among the completed set."""
+    exe = ProcessPoolProfileExecutor(max_workers=2, mp_context=MP_CTX)
+    try:
+        for ci in range(3):
+            exe.submit(ProfileJob(0, ci, SPACE.configs[ci], "init", ci),
+                       _pp_profile)
+        outs = exe.drain(timeout=60)
+        assert exe.pending() == 0
+        assert [o.job.seq for o in outs] == [0, 1, 2]
+        assert all(o.error is None and o.measures for o in outs)
+    finally:
+        exe.shutdown()
 
 
 def test_prng_key_schedule_collision_free():
