@@ -39,13 +39,25 @@ reference):
 
 With ``--smoke`` it runs a tiny mixed cohort (4 tenants: naive SO,
 karasu SO, karasu 2-objective, karasu 3-objective; 4 iterations) end to
-end, asserts completion AND that the query-plan layer actually engaged
-(``plan_batches <= plan_queries`` with fusion on every leg:
+end — twice: the first pass compiles every launch shape, the repeat
+must hit the compile-once steady state (``plan_compile_misses == 0``)
+— and asserts completion AND that the query-plan layer actually
+engaged (``plan_batches <= plan_queries`` with fusion on every leg:
 posterior/sample/EHVI) — the CPU CI hook that fails fast when the
 serving path regresses, instead of waiting for the weekly slow job.
 ``REPRO_BENCH_STATS_JSON=path`` (or ``--stats-json path``) additionally
 dumps the service stats as JSON, which CI uploads as an artifact so
 fusion regressions are diagnosable from the run page.
+
+With ``--steady-state`` it measures the compile-once serving claim
+directly: per-step latency of a churning mixed cohort served cold vs
+after ``SearchService.precompile`` (asserting zero tracked recompiles
+post-precompile), the fused posterior+EI bucket kernel vs the vmapped
+XLA chain, and the fused launch's static roofline numbers:
+  search_service_steady_cold_step / _warm_step  — us per service step
+  search_service_precompile                     — one-time warmup cost
+  search_service_steady_misses                  — must be 0
+  fused_posterior_launch / _vs_vmapped_speedup / _roofline_intensity
 """
 from __future__ import annotations
 
@@ -257,15 +269,10 @@ def moo_mixed() -> None:
            f"{sloop_s / fused_s:.2f}")
 
 
-def smoke() -> None:
-    """CI smoke: a 4-tenant mixed cohort (naive SO, karasu SO, karasu
-    2-objective, karasu 3-objective) over 4 iterations must complete,
-    route its model math through the query-plan layer, and produce
-    (k, 2) and (k, 3) Pareto fronts — fast enough for the tier-1 CPU
-    job. Stats are dumped as JSON when requested (CI artifact)."""
-    sp, tenants, repo, targets = _setup(3)
-    max_iters = 4
-    svc = SearchService(_fresh_repo(repo), slots=4)
+def _smoke_cohort(sp, tenants, repo, targets, max_iters):
+    """The 4-tenant mixed cohort smoke() measures, as a reusable run:
+    returns (service, completions, elapsed seconds)."""
+    svc = SearchService(repo, slots=4)
     wid0, wid1, wid2 = tenants[:3]
     svc.submit(SearchRequest(
         sp, C.profile_fn(wid0, 0), Objective("cost"),
@@ -288,8 +295,31 @@ def smoke() -> None:
                     Objective("runtime")], n_mc=8))
     t0 = time.time()
     done = {c.rid: c.result for c in svc.run()}
-    dt = time.time() - t0
+    return svc, done, time.time() - t0
+
+
+def smoke() -> None:
+    """CI smoke: a 4-tenant mixed cohort (naive SO, karasu SO, karasu
+    2-objective, karasu 3-objective) over 4 iterations must complete,
+    route its model math through the query-plan layer, and produce
+    (k, 2) and (k, 3) Pareto fronts — fast enough for the tier-1 CPU
+    job. The cohort then runs a SECOND time against warm jit caches:
+    the repeat must hit the compile-once steady state
+    (``plan_compile_misses == 0``), which is the invariant CI asserts
+    from the dumped stats JSON artifact."""
+    sp, tenants, repo, targets = _setup(3)
+    max_iters = 4
+    cold_svc, done, _ = _smoke_cohort(sp, tenants, _fresh_repo(repo),
+                                      targets, max_iters)
+    svc, done2, dt = _smoke_cohort(sp, tenants, _fresh_repo(repo),
+                                   targets, max_iters)
     assert sorted(done) == [0, 1, 2, 3], done
+    assert sorted(done2) == [0, 1, 2, 3], done2
+    done = done2
+    # every tracked launch shape compiled in the first run; the repeat
+    # cohort re-enters only precompiled buckets
+    assert svc.stats["plan_compile_misses"] == 0, \
+        (svc.stats["plan_compile_misses"], cold_svc.stats)
     for res in done.values():
         assert len(res.observations) == max_iters
     assert done[2].meta["moo"] is True
@@ -319,13 +349,164 @@ def smoke() -> None:
     if stats_path:
         with open(stats_path, "w") as f:
             json.dump({**s, "elapsed_s": dt, "tenants": 4,
-                       "max_iters": max_iters}, f, indent=2)
+                       "max_iters": max_iters,
+                       "cold_plan_compile_misses":
+                           cold_svc.stats["plan_compile_misses"]},
+                      f, indent=2)
     C.emit("search_service_smoke", dt * 1e6 / (4 * max_iters), "ok")
+
+
+def _fused_kernel_numbers() -> None:
+    """The fused posterior+EI bucket kernel vs the vmapped-XLA chain it
+    replaces (one launch vs posterior launch + eager EI), plus static
+    roofline numbers from the fused launch's compiled HLO."""
+    import jax.numpy as jnp
+
+    from repro.core.acquisition import expected_improvement
+    from repro.core.gp import _batched_posterior
+    from repro.kernels.fused_posterior.ops import _fused_launch
+    from repro.launch.hlo_stats import analyze
+    from repro.launch.mesh import MESH_HARDWARE
+
+    m, n, q, d = 16, 64, 512, 7
+    rng = np.random.default_rng(0)
+    ls = jnp.asarray(rng.normal(0.0, 0.1, (m, d)), jnp.float32)
+    sf = jnp.asarray(rng.normal(0.0, 0.1, (m,)), jnp.float32)
+    x = jnp.asarray(rng.random((m, n, d)), jnp.float32)
+    mask = jnp.ones((m, n), jnp.float32)
+    chol = jnp.asarray(np.broadcast_to(np.eye(n, dtype=np.float32) * 1.1,
+                                       (m, n, n)))
+    alpha = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    xq = jnp.asarray(rng.random((m, q, d)), jnp.float32)
+    best = jnp.zeros((m,), jnp.float32)
+    args = (ls, sf, x, mask, chol, alpha, xq, best)
+
+    def vmapped():
+        mu, var = _batched_posterior(ls, sf, x, mask, chol, alpha, xq)
+        return expected_improvement(mu, var, 0.0)
+
+    _fused_launch(*args, impl="xla")[2].block_until_ready()
+    vmapped().block_until_ready()
+    reps = 20
+    t0 = time.time()
+    for _ in range(reps):
+        _fused_launch(*args, impl="xla")[2].block_until_ready()
+    fused_s = (time.time() - t0) / reps
+    t0 = time.time()
+    for _ in range(reps):
+        vmapped().block_until_ready()
+    vmap_s = (time.time() - t0) / reps
+    C.emit("fused_posterior_launch", fused_s * 1e6, f"m{m}n{n}q{q}")
+    C.emit("fused_posterior_vs_vmapped_speedup", 0.0,
+           f"{vmap_s / fused_s:.2f}")
+
+    h = analyze(_fused_launch.lower(*args, impl="xla").compile().as_text())
+    compute_s = h["dot_flops"] / MESH_HARDWARE["peak_flops_bf16"]
+    memory_s = h["dot_bytes"] / MESH_HARDWARE["hbm_bw"]
+    intensity = h["dot_flops"] / max(h["dot_bytes"], 1.0)
+    dominant = "compute" if compute_s >= memory_s else "memory"
+    C.emit("fused_posterior_roofline_intensity", intensity,
+           f"dominant={dominant}")
+
+
+def steady_state() -> None:
+    """Compile-once serving (the ISSUE-6 acceptance scenario): per-step
+    latency of a churning mixed SO + 2-objective + 3-objective cohort
+    served COLD (every launch shape compiles inline as it first
+    appears) vs after ``SearchService.precompile`` has warmed the
+    enumerated bucket vocabulary — where ``plan_compile_misses`` must
+    stay exactly 0 — plus the fused posterior kernel comparison and
+    its roofline numbers."""
+    import dataclasses as dc
+
+    from repro.core.plan import CohortLimits
+
+    emu = C.emulator()
+    sp_full = C.space()
+    # a trimmed candidate space keeps the EHVI bucket vocabulary (the
+    # dominant share of the precompile) proportionate to a benchmark
+    sp = dc.replace(sp_full, name="scout-mini",
+                    configs=sp_full.configs[:8])
+    wid = emu.workload_ids()[6]
+    cons = [Constraint("runtime", emu.runtime_target(wid, 50))]
+    cfg = BOConfig(n_init=2, max_iters=5, rgpe_samples=32)
+
+    def fresh_repo() -> Repository:
+        repo = Repository()
+        rng = np.random.default_rng(7)
+        for u in range(2):
+            for ci in rng.choice(len(sp), 6, replace=False):
+                repo.add_run(emu.make_record(f"anon-{u}", wid,
+                                             sp.configs[ci], rng))
+        return repo
+
+    def submit(svc: SearchService, i: int) -> None:
+        runner = C.profile_fn(wid, 100 + i)
+        if i % 3 == 0:
+            svc.submit(SearchRequest(
+                sp, runner, Objective("cost"), cons, method="karasu",
+                bo_config=cfg, seed=100 + i))
+        elif i % 3 == 1:
+            svc.submit(SearchRequest(
+                sp, runner, None, cons, method="karasu", bo_config=cfg,
+                seed=100 + i,
+                objectives=[Objective("cost"), Objective("energy")],
+                n_mc=8))
+        else:
+            svc.submit(SearchRequest(
+                sp, runner, None, (), method="karasu", bo_config=cfg,
+                seed=100 + i,
+                objectives=[Objective("cost"), Objective("energy"),
+                            Objective("runtime")], n_mc=8))
+
+    def run_steps(svc: SearchService, n_steps: int):
+        submitted = 0
+        times = []
+        for _ in range(n_steps):
+            while len(svc.active) + len(svc.queue) < 3:
+                submit(svc, submitted)
+                submitted += 1
+            t0 = time.time()
+            svc.step()
+            times.append(time.time() - t0)
+        return times
+
+    steps = {"ci": 40, "full": 200}.get(C.SCALE, 40)
+
+    cold = SearchService(fresh_repo(), slots=3)
+    cold_times = run_steps(cold, steps)
+
+    warm = SearchService(fresh_repo(), slots=3)
+    # lane bound: 8 target lanes (the cohort's measures) + 8 RGPE jobs
+    # x up to 3 support bases fused into the same posterior buckets
+    limits = CohortLimits(d=sp.all_encoded().shape[1], q_grid=len(sp),
+                          max_obs=8, max_lanes=32, n_samples=(32,),
+                          n_mc=(8,), n_objectives=(2, 3),
+                          max_ehvi_boxes=256)
+    t0 = time.time()
+    pre = warm.precompile(limits)
+    pre_s = time.time() - t0
+    warm_times = run_steps(warm, steps)
+    assert warm.stats["plan_compile_misses"] == 0, warm.stats
+
+    C.emit("search_service_steady_cold_step",
+           float(np.mean(cold_times)) * 1e6, f"{steps}steps")
+    C.emit("search_service_steady_warm_step",
+           float(np.mean(warm_times)) * 1e6, f"{steps}steps")
+    C.emit("search_service_precompile", pre_s * 1e6,
+           f"{pre['buckets']}buckets_{pre['compiles']}compiles")
+    C.emit("search_service_steady_misses", 0.0,
+           str(warm.stats["plan_compile_misses"]))
+    _fused_kernel_numbers()
 
 
 def main() -> None:
     if "--smoke" in sys.argv[1:]:
         smoke()
+        return
+    if "--steady-state" in sys.argv[1:] or \
+            os.environ.get("REPRO_BENCH_STEADY_STATE") == "1":
+        steady_state()
         return
     if "--moo" in sys.argv[1:] or \
             os.environ.get("REPRO_BENCH_MOO") == "1":

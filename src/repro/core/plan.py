@@ -67,7 +67,8 @@ import numpy as np
 from repro.kernels.routing import resolve_impl
 
 from .acquisition import (EHVI_BOX_CHUNK, _ehvi_box_launch,
-                          nondominated_boxes, pareto_front)
+                          expected_improvement, nondominated_boxes,
+                          pareto_front)
 from .gp import (GP, BatchedGP, _batched_loo_launch, _batched_posterior,
                  _batched_sample_launch, _pad_stack_obs, fit_gp_batched)
 
@@ -86,10 +87,14 @@ M_ROUND_POW2 = True     # fused model/lane axis pads to a power of two
 class PosteriorQuery:
     """Posterior mean/variance of one ``BatchedGP`` stack on a grid.
     ``grid``: (q, d) shared across the stack's models or (m, q, d)
-    per-model. Result: ``(mu, var)``, each (m, q)."""
+    per-model. Result: ``(mu, var)``, each (m, q) — or ``(mu, var, ei)``
+    when ``best`` (the standardised-scale incumbent for the closed-form
+    minimisation-EI head) is set, letting the fused bucket kernel finish
+    the acquisition in the same launch."""
     stack: BatchedGP
     grid: Any
     owner: Any = None
+    best: Any = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -154,6 +159,37 @@ class Bucket:
     key: Tuple
     indices: Tuple[int, ...]
     pads: Dict[str, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class CohortLimits:
+    """Bounds that CLOSE a service's bucket vocabulary, so the full set
+    of launch shapes it can ever ask for is enumerable up front
+    (``StepPlanner.enumerate_buckets``) and precompilable at startup
+    (``SearchService.precompile``).
+
+    ``d``/``q_grid`` come from the search space (encoded dimension and
+    candidate count); ``max_obs`` bounds any single model's observation
+    count (for targets: initial runs + max_iters; support models are
+    bounded by the repository's deepest (workload, measure) history);
+    ``max_lanes`` bounds how many model lanes one fused launch can carry
+    (targets and support stacks summed across the cohort). The optional
+    tuples pin the discrete knob values in play — RGPE sample counts,
+    MOO Monte-Carlo draw counts, objective counts — and ``noises`` the
+    fixed noise levels the (jit-static) fit launches will see.
+    ``max_ehvi_boxes`` bounds the box-decomposition size of any front
+    (2-objective fronts decompose into at most ``front+1`` staircase
+    boxes; n>=3 fronts grow faster and dominate the vocabulary)."""
+    d: int
+    q_grid: int
+    max_obs: int
+    max_lanes: int = 1
+    n_samples: Tuple[int, ...] = ()
+    n_mc: Tuple[int, ...] = ()
+    n_objectives: Tuple[int, ...] = ()
+    max_ehvi_boxes: int = 1
+    noises: Tuple[float, ...] = (0.1,)
+    fit_steps: int = 120
 
 
 @dataclasses.dataclass
@@ -271,7 +307,12 @@ class StepPlanner:
                 "m_pad": self.round_models(lanes), "lanes": lanes}
 
     def _pads_loo(self, key, queries, idxs, prep) -> Dict[str, int]:
-        return {"n_pad": self.round_obs(key[1]), "lanes": len(queries)}
+        # the lane axis pads to a power of two like every other fused
+        # launch: without it the LOO launch recompiles per cohort size
+        # and the bucket vocabulary is open-ended
+        lanes = len(queries)
+        return {"n_pad": self.round_obs(key[1]),
+                "l_pad": self.round_models(lanes), "lanes": lanes}
 
     def _pads_draw(self, key, queries, idxs, prep) -> Dict[str, int]:
         # deliberately exact: the draw combine is not jitted (q shrinks
@@ -302,6 +343,106 @@ class StepPlanner:
         return {"k_pad": k_pad, "q_pad": self.round_grid(key[2]),
                 "l_pad": self.round_models(len(queries)),
                 "lanes": len(queries)}
+
+    # -- the closed bucket vocabulary ----------------------------------------
+    def _obs_pads(self, max_obs: int) -> List[int]:
+        step = max(1, self.obs_round_to)
+        return list(range(step, self.round_obs(max_obs) + 1, step))
+
+    def _grid_pads(self, max_q: int) -> List[int]:
+        step = max(1, self.q_round_to)
+        return list(range(step, self.round_grid(max_q) + 1, step))
+
+    def _lane_pads(self, max_lanes: int) -> List[int]:
+        if not self.m_round_pow2:
+            return list(range(1, max_lanes + 1))
+        out, p = [], 1
+        while p < self.round_models(max_lanes):
+            out.append(p)
+            p <<= 1
+        out.append(p)
+        return out
+
+    def _box_pads(self, max_boxes: int) -> List[int]:
+        out, p = [], 1
+        while p < min(_pow2(max_boxes), EHVI_BOX_CHUNK):
+            out.append(p)
+            p <<= 1
+        out.append(p)
+        k = 2 * EHVI_BOX_CHUNK
+        while k <= _round_up(max_boxes, EHVI_BOX_CHUNK):
+            out.append(k)
+            k += EHVI_BOX_CHUNK
+        return out
+
+    def enumerate_buckets(self, limits: CohortLimits) -> List[Bucket]:
+        """Walk the CLOSED launch-shape vocabulary a cohort bounded by
+        ``limits`` can produce — one ``Bucket`` (empty ``indices``) per
+        distinct jitted launch shape, keys stated at their padded values
+        (every padded value is its own fixed point under the rounding
+        policy, so a dummy query AT the key shape lands exactly on the
+        enumerated launch). ``draw`` buckets are deliberately absent:
+        the draw combine is not jitted, so it has no compile vocabulary.
+
+        Per kind: posterior launches vary (n_pad, m_pad) at the fixed
+        (q_grid, d); sample launches add the grid axis (RGPE scores at
+        the target's own inputs, so q ranges over the observation
+        buckets) and the sample count; LOO launches vary (n_pad, l_pad)
+        per sample count; EHVI launches vary the candidate bucket (the
+        remaining-candidate set shrinks every iteration), the box-axis
+        pad, and the MOO lane pad per (n_obj, n_mc)."""
+        out: List[Bucket] = []
+        obs = self._obs_pads(limits.max_obs)
+        lanes = self._lane_pads(limits.max_lanes)
+        for n_pad in obs:
+            for m_pad in lanes:
+                out.append(Bucket("posterior", (limits.q_grid, limits.d),
+                                  (), {"n_pad": n_pad, "m_pad": m_pad,
+                                       "lanes": m_pad}))
+        for s in limits.n_samples:
+            for q_pad in self._grid_pads(limits.max_obs):
+                for n_pad in obs:
+                    for m_pad in lanes:
+                        out.append(Bucket(
+                            "sample", (s, q_pad, limits.d), (),
+                            {"n_pad": n_pad, "q_pad": q_pad,
+                             "m_pad": m_pad, "lanes": m_pad}))
+            for n_pad in obs:
+                for l_pad in lanes:
+                    out.append(Bucket("loo", (s, n_pad), (),
+                                      {"n_pad": n_pad, "l_pad": l_pad,
+                                       "lanes": l_pad}))
+        for n_obj in limits.n_objectives:
+            for s in limits.n_mc:
+                for q_pad in self._grid_pads(limits.q_grid):
+                    for k_pad in self._box_pads(limits.max_ehvi_boxes):
+                        for l_pad in lanes:
+                            out.append(Bucket(
+                                "ehvi", (n_obj, s, q_pad), (),
+                                {"k_pad": k_pad, "q_pad": q_pad,
+                                 "l_pad": l_pad, "lanes": l_pad}))
+        return out
+
+    @staticmethod
+    def launch_signature(bucket: Bucket) -> Tuple:
+        """The jit-cache identity of a bucket's launch: kind plus every
+        axis length the compiled program sees (exact key dims that the
+        executor pads away are normalised to their padded value, so a
+        live bucket compares equal to its enumerated twin)."""
+        k, key, p = bucket.kind, bucket.key, bucket.pads
+        if k == "posterior":
+            return ("posterior", key[0], key[1], p["n_pad"], p["m_pad"])
+        if k == "sample":
+            return ("sample", key[0], p["q_pad"], key[2],
+                    p["n_pad"], p["m_pad"])
+        if k == "loo":
+            return ("loo", key[0], p["n_pad"], p["l_pad"])
+        if k == "draw":     # unjitted: exact shapes, no compile identity
+            return ("draw", key[0], key[1], p["lanes"])
+        if k == "ehvi":
+            return ("ehvi", key[0], key[1], p["q_pad"], p["k_pad"],
+                    p["l_pad"])
+        raise ValueError(f"unknown bucket kind {k!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -347,10 +488,20 @@ class PlanExecutor:
     callable has ``owner(result)`` invoked (in query order, so owners
     that overlay earlier owners' state — e.g. RGPE mixes over target
     posteriors — see a deterministic sequence). ``counters`` (optional
-    dict) collects ``{kind: {launches, queries, lanes}}``."""
+    dict) collects ``{kind: {launches, queries, lanes}}``.
 
-    def __init__(self, *, impl: str = "auto"):
+    ``fused_posterior=True`` dispatches posterior buckets to the fused
+    ``kernels.fused_posterior`` launch (masked Cholesky-solve ->
+    posterior -> EI in one kernel, stack buffers donated on TPU)
+    instead of the vmapped-XLA ``_batched_posterior`` chain — the
+    default stays the vmapped path, which doubles as the fused kernel's
+    parity baseline. Results are identical up to float roundoff either
+    way; queries carrying ``best`` additionally get the EI row."""
+
+    def __init__(self, *, impl: str = "auto",
+                 fused_posterior: bool = False):
         self.impl = impl
+        self.fused_posterior = fused_posterior
 
     def execute(self, plan: StepPlan, *, counters: Optional[dict] = None,
                 impl: Optional[str] = None) -> List[Any]:
@@ -410,14 +561,33 @@ class PlanExecutor:
     def _exec_posterior(self, bucket, queries, plan, impl):
         q, d = bucket.key
         n_pad, m_pad = bucket.pads["n_pad"], bucket.pads["m_pad"]
-        parts = self._pad_lanes(
-            self._stack_parts(queries, n_pad, q, d), m_pad)
+        parts = self._stack_parts(queries, n_pad, q, d)
         r_impl = resolve_impl(impl, cells=m_pad * q * n_pad)
-        mu, var = _batched_posterior(*parts, impl=r_impl)
+        if self.fused_posterior:
+            from repro.kernels.fused_posterior import fused_launch_fn
+            # per-lane incumbents; lanes without an EI head get 0.0 (the
+            # EI row is computed either way — shape stability — and
+            # simply not returned for those queries)
+            best = jnp.concatenate([
+                jnp.full((query.stack.m,),
+                         0.0 if query.best is None else float(query.best),
+                         jnp.float32) for query in queries])
+            parts = self._pad_lanes(parts + [best], m_pad)
+            mu, var, ei = fused_launch_fn()(*parts, impl=r_impl)
+        else:
+            parts = self._pad_lanes(parts, m_pad)
+            mu, var = _batched_posterior(*parts, impl=r_impl)
+            ei = None
         out, off = [], 0
         for query in queries:
-            out.append((mu[off:off + query.stack.m],
-                        var[off:off + query.stack.m]))
+            rows = slice(off, off + query.stack.m)
+            if query.best is None:
+                out.append((mu[rows], var[rows]))
+            elif ei is not None:
+                out.append((mu[rows], var[rows], ei[rows]))
+            else:
+                out.append((mu[rows], var[rows], expected_improvement(
+                    mu[rows], var[rows], float(query.best))))
             off += query.stack.m
         return out
 
@@ -464,8 +634,10 @@ class PlanExecutor:
             lambda k: jax.random.normal(k, (n_samples, n)))(keys)
         if p:
             eps = jnp.pad(eps, ((0, 0), (0, 0), (0, p)))
-        s = _batched_loo_launch(jnp.stack(chols), jnp.stack(alphas),
-                                jnp.stack(ys), eps)
+        parts = self._pad_lanes(
+            [jnp.stack(chols), jnp.stack(alphas), jnp.stack(ys), eps],
+            bucket.pads["l_pad"])
+        s = _batched_loo_launch(*parts)
         return [s[j, :, :n] for j in range(len(queries))]
 
     def _exec_draw(self, bucket, queries, plan, impl):

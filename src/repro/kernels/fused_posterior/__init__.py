@@ -1,0 +1,6 @@
+from .ops import fused_launch_fn, fused_posterior_ei
+from .ref import fused_posterior_ei_ref
+from .fused import fused_posterior_ei_pallas
+
+__all__ = ["fused_posterior_ei", "fused_posterior_ei_ref",
+           "fused_posterior_ei_pallas", "fused_launch_fn"]

@@ -1,0 +1,150 @@
+"""Pallas TPU kernel: fused masked Cholesky-solve -> posterior -> EI.
+
+The steady-state hot bucket of the query plan is the (q, d) posterior
+launch: every fused model lane needs a pairwise Matern-5/2 cross-kernel
+against its observations, a triangular solve against its Cholesky
+factor, and (for single-objective tenants) the closed-form EI head. XLA
+runs that as separate kernels with the (q, n) cross-kernel and the
+(n, q) solve round-tripping through HBM; this kernel keeps the whole
+chain of one lane x one query block resident in VMEM.
+
+Grid (m, q_blocks): each program owns one model lane and one block of
+``bq`` query points. It computes the masked cross-kernel tile on the
+MXU, then runs an in-kernel forward substitution over the observation
+axis (n is the small axis of the bucket — tens, not thousands — so the
+O(n^2 bq) row recurrence stays VMEM-resident in a scratch buffer), and
+finishes with mean, variance, and the EI head on the VPU. Padded
+observations arrive masked with unit Cholesky diagonals (the query
+plan's exact-padding contract), so padded rows solve to exactly zero.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+SQRT5 = 5.0 ** 0.5
+VAR_FLOOR = 1e-12        # must match core.acquisition.VAR_FLOOR
+INV_SQRT2 = 2.0 ** -0.5
+INV_SQRT_2PI = 0.3989422804014327
+
+
+def _fused_kernel(ls_ref, sf_ref, x_ref, mask_ref, chol_ref, alpha_ref,
+                  xq_ref, best_ref, mu_ref, var_ref, ei_ref,
+                  kst_ref, v_ref, diag_ref, *, n: int):
+    scale = jnp.exp(ls_ref[0])                     # (d,)
+    sf = jnp.exp(sf_ref[0, 0])
+    x = x_ref[0] * (1.0 / scale)[None, :]          # (n, d)
+    xq = xq_ref[0] * (1.0 / scale)[None, :]        # (bq, d)
+    mask = mask_ref[0]                             # (n,)
+
+    # masked Matern-5/2 cross-kernel tile, distances via one MXU matmul
+    ab = jax.lax.dot_general(xq, x, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    d2 = (jnp.sum(xq * xq, 1)[:, None] + jnp.sum(x * x, 1)[None, :]
+          - 2.0 * ab)
+    d2 = jnp.maximum(d2, 0.0)
+    r = jnp.sqrt(d2 + 1e-12)
+    ks = (sf * (1.0 + SQRT5 * r + 5.0 / 3.0 * d2) * jnp.exp(-SQRT5 * r)
+          * mask[None, :])                         # (bq, n)
+
+    mu = jnp.sum(ks * alpha_ref[0][None, :], axis=1)       # (bq,)
+
+    # forward substitution v = L^{-1} ks^T, rows materialised in VMEM
+    # scratch: row k only depends on rows < k, and v is zero-initialised,
+    # so the running dot L[k, :] @ v picks up exactly the solved prefix
+    chol = chol_ref[0]                             # (n, n)
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    col_ids = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    diag_ref[...] = jnp.sum(
+        jnp.where(row_ids == col_ids, chol, 0.0), axis=1, keepdims=True)
+    kst_ref[...] = ks.T
+    v_ref[...] = jnp.zeros_like(v_ref)
+
+    def body(k, _):
+        l_row = chol_ref[0, pl.ds(k, 1), :]        # (1, n)
+        acc = jax.lax.dot_general(
+            l_row, v_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)    # (1, bq)
+        v_ref[pl.ds(k, 1), :] = (
+            (kst_ref[pl.ds(k, 1), :] - acc) / diag_ref[pl.ds(k, 1), :])
+        return 0
+
+    jax.lax.fori_loop(0, n, body, 0)
+
+    v = v_ref[...]
+    var = jnp.maximum(sf - jnp.sum(v * v, axis=0), 1e-10)   # (bq,)
+
+    # closed-form minimisation EI against the per-lane incumbent
+    best = best_ref[0, 0]
+    sigma = jnp.sqrt(jnp.maximum(var, VAR_FLOOR))
+    z = (best - mu) / sigma
+    big_phi = 0.5 * (1.0 + jax.lax.erf(z * INV_SQRT2))
+    small_phi = jnp.exp(-0.5 * z * z) * INV_SQRT_2PI
+    ei = jnp.maximum(sigma * (z * big_phi + small_phi), 0.0)
+
+    mu_ref[0, :] = mu
+    var_ref[0, :] = var
+    ei_ref[0, :] = ei
+
+
+def fused_posterior_ei_pallas(log_ls, log_sf, x, mask, chol, alpha, xq,
+                              best, *, block_q: int = 128,
+                              interpret: bool = False):
+    """(mu, var, ei) for one padded (q, d) bucket, each (m, q)."""
+    m, n, d = x.shape
+    q = xq.shape[1]
+    bq = min(block_q, q)
+    pq = (-q) % bq
+    # lane-dim alignment for the compiled TPU kernel only: d (kernel
+    # tile), n (cross-kernel columns / solve rows) pad to 128; padded
+    # coords ride unit lengthscales, padded observations a zero mask and
+    # unit Cholesky diagonal — exact by the plan's padding contract
+    pd = (-d) % 128 if not interpret else 0
+    pn = (-n) % 128 if not interpret else 0
+    if pd:
+        log_ls = jnp.pad(log_ls, ((0, 0), (0, pd)))
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pd)))
+        xq = jnp.pad(xq, ((0, 0), (0, 0), (0, pd)))
+    if pn:
+        x = jnp.pad(x, ((0, 0), (0, pn), (0, 0)))
+        mask = jnp.pad(mask, ((0, 0), (0, pn)))
+        alpha = jnp.pad(alpha, ((0, 0), (0, pn)))
+        chol = jnp.pad(chol, ((0, 0), (0, pn), (0, pn)))
+        bump = jnp.concatenate([jnp.zeros((n,), jnp.float32),
+                                jnp.ones((pn,), jnp.float32)])
+        chol = chol + jnp.diag(bump)[None]
+    if pq:
+        xq = jnp.pad(xq, ((0, 0), (0, pq), (0, 0)), mode="edge")
+    n_pad, q_pad = n + pn, q + pq
+    sf2 = log_sf.reshape(m, 1)
+    best2 = jnp.asarray(best, jnp.float32).reshape(m, 1)
+
+    grid = (m, q_pad // bq)
+    out_spec = pl.BlockSpec((1, bq), lambda i, j: (i, j))
+    mu, var, ei = pl.pallas_call(
+        functools.partial(_fused_kernel, n=n_pad),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, log_ls.shape[1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, n_pad, x.shape[2]), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, n_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, n_pad, n_pad), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, n_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bq, xq.shape[2]), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=[out_spec, out_spec, out_spec],
+        out_shape=[jax.ShapeDtypeStruct((m, q_pad), jnp.float32)] * 3,
+        scratch_shapes=[
+            pltpu.VMEM((n_pad, bq), jnp.float32),   # ks^T
+            pltpu.VMEM((n_pad, bq), jnp.float32),   # v (solve rows)
+            pltpu.VMEM((n_pad, 1), jnp.float32),    # Cholesky diagonal
+        ],
+        interpret=interpret,
+    )(log_ls, sf2, x, mask, chol, alpha, xq, best2)
+    return mu[:, :q], var[:, :q], ei[:, :q]

@@ -24,8 +24,14 @@ import jax
 # below this many output cells the dispatch/setup overhead of a Pallas
 # launch dominates any tiling win (one 256x256 tile pair ~ 2^16 cells;
 # give the kernel a few dozen tiles before switching over)
-AUTO_MIN_CELLS = int(os.environ.get("REPRO_PALLAS_AUTO_MIN_CELLS",
-                                    str(1 << 21)))
+AUTO_MIN_CELLS = 1 << 21
+
+
+def _auto_min_cells() -> int:
+    # read at resolve time, not import time: tests and service config set
+    # REPRO_PALLAS_AUTO_MIN_CELLS after ``repro`` is already imported
+    raw = os.environ.get("REPRO_PALLAS_AUTO_MIN_CELLS")
+    return AUTO_MIN_CELLS if raw is None else int(raw)
 
 
 def resolve_impl(impl: str, *, cells: int,
@@ -41,5 +47,5 @@ def resolve_impl(impl: str, *, cells: int,
         return impl
     if backend is None:
         backend = jax.default_backend()
-    threshold = AUTO_MIN_CELLS if min_cells is None else min_cells
+    threshold = _auto_min_cells() if min_cells is None else min_cells
     return "pallas" if (backend == "tpu" and cells >= threshold) else "xla"

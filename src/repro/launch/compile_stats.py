@@ -1,0 +1,74 @@
+"""Jit-cache compile accounting for the query-plan launch vocabulary.
+
+The compile-once steady state is a claim about a FINITE set of jitted
+launch functions: the fused fit, the per-kind plan launches, and the
+fused posterior kernel. This module registers exactly that set and
+counts their compiles via jit-cache sizes, so a service can assert
+"zero recompiles after precompile" instead of hoping for it.
+
+Counting by cache-size delta (rather than a global XLA compile hook) is
+deliberate: a step also runs eager ops at genuinely varying shapes —
+the remaining-candidate gathers that shrink every iteration, the
+unjitted draw combine — whose op-by-op compiles are unavoidable,
+cheap, and NOT part of the plan's launch vocabulary. A global counter
+could never reach zero; the tracked set can, and a miss in it is
+always a real hole in the precompiled bucket vocabulary.
+
+``CompileWatcher`` snapshots the tracked cache sizes and reports the
+delta; ``SearchService`` wraps each ``step`` in one to expose
+``plan_compile_misses``, and ``precompile`` uses another to report how
+many compiles warming the vocabulary actually cost.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+
+def tracked_launches() -> Dict[str, object]:
+    """name -> jitted launch fn, lazily imported (this module must stay
+    importable before the heavy model modules are)."""
+    from repro.core import acquisition, gp
+    from repro.kernels.fused_posterior import ops as fused_ops
+
+    return {
+        "fit": gp._fit_batched,
+        "chol_alpha": gp._batched_chol_alpha,
+        "posterior": gp._batched_posterior,
+        "sample": gp._batched_sample_launch,
+        "loo": gp._batched_loo_launch,
+        "ehvi": acquisition._ehvi_box_launch,
+        "fused_posterior": fused_ops._fused_launch,
+        "fused_posterior_donated": fused_ops._fused_launch_donated,
+    }
+
+
+def _cache_size(fn) -> int:
+    size = getattr(fn, "_cache_size", None)
+    return int(size()) if callable(size) else 0
+
+
+def cache_sizes() -> Dict[str, int]:
+    """Per-launch jit-cache entry counts (one entry per compiled
+    shape/static-arg combination)."""
+    return {name: _cache_size(fn)
+            for name, fn in tracked_launches().items()}
+
+
+def total_cache_size() -> int:
+    return sum(cache_sizes().values())
+
+
+class CompileWatcher:
+    """Delta counter over the tracked launch caches: ``misses()`` is
+    how many tracked launches compiled since construction (or the last
+    ``reset``). Entries are never evicted within a process, so the
+    delta is exactly the number of new (shape, static-args) programs."""
+
+    def __init__(self):
+        self._base = total_cache_size()
+
+    def misses(self) -> int:
+        return total_cache_size() - self._base
+
+    def reset(self) -> None:
+        self._base = total_cache_size()

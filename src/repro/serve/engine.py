@@ -7,17 +7,38 @@ that writes into the freed slot's cache rows. One decode step advances
 every active slot (the classic iteration-level scheduling of Orca/vLLM,
 mapped to fixed-shape JAX: slot count and cache length are static, slot
 occupancy is a mask).
+
+Compile-once steady state: prefill pads the prompt to a
+``PREFILL_ROUND_TO`` length bucket (positions keep counting through the
+pad, so the padded rows are causally masked by every later query until
+decode overwrites them in place), and the decode step masks FREE slots'
+cache writes out entirely — a freed slot's rows stay bit-identical
+until re-admission, and slot occupancy changing never retraces. The jit
+caches therefore stabilise at one prefill entry per prompt-length
+bucket plus one decode entry, observable via ``compile_stats()``.
+Prompt padding is only sound for attention blocks (padded rows are
+dead weight the causal mask hides); recurrent blocks (mamba2 / mlstm /
+slstm) fold every prefill token into their running state, so hybrid
+and SSM models keep exact-length prefill.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.registry import ModelBundle
+
+# prompt lengths bucket to multiples of this before the prefill jit —
+# the serving twin of the query plan's round-to-8 observation axis
+PREFILL_ROUND_TO = 8
+
+# block kinds whose decode path reads the cache purely through the
+# causal position mask — the only kinds prompt padding is exact for
+_PAD_SAFE_KINDS = frozenset({"attn", "local_attn", "shared_attn"})
 
 
 @dataclasses.dataclass
@@ -44,10 +65,42 @@ class ServeEngine:
                                         batch=extras or {},
                                         dtype=jnp.float32)
         self._decode = jax.jit(bundle.decode_step)
+        self._pad_prefill = (
+            frozenset(bundle.cfg.layer_kinds) <= _PAD_SAFE_KINDS)
+        # ring caches evict oldest rows: a padded prompt close to the
+        # window would push still-needed real rows out, so those prompts
+        # fall back to exact-length prefill (checked per request)
+        self._window = (bundle.cfg.window
+                        if "local_attn" in bundle.cfg.layer_kinds else 0)
+
+        def masked_decode(params, caches, tokens, positions, lane_mask):
+            logits, new = bundle.decode_step(params, caches, tokens,
+                                             positions)
+            # batch lives at axis 1 of every cache leaf; free lanes keep
+            # their old rows bit for bit
+            merged = jax.tree.map(
+                lambda old, upd: jnp.where(
+                    lane_mask.reshape((1, -1) + (1,) * (old.ndim - 2)),
+                    upd, old),
+                caches, new)
+            return logits, merged
+
+        self._masked_decode = jax.jit(masked_decode)
         self.free: List[int] = list(range(slots))
         self.active: Dict[int, dict] = {}     # slot -> request state
         self.queue: List[Request] = []
         self.done: List[Completion] = []
+
+    def compile_stats(self) -> Dict[str, int]:
+        """Jit-cache entry counts: ``prefill_compiles`` is one per
+        prompt-length bucket seen, ``decode_compiles`` one total in
+        steady state (slot occupancy is a traced mask, not a shape)."""
+        def size(fn):
+            s = getattr(fn, "_cache_size", None)
+            return int(s()) if callable(s) else 0
+
+        return {"prefill_compiles": size(self._decode),
+                "decode_compiles": size(self._masked_decode)}
 
     # -- request lifecycle ---------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -60,17 +113,29 @@ class ServeEngine:
             # prefill into an isolated batch-1 view of this slot's cache
             # rows, then write the updated rows back — other slots' caches
             # are untouched (slot isolation).
-            prompt = jnp.asarray(req.prompt.astype(np.int32))[None, :]
+            tokens = req.prompt.astype(np.int32)
+            n_real = int(tokens.shape[0])
+            if self._pad_prefill:
+                # pad to the length bucket so the prefill jit cache
+                # stabilises; positions keep counting through the pad, so
+                # the padded rows are causally invisible to every later
+                # decode step until it overwrites them in place
+                pad = (-n_real) % PREFILL_ROUND_TO
+                if self._window and n_real + pad > self._window:
+                    pad = 0
+                if pad:
+                    tokens = np.pad(tokens, (0, pad))
+            prompt = jnp.asarray(tokens)[None, :]
             positions = jnp.arange(prompt.shape[1], dtype=jnp.int32)[None]
             sub = jax.tree.map(lambda x: x[:, slot:slot + 1], self.caches)
             logits, sub = self._decode(self.params, sub, prompt, positions)
             self.caches = jax.tree.map(
                 lambda full, s: full.at[:, slot:slot + 1].set(s),
                 self.caches, sub)
-            next_tok = int(np.asarray(jnp.argmax(logits[0, -1])))
+            next_tok = int(np.asarray(jnp.argmax(logits[0, n_real - 1])))
             self.active[slot] = {
                 "req": req, "generated": [next_tok],
-                "pos": int(prompt.shape[1]),
+                "pos": n_real,
             }
 
     def _step_decode(self) -> None:
@@ -78,12 +143,14 @@ class ServeEngine:
             return
         tokens = np.zeros((self.slots, 1), np.int32)
         positions = np.zeros((self.slots, 1), np.int32)
+        lane_mask = np.zeros((self.slots,), bool)
         for slot, st in self.active.items():
             tokens[slot, 0] = st["generated"][-1]
             positions[slot, 0] = st["pos"]
-        logits, self.caches = self._decode(
+            lane_mask[slot] = True
+        logits, self.caches = self._masked_decode(
             self.params, self.caches, jnp.asarray(tokens),
-            jnp.asarray(positions))
+            jnp.asarray(positions), jnp.asarray(lane_mask))
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
         finished = []
         for slot, st in self.active.items():

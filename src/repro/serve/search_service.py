@@ -74,13 +74,16 @@ from repro.core.bo import (KEY_PURPOSE_MOO_EHVI, KEY_PURPOSE_RGPE, BOConfig,
                            _model_posteriors_augmented, _should_stop_early,
                            _target_runs, derive_key)
 from repro.core.encoding import SearchSpace
-from repro.core.gp import batched_posterior
+from repro.core.gp import GP, BatchedGP, GPParams, batched_posterior
 from repro.core.repository import Repository
 from repro.core.rgpe import WeightJob, mix_weighted
 from repro.core.types import (BOResult, Constraint, Objective, Observation,
                               RunRecord)
-from repro.serve.plan import (EhviQuery, PlanExecutor, PosteriorDrawQuery,
-                              PosteriorQuery, StepPlanner)
+from repro.launch.compile_stats import CompileWatcher
+from repro.serve.plan import (CohortLimits, EhviQuery, LooSampleQuery,
+                              PlanExecutor, PosteriorDrawQuery,
+                              PosteriorQuery, SampleQuery, StepPlan,
+                              StepPlanner)
 from repro.serve.profile_executor import (ProfileJob, ProfileOutcome,
                                           SyncProfileExecutor)
 
@@ -321,7 +324,11 @@ class SearchService:
                       "profile_waits": 0, "posterior_batches": 0,
                       "posterior_queries": 0, "sample_batches": 0,
                       "sample_queries": 0, "ehvi_batches": 0,
-                      "ehvi_jobs": 0, "plan_batches": 0, "plan_queries": 0}
+                      "ehvi_jobs": 0, "plan_batches": 0, "plan_queries": 0,
+                      "plan_compile_misses": 0, "precompiled_buckets": 0,
+                      "precompile_compiles": 0}
+        # launch signatures covered by precompile() — empty until called
+        self.precompiled_signatures: set = set()
 
     # -- request lifecycle --------------------------------------------------
     def submit(self, req: SearchRequest) -> int:
@@ -378,6 +385,97 @@ class SearchService:
     def close(self) -> None:
         self.executor.shutdown()
 
+    # -- AOT bucket precompile ----------------------------------------------
+    def precompile(self, limits: CohortLimits) -> Dict[str, int]:
+        """Warm the jit cache for EVERY launch shape a cohort bounded by
+        ``limits`` can produce, so serving runs at a zero-recompile
+        steady state (asserted by ``stats['plan_compile_misses']``).
+
+        The bucket vocabulary comes from the planner
+        (``enumerate_buckets``); each bucket is driven through the REAL
+        executor path with a dummy query pinned at the bucket's padded
+        shape — executing (not just AOT-lowering) is deliberate: in
+        current jax ``lower().compile()`` does not populate the jit call
+        cache, and only the executed path exercises the identical impl
+        routing and kernel dispatch serving will use. The vmapped fit
+        launches (the one jit vocabulary outside the plan) are warmed
+        from the same limits. Returns ``{"buckets", "compiles"}`` and
+        folds both into ``stats``."""
+        watch = CompileWatcher()
+        buckets = self.planner.enumerate_buckets(limits)
+        for bucket in buckets:
+            queries, prep = self._dummy_bucket(bucket, limits)
+            self.plan_executor.execute(StepPlan(
+                queries,
+                [dataclasses.replace(
+                    bucket, indices=tuple(range(len(queries))))],
+                prep))
+        for noise in limits.noises:
+            for n_pad in self.planner._obs_pads(limits.max_obs):
+                for m_pad in self.planner._lane_pads(limits.max_lanes):
+                    self.planner.fit_targets(
+                        [np.zeros((n_pad, limits.d), np.float32)] * m_pad,
+                        [np.arange(n_pad, dtype=np.float32)] * m_pad,
+                        noise=noise, steps=limits.fit_steps)
+        self.precompiled_signatures = {
+            self.planner.launch_signature(b) for b in buckets}
+        compiles = watch.misses()
+        self.stats["precompiled_buckets"] += len(buckets)
+        self.stats["precompile_compiles"] += compiles
+        return {"buckets": len(buckets), "compiles": compiles}
+
+    def _dummy_bucket(self, bucket, limits: CohortLimits):
+        """Owner-less queries pinned at an enumerated bucket's padded
+        shape (every padded length is a fixed point of the rounding
+        policy, so the executor launches exactly the enumerated
+        program). Values are immaterial — only shapes compile."""
+        noise = limits.noises[0]
+        d = limits.d
+        kind, key, pads = bucket.kind, bucket.key, bucket.pads
+        if kind == "posterior":
+            stack = self._dummy_stack(pads["m_pad"], pads["n_pad"], d,
+                                      noise)
+            return [PosteriorQuery(stack, np.zeros((key[0], d),
+                                                   np.float32))], {}
+        if kind == "sample":
+            s, q_pad, _ = key
+            stack = self._dummy_stack(pads["m_pad"], pads["n_pad"], d,
+                                      noise)
+            keys = jax.random.split(jax.random.PRNGKey(0), pads["m_pad"])
+            return [SampleQuery(stack, np.zeros((q_pad, d), np.float32),
+                                keys, s)], {}
+        if kind == "loo":
+            s, n_pad = key
+            gp = GP(jnp.zeros((n_pad, d), jnp.float32),
+                    jnp.zeros((n_pad,)), jnp.zeros((n_pad,)),
+                    jnp.zeros(()), jnp.ones(()),
+                    GPParams(jnp.zeros((d,)), jnp.zeros(()), noise),
+                    jnp.eye(n_pad, dtype=jnp.float32),
+                    jnp.zeros((n_pad,)))
+            return [LooSampleQuery(gp, jax.random.PRNGKey(0), s)
+                    for _ in range(pads["l_pad"])], {}
+        if kind == "ehvi":
+            n_obj, s, q_pad = key
+            samples = tuple(np.zeros((s, q_pad), np.float32)
+                            for _ in range(n_obj))
+            box = (np.zeros((1, n_obj)), np.ones((1, n_obj)))
+            queries = [EhviQuery(samples, np.ones((1, n_obj)),
+                                 np.full((n_obj,), 2.0))
+                       for _ in range(pads["l_pad"])]
+            return queries, {i: box for i in range(len(queries))}
+        raise ValueError(f"unknown bucket kind {kind!r}")
+
+    @staticmethod
+    def _dummy_stack(m: int, n: int, d: int, noise: float) -> BatchedGP:
+        eye = jnp.broadcast_to(jnp.eye(n, dtype=jnp.float32)[None],
+                               (m, n, n))
+        return BatchedGP(jnp.zeros((m, n, d), jnp.float32),
+                         jnp.zeros((m, n)), jnp.ones((m, n)),
+                         jnp.zeros((m,)), jnp.ones((m,)),
+                         jnp.zeros((m, d)), jnp.zeros((m,)), noise,
+                         eye, jnp.zeros((m, n)),
+                         jnp.full((m,), n, jnp.int32))
+
     # -- scheduling internals -----------------------------------------------
     def _admit(self) -> None:
         while self.queue and len(self.active) < self.slots:
@@ -425,6 +523,9 @@ class SearchService:
                     else max(0.0, deadline - time.monotonic()))
 
         self.stats["steps"] += 1
+        # any compile of a tracked plan launch during this step is a
+        # steady-state violation candidate — surfaced, never silent
+        compile_watch = CompileWatcher()
         self._admit()
         self._absorb(self.executor.poll())
         if self.wait_mode == "all" and self.executor.pending():
@@ -449,6 +550,7 @@ class SearchService:
         ready = [(s, rem) for s, rem in ready if s.observations]
         if not ready:
             self._absorb(self.executor.poll())
+            self.stats["plan_compile_misses"] += compile_watch.misses()
             return 0
 
         # the model math of the step: two planned rounds over the query
@@ -486,6 +588,7 @@ class SearchService:
         for s in list(self.active.values()):
             if s.state == READY and len(s.observations) >= s.cfg.max_iters:
                 self._finish(s)
+        self.stats["plan_compile_misses"] += compile_watch.misses()
         return advanced
 
     def _ready_sessions(self) -> List[Tuple[_Session, List[int]]]:

@@ -273,6 +273,24 @@ def test_impl_routing_resolves_auto_by_backend_and_size():
     assert np.all(np.isfinite(np.asarray(mu_a)))
 
 
+def test_impl_routing_env_threshold_read_at_resolve_time(monkeypatch):
+    # the env override must be honoured even when set AFTER import —
+    # it used to be frozen into the module constant at import time, so
+    # services configured via env after ``import repro`` silently kept
+    # the default threshold
+    monkeypatch.setenv("REPRO_PALLAS_AUTO_MIN_CELLS", "16")
+    assert resolve_impl("auto", cells=16, backend="tpu") == "pallas"
+    assert resolve_impl("auto", cells=15, backend="tpu") == "xla"
+    monkeypatch.setenv("REPRO_PALLAS_AUTO_MIN_CELLS", str(1 << 30))
+    assert resolve_impl("auto", cells=16, backend="tpu") == "xla"
+    # an explicit min_cells argument still beats the env var
+    monkeypatch.setenv("REPRO_PALLAS_AUTO_MIN_CELLS", "1")
+    assert resolve_impl("auto", cells=2, backend="tpu",
+                        min_cells=4) == "xla"
+    monkeypatch.delenv("REPRO_PALLAS_AUTO_MIN_CELLS")
+    assert resolve_impl("auto", cells=1 << 30, backend="tpu") == "pallas"
+
+
 # -- RGPE weights ------------------------------------------------------------
 
 

@@ -11,9 +11,9 @@ from repro.core import (BOConfig, Constraint, Objective, Repository,
 from repro.core.acquisition import mc_ehvi_batched, mc_ehvi_nd
 from repro.core.gp import (batched_posterior, batched_sample, fit_gp,
                            fit_gp_batched, gp_loo_samples)
-from repro.core.plan import (EhviQuery, LooSampleQuery, PlanExecutor,
-                             PosteriorDrawQuery, PosteriorQuery,
-                             SampleQuery, StepPlanner)
+from repro.core.plan import (CohortLimits, EhviQuery, LooSampleQuery,
+                             PlanExecutor, PosteriorDrawQuery,
+                             PosteriorQuery, SampleQuery, StepPlanner)
 from repro.serve.search_service import SearchRequest, SearchService
 from repro.simdata import make_emulator
 
@@ -73,7 +73,7 @@ def test_golden_bucketing_sample_loo_ehvi_draw():
     b = _by_kind(plan)
     assert b[("sample", (32, 6, 3))].pads == \
         {"n_pad": 16, "q_pad": 8, "m_pad": 2, "lanes": 2}
-    assert b[("loo", (32, 6))].pads == {"n_pad": 8, "lanes": 1}
+    assert b[("loo", (32, 6))].pads == {"n_pad": 8, "l_pad": 1, "lanes": 1}
     # 3 staircase points -> 4 segments (already a power of two)
     assert b[("ehvi", (2, 16, 9))].pads == \
         {"k_pad": 4, "q_pad": 16, "l_pad": 1, "lanes": 1}
@@ -200,6 +200,74 @@ def test_ehvi_observed_shape_mismatch_rejected():
         StepPlanner().plan([EhviQuery((sa, sa, sa),
                                       rng.random((3, 2)) * 4.0,
                                       np.array([4.0, 4.0, 4.0]))])
+
+
+def test_enumerate_buckets_covers_live_plan_signatures():
+    """The enumerated vocabulary is CLOSED over a cohort within its
+    limits: every bucket a live mixed plan produces (draw excepted —
+    unjitted) has a launch signature among the enumerated ones, with
+    exact key dims normalised to their padded values."""
+    rng = np.random.default_rng(11)
+    st = _stack(rng, (5, 9))                       # m=2, n<=9, d=3
+    xt = rng.random((6, 3))
+    keys = jax.random.split(jax.random.PRNGKey(0), 2)
+    gp = fit_gp(rng.random((6, 3)), rng.random(6))
+    obs2 = np.array([[1.0, 3.0], [2.0, 2.0], [3.0, 1.0]])
+    sa = rng.normal(2.0, 1.0, (16, 9))
+    planner = StepPlanner()
+    plan = planner.plan([
+        PosteriorQuery(st, rng.random((25, 3))),
+        SampleQuery(st, xt, keys, 32),
+        LooSampleQuery(gp, jax.random.PRNGKey(1), 32),
+        EhviQuery((sa, sa + 1.0), obs2, np.array([4.0, 4.0])),
+        PosteriorDrawQuery(np.zeros(9), np.ones(9), 0.0, 1.0,
+                           jax.random.PRNGKey(2), 16),
+    ])
+    limits = CohortLimits(d=3, q_grid=25, max_obs=9, max_lanes=2,
+                          n_samples=(32,), n_mc=(16,),
+                          n_objectives=(2,), max_ehvi_boxes=4)
+    enumerated = planner.enumerate_buckets(limits)
+    sigs = {planner.launch_signature(b) for b in enumerated}
+    # no duplicate shapes, no unjitted draw buckets in the vocabulary
+    assert len(sigs) == len(enumerated)
+    assert all(b.kind != "draw" for b in enumerated)
+    for b in plan.buckets:
+        if b.kind == "draw":
+            continue
+        assert planner.launch_signature(b) in sigs, (b.kind, b.key, b.pads)
+    # signature normalisation: the live sample bucket keys the EXACT
+    # grid length (6) but signs at the padded one (8), equal to its
+    # enumerated twin
+    live = {b.kind: b for b in plan.buckets}
+    assert live["sample"].key == (32, 6, 3)
+    assert planner.launch_signature(live["sample"]) == \
+        ("sample", 32, 8, 3, 16, 2)
+
+
+def test_plan_executor_fused_posterior_matches_default():
+    """PlanExecutor(fused_posterior=True) routes posterior buckets
+    through the fused kernel dispatch: (mu, var) match the vmapped
+    baseline, and the in-kernel EI head matches the eager
+    expected_improvement chain the default path uses."""
+    rng = np.random.default_rng(12)
+    st_a = _stack(rng, (5, 9))
+    st_b = _stack(rng, (4,))
+    grid = rng.random((13, 3))
+
+    def queries():
+        return [PosteriorQuery(st_a, grid),
+                PosteriorQuery(st_b, grid, best=0.4)]
+
+    planner = StepPlanner()
+    base = PlanExecutor().execute(planner.plan(queries()))
+    fused = PlanExecutor(fused_posterior=True).execute(
+        planner.plan(queries()))
+    assert len(base[0]) == 2 and len(base[1]) == 3
+    for b, f in zip(base, fused):
+        assert len(b) == len(f)
+        for want, got in zip(b, f):
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       atol=TOL)
 
 
 # -- plan stats on a live mixed cohort ---------------------------------------

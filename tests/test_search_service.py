@@ -724,3 +724,88 @@ def test_run_search_moo_routes_through_service():
         objectives=[Objective("cost"), Objective("energy")], n_mc=16))
     (c,) = svc.run()
     assert _result_fingerprint(c.result) == _result_fingerprint(r)
+
+
+# -- compile-once steady state -----------------------------------------------
+
+
+def test_precompile_zero_recompile_under_mixed_tenant_churn():
+    """200 scheduling steps of a churning SO + 2-objective +
+    3-objective cohort after an AOT bucket precompile: every planned
+    launch signature lands in the precompiled vocabulary and no
+    tracked launch recompiles (``plan_compile_misses`` stays 0)."""
+    import dataclasses
+
+    from repro.core.plan import CohortLimits, StepPlanner
+
+    class RecordingPlanner(StepPlanner):
+        def __init__(self):
+            super().__init__()
+            self.signatures = set()
+
+        def plan(self, queries):
+            p = super().plan(queries)
+            for b in p.buckets:
+                if b.kind != "draw":        # unjitted, no vocabulary
+                    self.signatures.add(self.launch_signature(b))
+            return p
+
+    space = dataclasses.replace(SPACE, name="scout-mini",
+                                configs=SPACE.configs[:8])
+    repo = Repository()
+    rng = np.random.default_rng(5)
+    for u in range(2):
+        for ci in rng.choice(len(space), 6, replace=False):
+            repo.add_run(EMU.make_record(f"anon-{u}", WID,
+                                         space.configs[ci], rng))
+    planner = RecordingPlanner()
+    svc = SearchService(repo, slots=3, planner=planner)
+    # lane bound: 8 target lanes (sum of the cohort's measures) plus
+    # 8 RGPE jobs x up to 3 support bases fused into the same buckets
+    limits = CohortLimits(d=space.all_encoded().shape[1], q_grid=8,
+                          max_obs=8, max_lanes=32, n_samples=(32,),
+                          n_mc=(8,), n_objectives=(2, 3),
+                          max_ehvi_boxes=256)
+    pre = svc.precompile(limits)
+    assert pre["buckets"] == len(svc.precompiled_signatures)
+    assert svc.stats["precompiled_buckets"] == pre["buckets"]
+    assert svc.stats["precompile_compiles"] == pre["compiles"]
+
+    cfg = BOConfig(n_init=2, max_iters=5, rgpe_samples=32)
+    cons = [Constraint("runtime", EMU.runtime_target(WID, 50))]
+
+    def submit(i):
+        runner = lambda c: EMU.run(WID, c, rng=None)
+        if i % 3 == 0:
+            svc.submit(SearchRequest(
+                space, runner, Objective("cost"), cons, method="karasu",
+                bo_config=cfg, seed=100 + i,
+                share_as="tenant-0" if i == 0 else None))
+        elif i % 3 == 1:
+            svc.submit(SearchRequest(
+                space, runner, None, cons, method="karasu",
+                bo_config=cfg, seed=100 + i,
+                objectives=[Objective("cost"), Objective("energy")],
+                n_mc=8))
+        else:
+            svc.submit(SearchRequest(
+                space, runner, None, (), method="karasu",
+                bo_config=cfg, seed=100 + i,
+                objectives=[Objective("cost"), Objective("energy"),
+                            Objective("runtime")], n_mc=8))
+
+    submitted = 0
+    for _ in range(200):
+        while len(svc.active) + len(svc.queue) < 3:
+            submit(submitted)
+            submitted += 1
+        svc.step()
+    assert svc.stats["steps"] == 200
+    # churn actually happened: tenants retired and were replaced
+    assert len(svc.done) >= 10
+    # every planned launch came from the precompiled vocabulary...
+    assert {"posterior", "sample", "loo", "ehvi"} <= \
+        {sig[0] for sig in planner.signatures}
+    assert planner.signatures <= svc.precompiled_signatures
+    # ...and no tracked launch compiled while serving
+    assert svc.stats["plan_compile_misses"] == 0

@@ -39,3 +39,92 @@ def test_engine_continuous_batching():
     assert sorted(c.rid for c in done) == [0, 1, 2, 3]
     for c in done:
         assert len(c.tokens) == 6
+
+
+def _greedy_reference(bundle, params, prompt, max_new, max_len=48):
+    """Batch-1, exact-length prefill greedy decode — the oracle for the
+    engine's padded-prefill + masked-decode path."""
+    caches = bundle.init_cache(params, 1, max_len, dtype=jnp.float32)
+    toks = jnp.asarray(prompt, jnp.int32)[None]
+    pos = jnp.arange(toks.shape[1], dtype=jnp.int32)[None]
+    logits, caches = bundle.decode_step(params, caches, toks, pos)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    p = toks.shape[1]
+    while len(out) < max_new:
+        logits, caches = bundle.decode_step(
+            params, caches, jnp.asarray([[out[-1]]], jnp.int32),
+            jnp.full((1, 1), p, jnp.int32))
+        out.append(int(jnp.argmax(logits[0, -1])))
+        p += 1
+    return out
+
+
+def test_engine_prefill_buckets_stabilise_compiles():
+    """Prompt lengths land in round-to-8 buckets: one prefill compile
+    per bucket (not per length) and exactly one decode compile, while
+    the padded path still matches exact-length greedy decode."""
+    cfg = get_smoke_config("minitron-8b")
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(bundle, params, slots=2, max_len=48)
+    rng = np.random.default_rng(1)
+    prompts = {rid: rng.integers(0, cfg.vocab, size=n)
+               for rid, n in enumerate((3, 5, 7, 9, 12))}
+    for rid, p in prompts.items():
+        eng.submit(Request(rid, p, 4))
+    done = {c.rid: c.tokens for c in eng.run(max_steps=200)}
+    assert sorted(done) == [0, 1, 2, 3, 4]
+    # lengths 3/5/7 share the 8-bucket, 9/12 the 16-bucket
+    stats = eng.compile_stats()
+    assert stats["prefill_compiles"] == 2
+    assert stats["decode_compiles"] == 1
+    for rid, p in prompts.items():
+        assert done[rid] == _greedy_reference(bundle, params, p, 4)
+
+
+def test_engine_freed_slot_cache_rows_stay_bit_identical():
+    """After a slot frees, ongoing decode steps must not write into its
+    cache rows: they stay bit-identical until re-admission."""
+    cfg = get_smoke_config("minitron-8b")
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(bundle, params, slots=2, max_len=48)
+    rng = np.random.default_rng(2)
+    eng.submit(Request(0, rng.integers(0, cfg.vocab, size=5), 2))
+    eng.submit(Request(1, rng.integers(0, cfg.vocab, size=5), 10))
+    eng._admit()
+    while not eng.done:
+        eng._step_decode()
+    (freed,) = eng.free
+    snapshot = [np.asarray(leaf[:, freed]).copy()
+                for leaf in jax.tree.leaves(eng.caches)]
+    for _ in range(4):
+        eng._step_decode()
+    for before, leaf in zip(snapshot, jax.tree.leaves(eng.caches)):
+        np.testing.assert_array_equal(before, np.asarray(leaf[:, freed]))
+    # the other tenant kept decoding the whole time
+    done = eng.run(max_steps=50)
+    assert sorted(c.rid for c in done) == [0, 1]
+
+
+def test_engine_ring_window_guard_skips_padding():
+    """With a sliding-window (ring) cache, prompts whose padded length
+    would exceed the window keep exact-length prefill — padding there
+    would evict still-needed rows — and still decode correctly."""
+    cfg = get_smoke_config("h2o-danube-1.8b")
+    assert cfg.window and cfg.window < 24
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(bundle, params, slots=2, max_len=48)
+    rng = np.random.default_rng(3)
+    short = rng.integers(0, cfg.vocab, size=5)       # pads to 8
+    long_a = rng.integers(0, cfg.vocab, size=cfg.window + 1)
+    long_b = rng.integers(0, cfg.vocab, size=cfg.window + 2)
+    for rid, p in enumerate((short, long_a, long_b)):
+        eng.submit(Request(rid, p, 3))
+    done = {c.rid: c.tokens for c in eng.run(max_steps=100)}
+    assert sorted(done) == [0, 1, 2]
+    # short bucketed (1 compile), both long prompts exact (2 compiles)
+    assert eng.compile_stats()["prefill_compiles"] == 3
+    for rid, p in enumerate((short, long_a, long_b)):
+        assert done[rid] == _greedy_reference(bundle, params, p, 3)
