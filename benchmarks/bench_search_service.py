@@ -40,7 +40,8 @@ reference):
 With ``--smoke`` it runs a tiny mixed cohort (4 tenants: naive SO,
 karasu SO, karasu 2-objective, karasu 3-objective; 4 iterations) end to
 end — twice: the first pass compiles every launch shape, the repeat
-must hit the compile-once steady state (``plan_compile_misses == 0``)
+must hit the compile-once steady state (``plan_compile_misses == 0``,
+with the executor dispatching the fused EHVI bucket launch)
 — and asserts completion AND that the query-plan layer actually
 engaged (``plan_batches <= plan_queries`` with fusion on every leg:
 posterior/sample/EHVI) — the CPU CI hook that fails fast when the
@@ -52,12 +53,14 @@ fusion regressions are diagnosable from the run page.
 With ``--steady-state`` it measures the compile-once serving claim
 directly: per-step latency of a churning mixed cohort served cold vs
 after ``SearchService.precompile`` (asserting zero tracked recompiles
-post-precompile), the fused posterior+EI bucket kernel vs the vmapped
-XLA chain, and the fused launch's static roofline numbers:
+post-precompile), the fused posterior+EI and fused
+draw+EHVI bucket kernels vs the vmapped XLA chains, and the fused
+launches' static roofline numbers:
   search_service_steady_cold_step / _warm_step  — us per service step
   search_service_precompile                     — one-time warmup cost
   search_service_steady_misses                  — must be 0
   fused_posterior_launch / _vs_vmapped_speedup / _roofline_intensity
+  fused_ehvi_launch / _vs_vmapped_speedup / _roofline_intensity
 """
 from __future__ import annotations
 
@@ -271,8 +274,12 @@ def moo_mixed() -> None:
 
 def _smoke_cohort(sp, tenants, repo, targets, max_iters):
     """The 4-tenant mixed cohort smoke() measures, as a reusable run:
-    returns (service, completions, elapsed seconds)."""
-    svc = SearchService(repo, slots=4)
+    returns (service, completions, elapsed seconds). The executor runs
+    with ``fused_ehvi=True`` so the zero-recompile assertion covers the
+    fused draw+EHVI bucket launch, not just the vmapped chain."""
+    from repro.core.plan import PlanExecutor
+    svc = SearchService(repo, slots=4,
+                        plan_executor=PlanExecutor(fused_ehvi=True))
     wid0, wid1, wid2 = tenants[:3]
     svc.submit(SearchRequest(
         sp, C.profile_fn(wid0, 0), Objective("cost"),
@@ -409,6 +416,81 @@ def _fused_kernel_numbers() -> None:
            f"dominant={dominant}")
 
 
+def _fused_ehvi_numbers() -> None:
+    """The fused draw+EHVI bucket kernel vs the two-launch chain it
+    replaces (eager draw combine -> vmapped box launch, with the raw-
+    scale draw tensor round-tripping through HBM between them), plus
+    static roofline numbers. ``hlo_stats.analyze`` counts dot flops
+    only and the EHVI reduction is dot-free, so the analytic
+    elementwise min/max/clip/product work is added on top — the honest
+    number for a kernel whose arithmetic never touches the MXU."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.acquisition import _ehvi_box_launch
+    from repro.core.plan import _draw_launch
+    from repro.kernels.fused_ehvi.ops import _fused_ehvi_launch
+    from repro.launch.hlo_stats import analyze
+    from repro.launch.mesh import MESH_HARDWARE
+
+    l, d, s, q, k = 8, 2, 64, 512, 64
+    rng = np.random.default_rng(0)
+    corners = np.sort(rng.random((l, k, d)).astype(np.float32), axis=1)
+    los = jnp.asarray(corners)
+    his = jnp.asarray(np.concatenate(
+        [corners[:, 1:], np.full((l, 1, d), np.inf, np.float32)], axis=1))
+    refs = jnp.ones((l, d), jnp.float32) * 2.0
+    mu = jnp.asarray(rng.normal(size=(l, d, q)), jnp.float32)
+    var = jnp.asarray(rng.uniform(0.1, 1.0, (l, d, q)), jnp.float32)
+    y_mean = jnp.zeros((l, d), jnp.float32)
+    y_std = jnp.ones((l, d), jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(0), l * d)
+    draw = jax.vmap(lambda kk: jax.random.normal(kk, (s, q)))
+
+    def fused():
+        eps = draw(keys).reshape(l, d, s, q)
+        return _fused_ehvi_launch(los, his, refs, mu, var, y_mean,
+                                  y_std, eps, impl="xla")
+
+    def vmapped():
+        ps = _draw_launch(keys, mu.reshape(l * d, q), var.reshape(l * d, q),
+                          jnp.ones((l * d,)), jnp.zeros((l * d,)),
+                          n_mc=s).reshape(l, d, s, q)
+        return _ehvi_box_launch(los, his, refs, ps)
+
+    fused().block_until_ready()
+    vmapped().block_until_ready()
+    reps = 20
+    t0 = time.time()
+    for _ in range(reps):
+        fused().block_until_ready()
+    fused_s = (time.time() - t0) / reps
+    t0 = time.time()
+    for _ in range(reps):
+        vmapped().block_until_ready()
+    vmap_s = (time.time() - t0) / reps
+    C.emit("fused_ehvi_launch", fused_s * 1e6, f"l{l}s{s}q{q}k{k}")
+    C.emit("fused_ehvi_vs_vmapped_speedup", 0.0,
+           f"{vmap_s / fused_s:.2f}")
+
+    eps = draw(keys).reshape(l, d, s, q)
+    h = analyze(_fused_ehvi_launch.lower(
+        los, his, refs, mu, var, y_mean, y_std, eps,
+        impl="xla").compile().as_text())
+    # ~6 elementwise ops per (dim, box, sample, candidate) cell: min,
+    # max, sub, clip, product-accumulate, sum-accumulate
+    ew_flops = 6.0 * l * d * s * q * k
+    # HBM floor: eps in, boxes in, acquisition out (f32)
+    ew_bytes = 4.0 * (l * d * s * q + 2 * l * k * d + l * q)
+    flops = h["dot_flops"] + ew_flops
+    bytes_ = max(h["dot_bytes"], ew_bytes)
+    compute_s = flops / MESH_HARDWARE["peak_flops_bf16"]
+    memory_s = bytes_ / MESH_HARDWARE["hbm_bw"]
+    dominant = "compute" if compute_s >= memory_s else "memory"
+    C.emit("fused_ehvi_roofline_intensity", flops / bytes_,
+           f"dominant={dominant}")
+
+
 def steady_state() -> None:
     """Compile-once serving (the ISSUE-6 acceptance scenario): per-step
     latency of a churning mixed SO + 2-objective + 3-objective cohort
@@ -473,10 +555,17 @@ def steady_state() -> None:
 
     steps = {"ci": 40, "full": 200}.get(C.SCALE, 40)
 
-    cold = SearchService(fresh_repo(), slots=3)
+    from repro.core.plan import PlanExecutor
+
+    # both services dispatch the fused EHVI launch, so the cold/warm
+    # contrast isolates precompile (and the zero-miss assertion covers
+    # the fused vocabulary)
+    cold = SearchService(fresh_repo(), slots=3,
+                         plan_executor=PlanExecutor(fused_ehvi=True))
     cold_times = run_steps(cold, steps)
 
-    warm = SearchService(fresh_repo(), slots=3)
+    warm = SearchService(fresh_repo(), slots=3,
+                         plan_executor=PlanExecutor(fused_ehvi=True))
     # lane bound: 8 target lanes (the cohort's measures) + 8 RGPE jobs
     # x up to 3 support bases fused into the same posterior buckets
     limits = CohortLimits(d=sp.all_encoded().shape[1], q_grid=len(sp),
@@ -498,6 +587,7 @@ def steady_state() -> None:
     C.emit("search_service_steady_misses", 0.0,
            str(warm.stats["plan_compile_misses"]))
     _fused_kernel_numbers()
+    _fused_ehvi_numbers()
 
 
 def main() -> None:

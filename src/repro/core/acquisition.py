@@ -88,12 +88,18 @@ def _hv_2d(front: np.ndarray, ref: np.ndarray) -> float:
 
 
 def pareto_front(points: np.ndarray) -> np.ndarray:
-    """Non-dominated subset (minimization)."""
+    """Non-dominated subset (minimization), first occurrence per
+    distinct point. The domination check alone keeps every copy of a
+    repeated observation (a point never strictly dominates its twin),
+    so the explicit dedup is what stops reported fronts from carrying
+    duplicate rows."""
     keep = []
     for i, p in enumerate(points):
         dominated = np.any(np.all(points <= p, axis=1)
                            & np.any(points < p, axis=1))
-        if not dominated:
+        duplicate = i > 0 and bool(
+            np.any(np.all(points[:i] == p, axis=1)))
+        if not dominated and not duplicate:
             keep.append(i)
     return points[keep]
 
@@ -304,8 +310,7 @@ def _ehvi_box_block(los, his, refs, ps):
     return jnp.sum(vol, axis=-1)
 
 
-@jax.jit
-def _ehvi_box_launch(los, his, refs, ps):
+def _ehvi_box_eval(los, his, refs, ps):
     """Per-lane box-decomposition EHVI, any objective count. los/his:
     (L, K, D) box bounds of each lane's non-dominated region (padding
     boxes have lo = hi = +inf, contributing exactly zero volume); refs:
@@ -313,13 +318,21 @@ def _ehvi_box_launch(los, his, refs, ps):
     volume a point p adds is, per box, the product over objectives of
     (overlap of [p_d, ref_d] with the box's d-extent) — the staircase
     launch this generalises is the D=2 case (segments are boxes with
-    lo_1 = -inf). Past ``EHVI_BOX_CHUNK`` boxes (the planner pads K to
-    a chunk multiple there) the box axis runs as a scan of fixed-size
-    blocks, so peak memory never scales with front depth."""
+    lo_1 = -inf). Past ``EHVI_BOX_CHUNK`` boxes the box axis runs as a
+    scan of fixed-size blocks, so peak memory never scales with front
+    depth; direct callers may bypass the planner's chunk-multiple
+    padding, so a trailing partial block is padded here with zero-volume
+    boxes rather than reshaped away."""
     l, k, d = los.shape
     if k <= EHVI_BOX_CHUNK:
         return jnp.mean(_ehvi_box_block(los, his, refs, ps), axis=1)
-    nc = k // EHVI_BOX_CHUNK
+    pad = (-k) % EHVI_BOX_CHUNK
+    if pad:
+        los = jnp.pad(los, ((0, 0), (0, pad), (0, 0)),
+                      constant_values=jnp.inf)
+        his = jnp.pad(his, ((0, 0), (0, pad), (0, 0)),
+                      constant_values=jnp.inf)
+    nc = (k + pad) // EHVI_BOX_CHUNK
     los_c = jnp.moveaxis(los.reshape(l, nc, EHVI_BOX_CHUNK, d), 1, 0)
     his_c = jnp.moveaxis(his.reshape(l, nc, EHVI_BOX_CHUNK, d), 1, 0)
 
@@ -330,6 +343,14 @@ def _ehvi_box_launch(los, his, refs, ps):
     init = jnp.zeros(ps.shape[:1] + ps.shape[2:], ps.dtype)   # (L, S, q)
     acc, _ = jax.lax.scan(body, init, (los_c, his_c))
     return jnp.mean(acc, axis=1)
+
+
+_ehvi_box_launch = jax.jit(_ehvi_box_eval)
+# donated twin for the plan executor: every argument is host-assembled
+# per step (np.stack of padded boxes/draws), so nothing aliases a
+# session-cached buffer and donation is unconditionally safe here
+_ehvi_box_launch_donated = jax.jit(_ehvi_box_eval,
+                                   donate_argnums=(0, 1, 2, 3))
 
 
 def _normalize_ehvi_job(job) -> Tuple[Tuple[np.ndarray, ...], np.ndarray,

@@ -161,7 +161,9 @@ class KarasuContext:
     def score_ensembles(jobs: Sequence[WeightJob], *,
                         impl: str = "xla", fuse_samples: bool = True,
                         sample_counters: Optional[dict] = None,
-                        planner: Optional[StepPlanner] = None) -> List:
+                        planner: Optional[StepPlanner] = None,
+                        plan_executor: Optional[PlanExecutor] = None
+                        ) -> List:
         """RGPE weights for every queued (tenant, measure) ensemble of a
         scheduling round in ONE padded ranking-loss launch, with every
         job's support-sample draw emitted as ``SampleQuery`` /
@@ -177,7 +179,8 @@ class KarasuContext:
         return compute_weights_multi(jobs, impl=impl,
                                      fuse_samples=fuse_samples,
                                      sample_counters=sample_counters,
-                                     planner=planner)
+                                     planner=planner,
+                                     plan_executor=plan_executor)
 
 
 def _target_runs(observations) -> List[RunRecord]:

@@ -392,6 +392,16 @@ def _batched_posterior(log_ls, log_sf, x, mask, chol, alpha, xq,
     return jax.vmap(one)(log_ls, log_sf, x, mask, chol, alpha, xq)
 
 
+# Donating twin: the plan executor rebuilds the stacked observation-
+# cache buffers (x, mask, chol, alpha, grid) every step, so on backends
+# where the executor pins donation they are handed back to XLA for the
+# solve intermediates. Hyperparameter rows stay un-donated (tiny, and
+# shared with the watcher's bucket accounting).
+_batched_posterior_donated = jax.jit(
+    _batched_posterior.__wrapped__, static_argnames=("impl",),
+    donate_argnums=(2, 3, 4, 5, 6))
+
+
 def batched_posterior(bgp: BatchedGP, xq: jnp.ndarray, *, impl: str = "xla"
                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Posterior mean/variance of every model, standardised scale.
@@ -492,6 +502,14 @@ def _batched_sample_launch(log_ls, log_sf, x, mask, chol, alpha, xq, eps,
     return mu[:, None, :] + eps * jnp.sqrt(var)[:, None, :]
 
 
+# Donating twin of the sample launch: same buffers as the posterior
+# twin plus the per-step eps tensor (drawn fresh each round, never
+# session-cached, so always safe to hand back).
+_batched_sample_launch_donated = jax.jit(
+    _batched_sample_launch.__wrapped__, static_argnames=("impl",),
+    donate_argnums=(2, 3, 4, 5, 6, 7))
+
+
 def batched_sample_multi(
     queries, *,
     impl: str = "auto", round_to: Optional[int] = None,
@@ -547,6 +565,12 @@ def _batched_loo_launch(chol, alpha, y, eps):
 
     mu, var = jax.vmap(one)(chol, alpha, y)
     return mu[:, None, :] + eps * jnp.sqrt(var)[:, None, :]
+
+
+# Donating twin: every LOO argument is stacked fresh per scoring round
+# (jnp.stack always copies), so all four may be donated.
+_batched_loo_launch_donated = jax.jit(
+    _batched_loo_launch.__wrapped__, donate_argnums=(0, 1, 2, 3))
 
 
 def loo_sample_multi(

@@ -67,10 +67,13 @@ import numpy as np
 from repro.kernels.routing import resolve_impl
 
 from .acquisition import (EHVI_BOX_CHUNK, _ehvi_box_launch,
-                          expected_improvement, nondominated_boxes,
-                          pareto_front)
-from .gp import (GP, BatchedGP, _batched_loo_launch, _batched_posterior,
-                 _batched_sample_launch, _pad_stack_obs, fit_gp_batched)
+                          _ehvi_box_launch_donated, expected_improvement,
+                          nondominated_boxes, pareto_front)
+from .gp import (GP, BatchedGP, _batched_loo_launch,
+                 _batched_loo_launch_donated, _batched_posterior,
+                 _batched_posterior_donated, _batched_sample_launch,
+                 _batched_sample_launch_donated, _pad_stack_obs,
+                 fit_gp_batched)
 
 # -- the one home of the shape policy ---------------------------------------
 OBS_ROUND_TO = 8        # observation axis pads to multiples of this
@@ -135,14 +138,34 @@ class PosteriorDrawQuery:
 
 @dataclasses.dataclass(frozen=True)
 class EhviQuery:
-    """MC expected hypervolume improvement of per-objective raw-scale
-    draws against a session's observed front. ``samples``: one (S, q)
-    array per objective (any count >= 2); ``observed``: (n, n_obj);
-    ``ref``: (n_obj,). Result: (q,) numpy."""
-    samples: Tuple[Any, ...]
+    """MC expected hypervolume improvement against a session's observed
+    front, in one of two equivalent forms sharing a bucket:
+
+    **Sample form** (``samples`` set): one (S, q) raw-scale draw array
+    per objective (any count >= 2) — the draws already ran (e.g. as a
+    ``PosteriorDrawQuery`` round).
+
+    **Posterior form** (``samples=None``): the draw is deferred into the
+    EHVI launch itself. ``mu``/``var``: one (q,) standardised posterior
+    row per objective; ``y_mean``/``y_std``: per-objective scalars;
+    ``keys``: one PRNG key per objective; ``n_mc``: draw count. The
+    launch consumes ``normal(keys[i], (n_mc, q))`` and the exact
+    ``(mu + eps * sqrt(var)) * y_std + y_mean`` affine of
+    ``_draw_launch``, so both forms produce bit-identical streams — the
+    fused executor skips the separate draw round (and its (S, q) HBM
+    round-trip per objective) without perturbing results.
+
+    ``observed``: (n, n_obj); ``ref``: (n_obj,). Result: (q,) numpy."""
+    samples: Optional[Tuple[Any, ...]]
     observed: Any
     ref: Any
     owner: Any = None
+    mu: Optional[Tuple[Any, ...]] = None
+    var: Optional[Tuple[Any, ...]] = None
+    y_mean: Optional[Tuple[float, ...]] = None
+    y_std: Optional[Tuple[float, ...]] = None
+    keys: Optional[Tuple[Any, ...]] = None
+    n_mc: Optional[int] = None
 
 
 # ---------------------------------------------------------------------------
@@ -272,6 +295,9 @@ class StepPlanner:
             return "draw", (int(query.n_mc),
                             int(np.shape(query.mu)[0]))
         if isinstance(query, EhviQuery):
+            if query.samples is None:   # posterior form: draw deferred
+                return "ehvi", (len(query.mu), int(query.n_mc),
+                                int(np.shape(query.mu[0])[0]))
             s_shape = np.shape(query.samples[0])
             return "ehvi", (len(query.samples), int(s_shape[0]),
                             int(s_shape[1]))
@@ -482,6 +508,21 @@ def _draw_launch(keys, mu, var, y_std, y_mean, n_mc: int):
     return sm * y_std[:, None, None] + y_mean[:, None, None]
 
 
+def _materialise_ehvi_draws(query, s: int, q: int):
+    """Raw-scale draws of a posterior-form ``EhviQuery`` on the vmapped
+    (non-fused) path: one ``_draw_launch`` over the query's objectives,
+    consuming the same per-objective keys the fused kernel would — so
+    the two executors' EHVI rows agree to float roundoff."""
+    keys = jnp.stack([jnp.asarray(k) for k in query.keys])
+    parts = [jnp.stack([jnp.asarray(a, jnp.float32) for a in t])
+             for t in (query.mu, query.var)]
+    scal = [jnp.asarray(np.asarray(t, np.float32)) for t in
+            (query.y_std, query.y_mean)]
+    draws = _draw_launch(keys, parts[0], parts[1], scal[0], scal[1],
+                         n_mc=s)
+    return [draws[d] for d in range(draws.shape[0])]
+
+
 class PlanExecutor:
     """Executes a ``StepPlan``: one fused launch per bucket, results
     returned in query order. Scatter: any query whose ``owner`` is
@@ -492,16 +533,35 @@ class PlanExecutor:
 
     ``fused_posterior=True`` dispatches posterior buckets to the fused
     ``kernels.fused_posterior`` launch (masked Cholesky-solve ->
-    posterior -> EI in one kernel, stack buffers donated on TPU)
-    instead of the vmapped-XLA ``_batched_posterior`` chain — the
-    default stays the vmapped path, which doubles as the fused kernel's
-    parity baseline. Results are identical up to float roundoff either
-    way; queries carrying ``best`` additionally get the EI row."""
+    posterior -> EI in one kernel) instead of the vmapped-XLA
+    ``_batched_posterior`` chain; ``fused_ehvi=True`` likewise
+    dispatches EHVI buckets to ``kernels.fused_ehvi`` (per-lane draw
+    affine + box reduction in one kernel) instead of the vmapped
+    ``_ehvi_box_launch``. The defaults stay the vmapped paths, which
+    double as the fused kernels' parity baselines. Results are
+    identical up to float roundoff either way; queries carrying
+    ``best`` additionally get the EI row.
+
+    ``donate`` picks the donating jitted twins for every bucket launch
+    (fused or vmapped): the per-step-rebuilt buffers — stacked
+    observation caches, padded grids, box decompositions, draws — are
+    handed back to XLA for the launch intermediates. It is resolved
+    ONCE at construction (default: donate on a TPU backend), so
+    ``SearchService.precompile`` warms exactly the jit entry serving
+    dispatches — the two can never disagree via a per-call backend
+    probe. Single-query buckets guard against aliasing: with no
+    lane-padding to force a copy, the "stacked" buffers can BE a
+    session's cached stack arrays, which donation would delete."""
 
     def __init__(self, *, impl: str = "auto",
-                 fused_posterior: bool = False):
+                 fused_posterior: bool = False,
+                 fused_ehvi: bool = False,
+                 donate: Optional[bool] = None):
         self.impl = impl
         self.fused_posterior = fused_posterior
+        self.fused_ehvi = fused_ehvi
+        self.donate = (jax.default_backend() == "tpu" if donate is None
+                       else bool(donate))
 
     def execute(self, plan: StepPlan, *, counters: Optional[dict] = None,
                 impl: Optional[str] = None) -> List[Any]:
@@ -558,10 +618,22 @@ class PlanExecutor:
                 for a in parts]
         return parts
 
+    def _fresh_parts(self, queries, parts):
+        """Aliasing guard for donated launches: a single-query bucket's
+        "stacked" parts come out of ``jnp.concatenate([x])`` /
+        ``jnp.asarray``, which RETURN the input when shapes already
+        match — i.e. the session's cached stack buffers themselves.
+        Donating those would delete live cache state, so copy them
+        first. Multi-query buckets always concatenate (a real copy)."""
+        if self.donate and len(queries) == 1:
+            parts = [jnp.array(p, copy=True) for p in parts]
+        return parts
+
     def _exec_posterior(self, bucket, queries, plan, impl):
         q, d = bucket.key
         n_pad, m_pad = bucket.pads["n_pad"], bucket.pads["m_pad"]
-        parts = self._stack_parts(queries, n_pad, q, d)
+        parts = self._fresh_parts(
+            queries, self._stack_parts(queries, n_pad, q, d))
         r_impl = resolve_impl(impl, cells=m_pad * q * n_pad)
         if self.fused_posterior:
             from repro.kernels.fused_posterior import fused_launch_fn
@@ -573,10 +645,13 @@ class PlanExecutor:
                          0.0 if query.best is None else float(query.best),
                          jnp.float32) for query in queries])
             parts = self._pad_lanes(parts + [best], m_pad)
-            mu, var, ei = fused_launch_fn()(*parts, impl=r_impl)
+            mu, var, ei = fused_launch_fn(donate=self.donate)(
+                *parts, impl=r_impl)
         else:
             parts = self._pad_lanes(parts, m_pad)
-            mu, var = _batched_posterior(*parts, impl=r_impl)
+            launch = (_batched_posterior_donated if self.donate
+                      else _batched_posterior)
+            mu, var = launch(*parts, impl=r_impl)
             ei = None
         out, off = [], 0
         for query in queries:
@@ -595,7 +670,8 @@ class PlanExecutor:
         n_samples, q, d = bucket.key
         n_pad, q_pad, m_pad = (bucket.pads["n_pad"], bucket.pads["q_pad"],
                                bucket.pads["m_pad"])
-        parts = self._stack_parts(queries, n_pad, q, d, q_pad=q_pad)
+        parts = self._fresh_parts(
+            queries, self._stack_parts(queries, n_pad, q, d, q_pad=q_pad))
         keys_cat = jnp.concatenate(
             [jnp.asarray(query.keys) for query in queries])
         # exact-shape draws (one dispatch for the bucket), THEN pad: the
@@ -607,7 +683,9 @@ class PlanExecutor:
             eps = jnp.pad(eps, ((0, 0), (0, 0), (0, q_pad - q)))
         parts = self._pad_lanes(parts + [eps], m_pad)
         r_impl = resolve_impl(impl, cells=m_pad * q_pad * n_pad)
-        s = _batched_sample_launch(*parts, impl=r_impl)
+        launch = (_batched_sample_launch_donated if self.donate
+                  else _batched_sample_launch)
+        s = launch(*parts, impl=r_impl)
         out, off = [], 0
         for query in queries:
             out.append(s[off:off + query.stack.m, :, :q])
@@ -637,7 +715,11 @@ class PlanExecutor:
         parts = self._pad_lanes(
             [jnp.stack(chols), jnp.stack(alphas), jnp.stack(ys), eps],
             bucket.pads["l_pad"])
-        s = _batched_loo_launch(*parts)
+        # every LOO part is stacked fresh above (jnp.stack always
+        # copies), so donation needs no single-query guard here
+        launch = (_batched_loo_launch_donated if self.donate
+                  else _batched_loo_launch)
+        s = launch(*parts)
         return [s[j, :, :n] for j in range(len(queries))]
 
     def _exec_draw(self, bucket, queries, plan, impl):
@@ -649,10 +731,10 @@ class PlanExecutor:
         return [draws[j] for j in range(len(queries))]
 
     def _exec_ehvi(self, bucket, queries, plan, impl):
-        n_obj, _s, q = bucket.key
+        n_obj, s, q = bucket.key
         k_pad, q_pad, l_pad = (bucket.pads["k_pad"], bucket.pads["q_pad"],
                                bucket.pads["l_pad"])
-        los, his, refs, ps = [], [], [], []
+        los, his, refs = [], [], []
         for i, query in zip(bucket.indices, queries):
             lo, hi = plan.prep[i]
             pad = k_pad - lo.shape[0]
@@ -662,13 +744,83 @@ class PlanExecutor:
             his.append(np.pad(hi, ((0, pad), (0, 0)),
                               constant_values=np.inf))
             refs.append(np.asarray(query.ref, np.float32))
+        if self.fused_ehvi:
+            return self._exec_ehvi_fused(bucket, queries, los, his, refs,
+                                         impl)
+        ps = []
+        for query in queries:
+            samples = (query.samples if query.samples is not None
+                       else _materialise_ehvi_draws(query, s, q))
             # +inf candidates gain nothing and are sliced off below
             ps.append(np.stack(
                 [np.pad(np.asarray(sm, np.float32),
                         ((0, 0), (0, q_pad - q)), constant_values=np.inf)
-                 for sm in query.samples]))
+                 for sm in samples]))
         parts = [jnp.asarray(np.stack(a).astype(np.float32))
                  for a in (los, his, refs, ps)]
         parts = self._pad_lanes(parts, l_pad)
-        out = _ehvi_box_launch(*parts)
+        # all four parts are host-assembled fresh every step (np.stack ->
+        # device transfer), so donation is unconditionally alias-safe
+        launch = (_ehvi_box_launch_donated if self.donate
+                  else _ehvi_box_launch)
+        out = launch(*parts)
+        return [np.asarray(out[j])[:q] for j in range(len(queries))]
+
+    def _exec_ehvi_fused(self, bucket, queries, los, his, refs, impl):
+        """One ``kernels.fused_ehvi`` launch for the bucket: the draw
+        affine runs inside the kernel, so the (L, D, S, q) raw-scale
+        draw tensor never round-trips through HBM. Sample-form queries
+        still fuse via the identity affine (mu = 0, var = 1, y = eps):
+        the kernel then reproduces their precomputed draws exactly."""
+        from repro.kernels.fused_ehvi import fused_ehvi_launch_fn
+        n_obj, s, q = bucket.key
+        k_pad, q_pad, l_pad = (bucket.pads["k_pad"], bucket.pads["q_pad"],
+                               bucket.pads["l_pad"])
+        pq = q_pad - q
+        # exact-shape draws for every posterior-form lane of the bucket
+        # in ONE dispatch — normal(key, (n_mc, q)) per objective, the
+        # identical stream _draw_launch and the per-session loop consume
+        key_rows = [jnp.asarray(k) for query in queries
+                    if query.samples is None for k in query.keys]
+        eps_all = (jax.vmap(lambda k: jax.random.normal(k, (s, q)))(
+            jnp.stack(key_rows)) if key_rows else None)
+        mus, vars_, yms, yss, epss = [], [], [], [], []
+        off = 0
+        for query in queries:
+            if query.samples is None:
+                # padded candidates carry mu = +inf / var = 0: their
+                # draws land at +inf and gain nothing
+                mus.append(np.pad(
+                    np.stack([np.asarray(m, np.float32)
+                              for m in query.mu]),
+                    ((0, 0), (0, pq)), constant_values=np.inf))
+                vars_.append(np.pad(
+                    np.stack([np.asarray(v, np.float32)
+                              for v in query.var]), ((0, 0), (0, pq))))
+                yms.append(np.asarray(query.y_mean, np.float32))
+                yss.append(np.asarray(query.y_std, np.float32))
+                eps = eps_all[off:off + n_obj]
+                off += n_obj
+                if pq:
+                    eps = jnp.pad(eps, ((0, 0), (0, 0), (0, pq)))
+                epss.append(eps)
+            else:
+                # identity affine; the +inf pad rides on the samples
+                mus.append(np.zeros((n_obj, q_pad), np.float32))
+                vars_.append(np.ones((n_obj, q_pad), np.float32))
+                yms.append(np.zeros((n_obj,), np.float32))
+                yss.append(np.ones((n_obj,), np.float32))
+                epss.append(jnp.asarray(np.stack(
+                    [np.pad(np.asarray(sm, np.float32),
+                            ((0, 0), (0, pq)), constant_values=np.inf)
+                     for sm in query.samples])))
+        parts = [jnp.asarray(np.stack(a).astype(np.float32))
+                 for a in (los, his, refs, mus, vars_, yms, yss)]
+        parts.append(jnp.stack(epss))
+        parts = self._pad_lanes(parts, l_pad)
+        r_impl = resolve_impl(impl, cells=l_pad * s * q_pad * k_pad)
+        # every argument is rebuilt per step (host-assembled stacks,
+        # fresh draws), so the donating twin is alias-safe here too
+        out = fused_ehvi_launch_fn(donate=self.donate)(*parts,
+                                                       impl=r_impl)
         return [np.asarray(out[j])[:q] for j in range(len(queries))]

@@ -168,6 +168,7 @@ def compute_weights_multi(
     fuse_samples: bool = True,
     sample_counters: Optional[dict] = None,
     planner: Optional[StepPlanner] = None,
+    plan_executor: Optional[PlanExecutor] = None,
 ) -> List[jnp.ndarray]:
     """Score MANY ensembles with ONE padded ranking-loss launch.
 
@@ -184,8 +185,10 @@ def compute_weights_multi(
     ``LooSampleQuery`` per target — and ONE planned ``PlanExecutor``
     round runs one launch per (S, q, d) / (S, n) bucket, the same
     planner a ``SearchService`` step routes its grid posteriors
-    through (pass ``planner`` to share policy; default policy
-    otherwise). Draw streams are identical to the per-job
+    through (pass ``planner`` / ``plan_executor`` to share policy and
+    launch dispatch — a service with donating or fused launches pins
+    them there; defaults otherwise). Draw streams are identical to the
+    per-job
     ``batched_sample`` / ``gp_loo_samples`` loops
     (``fuse_samples=False``), so weights agree to float roundoff.
     ``sample_counters`` (flat ``launches``/``queries``) reports the
@@ -211,8 +214,10 @@ def compute_weights_multi(
                   [LooSampleQuery(job.target, keys[-1], job.n_samples)
                    for _, job, keys in live]
         nested: dict = {}
-        res = PlanExecutor(impl=impl).execute(planner.plan(queries),
-                                              counters=nested)
+        executor = (plan_executor if plan_executor is not None
+                    else PlanExecutor(impl=impl))
+        res = executor.execute(planner.plan(queries), counters=nested,
+                               impl=impl)
         s_bases, s_tars = res[:len(live)], res[len(live):]
         flatten_counters(nested, sample_counters, ("sample", "loo"))
     else:

@@ -1,0 +1,6 @@
+from .fused import fused_ehvi_pallas
+from .ops import fused_ehvi, fused_ehvi_launch_fn
+from .ref import fused_ehvi_ref
+
+__all__ = ["fused_ehvi", "fused_ehvi_ref", "fused_ehvi_pallas",
+           "fused_ehvi_launch_fn"]

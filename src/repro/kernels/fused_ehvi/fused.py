@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: fused posterior draws -> box-decomposition EHVI.
+
+The MOO counterpart of ``kernels.fused_posterior``: the (n_obj, S, q)
+EHVI bucket of the query plan previously ran as an unjitted draw
+combine (one affine per lane) plus the vmapped box launch, with the
+(L, D, S, q) raw-scale draw tensor round-tripping through HBM between
+them. This kernel keeps one lane x one candidate block resident in
+VMEM: it materialises the block's draws into scratch once, then
+accumulates the overlap-volume product over fixed-size box blocks, so
+peak memory is bounded by (S, bq, bk) and never by front depth.
+
+Grid (L, q_pad // bq): each program owns one MOO lane and one block of
+``bq`` candidates. The query plan's exact-padding contract does all the
+masking for free: padding boxes have lo = hi = +inf (every overlap
+clips to zero), padded candidates carry mu = +inf / var = 0 (their
+draws land at +inf and gain nothing), padded objective slots are never
+read (the dim loop is static over the real objective count), padded
+lanes repeat lane 0 and are discarded by the executor.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _round_up(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def _ehvi_kernel(los_ref, his_ref, refs_ref, mu_ref, var_ref, ym_ref,
+                 ys_ref, eps_ref, out_ref, p_scr, acc_scr, *,
+                 d: int, s: int, bk: int, nb: int):
+    # raw-scale draws of this candidate block, all objectives, into VMEM
+    # scratch: p = (mu + eps * sqrt(var)) * y_std + y_mean — the exact
+    # affine of core.plan._draw_launch, so fusing the draw into the
+    # kernel never changes a lane's stream
+    for dim in range(d):
+        mu_d = mu_ref[0, dim, :]                       # (bq,)
+        sd = jnp.sqrt(var_ref[0, dim, :])
+        e = eps_ref[0, dim * s:(dim + 1) * s, :]       # (S, bq)
+        p_scr[dim * s:(dim + 1) * s, :] = (
+            (mu_d[None, :] + e * sd[None, :]) * ys_ref[0, dim]
+            + ym_ref[0, dim])
+    acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def body(b, _):
+        vol = None
+        for dim in range(d):
+            lo = los_ref[0, dim, pl.ds(b * bk, bk)]    # (bk,)
+            hi = his_ref[0, dim, pl.ds(b * bk, bk)]
+            ref = refs_ref[0, dim]
+            p = p_scr[dim * s:(dim + 1) * s, :]        # (S, bq)
+            w = jnp.clip(jnp.minimum(hi, ref)[None, None, :]
+                         - jnp.maximum(lo[None, None, :], p[:, :, None]),
+                         0.0, None)                    # (S, bq, bk)
+            vol = w if vol is None else vol * w
+        acc_scr[...] += jnp.sum(vol, axis=-1)
+        return 0
+
+    jax.lax.fori_loop(0, nb, body, 0)
+    out_ref[0, :] = jnp.sum(acc_scr[...], axis=0) * (1.0 / s)
+
+
+def fused_ehvi_pallas(los, his, refs, mu, var, y_mean, y_std, eps, *,
+                      block_q: int = 128, block_k: int = 128,
+                      interpret: bool = False):
+    """(L, q) EHVI rows; arguments exactly as ``fused_ehvi_ref``.
+
+    ``block_q`` x ``block_k`` bound the kernel's VMEM high-water mark
+    (the volume intermediate is (S, block_q, block_k) f32)."""
+    l, k, d = los.shape
+    s = eps.shape[2]
+    q = mu.shape[2]
+    bq = min(block_q, q)
+    pq = (-q) % bq
+    # sublane/lane alignment for the compiled TPU kernel only: the
+    # objective axis pads to the f32 sublane tile, the box axis to a
+    # lane-aligned block multiple; padded objective slots are never read
+    # and padded boxes are +inf (zero volume) by the plan's contract
+    d_pad = _round_up(d, 8) if not interpret else d
+    bk = (min(block_k, _round_up(k, 128)) if not interpret
+          else min(block_k, k))
+    pk = (-k) % bk
+
+    los_t = jnp.swapaxes(los, 1, 2)    # (L, D, K): box reads = lane slices
+    his_t = jnp.swapaxes(his, 1, 2)
+    if pk:
+        los_t = jnp.pad(los_t, ((0, 0), (0, 0), (0, pk)),
+                        constant_values=jnp.inf)
+        his_t = jnp.pad(his_t, ((0, 0), (0, 0), (0, pk)),
+                        constant_values=jnp.inf)
+    if d_pad > d:
+        los_t = jnp.pad(los_t, ((0, 0), (0, d_pad - d), (0, 0)),
+                        constant_values=jnp.inf)
+        his_t = jnp.pad(his_t, ((0, 0), (0, d_pad - d), (0, 0)),
+                        constant_values=jnp.inf)
+        refs = jnp.pad(refs, ((0, 0), (0, d_pad - d)))
+        mu = jnp.pad(mu, ((0, 0), (0, d_pad - d), (0, 0)))
+        var = jnp.pad(var, ((0, 0), (0, d_pad - d), (0, 0)))
+        y_mean = jnp.pad(y_mean, ((0, 0), (0, d_pad - d)))
+        y_std = jnp.pad(y_std, ((0, 0), (0, d_pad - d)))
+        eps = jnp.pad(eps, ((0, 0), (0, d_pad - d), (0, 0), (0, 0)))
+    if pq:
+        mu = jnp.pad(mu, ((0, 0), (0, 0), (0, pq)),
+                     constant_values=jnp.inf)
+        var = jnp.pad(var, ((0, 0), (0, 0), (0, pq)))
+        eps = jnp.pad(eps, ((0, 0), (0, 0), (0, 0), (0, pq)))
+    k_pad, q_pad = k + pk, q + pq
+    eps2 = eps.reshape(l, d_pad * s, q_pad)
+
+    out = pl.pallas_call(
+        functools.partial(_ehvi_kernel, d=d, s=s, bk=bk, nb=k_pad // bk),
+        grid=(l, q_pad // bq),
+        in_specs=[
+            pl.BlockSpec((1, d_pad, k_pad), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, d_pad, k_pad), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, d_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, d_pad, bq), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, d_pad, bq), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, d_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, d_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, d_pad * s, bq), lambda i, j: (i, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bq), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((l, q_pad), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((d_pad * s, bq), jnp.float32),  # raw-scale draws
+            pltpu.VMEM((s, bq), jnp.float32),          # per-sample volume
+        ],
+        interpret=interpret,
+    )(los_t, his_t, refs, mu, var, y_mean, y_std, eps2)
+    return out[:, :q]

@@ -1,0 +1,68 @@
+"""XLA reference for the fused posterior-draw + box-EHVI bucket kernel.
+
+Self-contained on purpose (``kernels/*`` never import ``core``): the
+draw affine and the box overlap-volume reduction are restated here and
+pinned by tests to ``core.plan._draw_launch`` +
+``core.acquisition._ehvi_box_launch`` and the f64 ``mc_ehvi_nd``
+oracle, so a drift in either copy fails loudly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BOX_CHUNK = 1024   # must match core.acquisition.EHVI_BOX_CHUNK
+
+
+def _box_block(los, his, refs, ps):
+    """Summed overlap volume of one block of boxes. los/his: (L, B, D);
+    refs: (L, D); ps: (L, D, S, q) raw-scale draws. -> (L, S, q)."""
+    vol = None
+    for dim in range(los.shape[-1]):
+        lo = los[:, None, None, :, dim]                # (L, 1, 1, B)
+        hi = his[:, None, None, :, dim]
+        ref = refs[:, dim][:, None, None, None]
+        p = ps[:, dim, :, :, None]                     # (L, S, q, 1)
+        w = jnp.clip(jnp.minimum(hi, ref) - jnp.maximum(lo, p), 0.0, None)
+        vol = w if vol is None else vol * w
+    return jnp.sum(vol, axis=-1)
+
+
+def fused_ehvi_ref(los, his, refs, mu, var, y_mean, y_std, eps):
+    """(L, q) EHVI rows of one padded (n_obj, S, q) bucket, draws fused.
+
+    ``los``/``his``: (L, K, D) box decompositions of each lane's
+    non-dominated region (padding boxes have lo = hi = +inf and
+    contribute exactly zero volume); ``refs``: (L, D); ``mu``/``var``:
+    (L, D, q) standardised posterior rows (+inf mean / zero variance at
+    padded candidates, whose draws then land at +inf and gain nothing);
+    ``y_mean``/``y_std``: (L, D) per-objective de-standardisation;
+    ``eps``: (L, D, S, q) unit normals drawn at each lane's exact
+    candidate count and zero-padded. The draw affine matches
+    ``core.plan._draw_launch`` term for term — (mu + eps * sqrt(var)) *
+    y_std + y_mean — so fusing the draw into the EHVI launch never
+    changes a lane's stream. Past ``BOX_CHUNK`` boxes the box axis runs
+    as a scan of fixed-size blocks (remainders padded with zero-volume
+    boxes), bounding peak memory like the vmapped launch."""
+    ps = mu[:, :, None, :] + eps * jnp.sqrt(var)[:, :, None, :]
+    ps = ps * y_std[:, :, None, None] + y_mean[:, :, None, None]
+    l, k, d = los.shape
+    if k <= BOX_CHUNK:
+        return jnp.mean(_box_block(los, his, refs, ps), axis=1)
+    pad = (-k) % BOX_CHUNK
+    if pad:
+        los = jnp.pad(los, ((0, 0), (0, pad), (0, 0)),
+                      constant_values=jnp.inf)
+        his = jnp.pad(his, ((0, 0), (0, pad), (0, 0)),
+                      constant_values=jnp.inf)
+    nc = (k + pad) // BOX_CHUNK
+    los_c = jnp.moveaxis(los.reshape(l, nc, BOX_CHUNK, d), 1, 0)
+    his_c = jnp.moveaxis(his.reshape(l, nc, BOX_CHUNK, d), 1, 0)
+
+    def body(acc, blk):
+        lo_i, hi_i = blk
+        return acc + _box_block(lo_i, hi_i, refs, ps), None
+
+    init = jnp.zeros(ps.shape[:1] + ps.shape[2:], ps.dtype)   # (L, S, q)
+    acc, _ = jax.lax.scan(body, init, (los_c, his_c))
+    return jnp.mean(acc, axis=1)

@@ -58,7 +58,12 @@ _fused_launch_donated = jax.jit(
     static_argnames=("impl",), donate_argnums=(2, 3, 4, 5, 6))
 
 
-def fused_launch_fn():
-    """The jitted launch for the current backend (donating on TPU)."""
-    return (_fused_launch_donated if jax.default_backend() == "tpu"
-            else _fused_launch)
+def fused_launch_fn(donate=None):
+    """The jitted launch entry: donating when ``donate`` (default: on a
+    TPU backend), plain otherwise. Callers resolve the choice once and
+    hold onto it — the plan executor pins it at construction so its
+    precompile and its serving dispatch can never disagree on which
+    entry's jit cache gets warmed."""
+    if donate is None:
+        donate = jax.default_backend() == "tpu"
+    return _fused_launch_donated if donate else _fused_launch

@@ -1,10 +1,11 @@
 """Jit-cache compile accounting for the query-plan launch vocabulary.
 
 The compile-once steady state is a claim about a FINITE set of jitted
-launch functions: the fused fit, the per-kind plan launches, and the
-fused posterior kernel. This module registers exactly that set and
-counts their compiles via jit-cache sizes, so a service can assert
-"zero recompiles after precompile" instead of hoping for it.
+launch functions: the fused fit, the per-kind plan launches (each with
+its buffer-donating twin), and the fused posterior / fused EHVI
+kernels. This module registers exactly that set and counts their
+compiles via jit-cache sizes, so a service can assert "zero recompiles
+after precompile" instead of hoping for it.
 
 Counting by cache-size delta (rather than a global XLA compile hook) is
 deliberate: a step also runs eager ops at genuinely varying shapes —
@@ -28,17 +29,24 @@ def tracked_launches() -> Dict[str, object]:
     """name -> jitted launch fn, lazily imported (this module must stay
     importable before the heavy model modules are)."""
     from repro.core import acquisition, gp
+    from repro.kernels.fused_ehvi import ops as fused_ehvi_ops
     from repro.kernels.fused_posterior import ops as fused_ops
 
     return {
         "fit": gp._fit_batched,
         "chol_alpha": gp._batched_chol_alpha,
         "posterior": gp._batched_posterior,
+        "posterior_donated": gp._batched_posterior_donated,
         "sample": gp._batched_sample_launch,
+        "sample_donated": gp._batched_sample_launch_donated,
         "loo": gp._batched_loo_launch,
+        "loo_donated": gp._batched_loo_launch_donated,
         "ehvi": acquisition._ehvi_box_launch,
+        "ehvi_donated": acquisition._ehvi_box_launch_donated,
         "fused_posterior": fused_ops._fused_launch,
         "fused_posterior_donated": fused_ops._fused_launch_donated,
+        "fused_ehvi": fused_ehvi_ops._fused_ehvi_launch,
+        "fused_ehvi_donated": fused_ehvi_ops._fused_ehvi_launch_donated,
     }
 
 

@@ -456,12 +456,27 @@ class SearchService:
                     for _ in range(pads["l_pad"])], {}
         if kind == "ehvi":
             n_obj, s, q_pad = key
-            samples = tuple(np.zeros((s, q_pad), np.float32)
-                            for _ in range(n_obj))
             box = (np.zeros((1, n_obj)), np.ones((1, n_obj)))
-            queries = [EhviQuery(samples, np.ones((1, n_obj)),
-                                 np.full((n_obj,), 2.0))
-                       for _ in range(pads["l_pad"])]
+            if self.plan_executor.fused_ehvi:
+                # posterior form: the dummy must drive the SAME fused
+                # launch (and eps draw dispatch) serving will, at the
+                # full lane count
+                queries = [EhviQuery(
+                    None, np.ones((1, n_obj)), np.full((n_obj,), 2.0),
+                    mu=tuple(np.zeros((q_pad,), np.float32)
+                             for _ in range(n_obj)),
+                    var=tuple(np.ones((q_pad,), np.float32)
+                              for _ in range(n_obj)),
+                    y_mean=(0.0,) * n_obj, y_std=(1.0,) * n_obj,
+                    keys=tuple(jax.random.PRNGKey(0)
+                               for _ in range(n_obj)),
+                    n_mc=s) for _ in range(pads["l_pad"])]
+            else:
+                samples = tuple(np.zeros((s, q_pad), np.float32)
+                                for _ in range(n_obj))
+                queries = [EhviQuery(samples, np.ones((1, n_obj)),
+                                     np.full((n_obj,), 2.0))
+                           for _ in range(pads["l_pad"])]
             return queries, {i: box for i in range(len(queries))}
         raise ValueError(f"unknown bucket kind {kind!r}")
 
@@ -713,7 +728,7 @@ class SearchService:
             ws = KarasuContext.score_ensembles(
                 [rgpe_jobs[i][3] for i in idxs], impl=impl,
                 fuse_samples=self.fuse_samples, sample_counters=sc,
-                planner=self.planner)
+                planner=self.planner, plan_executor=self.plan_executor)
             self.stats["rgpe_batches"] += 1
             self.stats["rgpe_jobs"] += len(idxs)
             self.stats["sample_batches"] += sc.get("launches", 0)
@@ -820,6 +835,8 @@ class SearchService:
         if not self.fuse_samples:
             return {s.rid: self._moo_acquisition(s, posts[s.rid], rem)
                     for s, rem in moo_ready}
+        if self.plan_executor.fused_ehvi:
+            return self._moo_phase_fused(moo_ready, posts)
 
         # -- collect / plan / execute / scatter: the draw round --------------
         samples: Dict[int, List[Optional[np.ndarray]]] = {
@@ -848,6 +865,42 @@ class SearchService:
             observed, ref = self._moo_front_ref(s)
             ehvi_queries.append(EhviQuery(
                 tuple(samples[s.rid]), observed, ref,
+                owner=lambda acq, s=s, rem=rem:
+                    out.__setitem__(s.rid, self._apply_pof(
+                        s, posts[s.rid], np.asarray(rem), acq))))
+        ec: Dict[str, Dict[str, int]] = {}
+        self.plan_executor.execute(self.planner.plan(ehvi_queries),
+                                   counters=ec)
+        self._count_plan(ec)
+        return out
+
+    def _moo_phase_fused(self, moo_ready: List[Tuple[_Session, List[int]]],
+                         posts: Dict[int, Dict[str, Dict]]
+                         ) -> Dict[int, np.ndarray]:
+        """The fused-EHVI MOO round: ONE planned round instead of two —
+        each session emits a posterior-form ``EhviQuery`` and the draw
+        affine runs inside the ``kernels.fused_ehvi`` launch, so the
+        per-objective (S, q) draw tensors never round-trip through HBM.
+        Keys derive per (MOO_EHVI, iteration, objective) exactly as the
+        draw round does, so switching the executor to ``fused_ehvi``
+        never changes a session's draws or its acquisition."""
+        out: Dict[int, np.ndarray] = {}
+        ehvi_queries = []
+        for s, rem in moo_ready:
+            idx = np.asarray(rem)
+            it = len(s.observations)
+            observed, ref = self._moo_front_ref(s)
+            ps = [posts[s.rid][obj.name] for obj in s.objectives]
+            ehvi_queries.append(EhviQuery(
+                None, observed, ref,
+                mu=tuple(p["mu"][idx] for p in ps),
+                var=tuple(p["var"][idx] for p in ps),
+                y_mean=tuple(float(p["y_mean"]) for p in ps),
+                y_std=tuple(float(p["y_std"]) for p in ps),
+                keys=tuple(
+                    derive_key(s.key, KEY_PURPOSE_MOO_EHVI, it, oi)
+                    for oi in range(len(s.objectives))),
+                n_mc=s.req.n_mc,
                 owner=lambda acq, s=s, rem=rem:
                     out.__setitem__(s.rid, self._apply_pof(
                         s, posts[s.rid], np.asarray(rem), acq))))

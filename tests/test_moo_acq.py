@@ -70,9 +70,10 @@ def test_hv_2d_edge_cases():
 def test_pareto_front_edge_cases():
     # empty input -> empty front, shape preserved
     assert pareto_front(np.empty((0, 2))).shape == (0, 2)
-    # duplicates: neither strictly dominates the other, both kept
+    # duplicates: neither strictly dominates the other, but a reported
+    # front must not carry the same point twice — first occurrence wins
     dup = np.array([[1.0, 2.0], [1.0, 2.0]])
-    assert len(pareto_front(dup)) == 2
+    assert len(pareto_front(dup)) == 1
     # all points dominated by one
     pts = np.array([[0.0, 0.0], [1.0, 2.0], [3.0, 1.0], [2.0, 2.0]])
     front = pareto_front(pts)
@@ -278,3 +279,59 @@ def test_moo_search_three_objectives_runs_and_finds_pareto():
     front = r.meta["pareto_front"]
     assert front.ndim == 2 and front.shape[1] == 3 and len(front) >= 1
     np.testing.assert_array_equal(front, pareto_of_result(r, objectives))
+
+
+def test_ehvi_box_launch_non_multiple_chunk_remainder():
+    """Regression: a box count past EHVI_BOX_CHUNK that is NOT a chunk
+    multiple (direct callers bypass the planner's padding) must pad the
+    trailing block with zero-volume boxes, not reshape it away — the
+    result matches the single-block reduction over the same boxes."""
+    from repro.core.acquisition import EHVI_BOX_CHUNK, _ehvi_box_launch
+
+    rng = np.random.default_rng(11)
+    l, d, s, q = 1, 2, 4, 3
+    k = EHVI_BOX_CHUNK + 5
+    corners = np.sort(rng.random((l, k + 1, d)), axis=1)
+    los = jnp.asarray(corners[:, :-1], jnp.float32)
+    his = jnp.asarray(corners[:, 1:], jnp.float32)
+    refs = jnp.full((l, d), 2.0, jnp.float32)
+    ps = jnp.asarray(rng.random((l, d, s, q)), jnp.float32)
+    got = np.asarray(_ehvi_box_launch(los, his, refs, ps))
+    # unchunked f64 oracle over the same boxes
+    want = np.zeros((l, q))
+    for li in range(l):
+        vol = np.ones((s, q, k))
+        for dim in range(d):
+            w = np.clip(
+                np.minimum(np.asarray(his, np.float64)[li, :, dim], 2.0)
+                [None, None]
+                - np.maximum(np.asarray(los, np.float64)[li, :, dim]
+                             [None, None],
+                             np.asarray(ps, np.float64)[li, dim]
+                             [:, :, None]), 0.0, None)
+            vol = vol * w
+        want[li] = vol.sum(axis=-1).mean(axis=0)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+    assert np.all(np.isfinite(got))
+
+
+def test_pareto_of_observations_dedupes_repeated_observations():
+    """Regression: profiling the same configuration twice (identical
+    measures) must not report the point twice in the front."""
+    from types import SimpleNamespace
+
+    from repro.core.acquisition import pareto_of_observations
+
+    objectives = [Objective("cost"), Objective("energy")]
+    obs = [SimpleNamespace(measures={"cost": 1.0, "energy": 2.0},
+                           metrics={}),
+           SimpleNamespace(measures={"cost": 1.0, "energy": 2.0},
+                           metrics={}),
+           SimpleNamespace(measures={"cost": 2.0, "energy": 1.0},
+                           metrics={}),
+           SimpleNamespace(measures={"cost": 3.0, "energy": 3.0},
+                           metrics={})]
+    front = pareto_of_observations(obs, objectives)
+    assert front.shape == (2, 2)
+    np.testing.assert_array_equal(front,
+                                  [[1.0, 2.0], [2.0, 1.0]])

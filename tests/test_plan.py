@@ -341,3 +341,43 @@ def test_plan_stats_zero_without_fusion():
     assert len(c.result.observations) == 4
     assert svc.stats["plan_batches"] == 0
     assert svc.stats["plan_queries"] == 0
+
+
+def test_posterior_form_ehvi_query_shares_sample_form_bucket():
+    """A posterior-form EhviQuery (mu/var rows + PRNG keys, no
+    materialised samples) must land in the same ``("ehvi", (n_obj, S,
+    q))`` bucket as its sample-form twin — the fused executor relies on
+    mixed buckets, and the AOT vocabulary must not split on form."""
+    rng = np.random.default_rng(9)
+    obs = np.array([[1.0, 3.0], [2.0, 2.0], [3.0, 1.0]])
+    ref = np.array([4.0, 4.0])
+    sa = rng.normal(2.0, 1.0, (16, 9))
+    sample_q = EhviQuery((sa, sa + 1.0), obs, ref)
+    post_q = EhviQuery(
+        None, obs, ref,
+        mu=(rng.normal(size=9), rng.normal(size=9)),
+        var=(rng.uniform(0.1, 1.0, 9), rng.uniform(0.1, 1.0, 9)),
+        y_mean=(0.0, 0.0), y_std=(1.0, 1.0),
+        keys=(jax.random.PRNGKey(0), jax.random.PRNGKey(1)), n_mc=16)
+    planner = StepPlanner()
+    assert planner.bucket_key(post_q) == planner.bucket_key(sample_q) \
+        == ("ehvi", (2, 16, 9))
+    plan = planner.plan([sample_q, post_q])
+    assert plan.stats() == {"batches": 1, "queries": 2}
+    # both forms execute through one launch, fused or vmapped, and agree
+    from repro.core.plan import PlanExecutor
+    outs = {}
+    for name, ex in (("vmapped", PlanExecutor(donate=False)),
+                     ("fused", PlanExecutor(fused_ehvi=True, impl="xla",
+                                            donate=False))):
+        got = []
+        q1 = EhviQuery((sa, sa + 1.0), obs, ref,
+                       owner=lambda r: got.append(np.asarray(r)))
+        q2 = EhviQuery(None, obs, ref, mu=post_q.mu, var=post_q.var,
+                       y_mean=post_q.y_mean, y_std=post_q.y_std,
+                       keys=post_q.keys, n_mc=16,
+                       owner=lambda r: got.append(np.asarray(r)))
+        ex.execute(planner.plan([q1, q2]))
+        outs[name] = got
+    for a, b in zip(outs["vmapped"], outs["fused"]):
+        np.testing.assert_allclose(a, b, atol=1e-5)

@@ -809,3 +809,107 @@ def test_precompile_zero_recompile_under_mixed_tenant_churn():
     assert planner.signatures <= svc.precompiled_signatures
     # ...and no tracked launch compiled while serving
     assert svc.stats["plan_compile_misses"] == 0
+
+
+def test_fused_ehvi_service_matches_default_executor():
+    """A fused-EHVI executor must serve bitwise-identical MOO
+    trajectories to the default vmapped executor: the EHVI queries carry
+    posterior rows + PRNG keys instead of materialised draws, and the
+    kernel applies the exact same derive_key/affine recipe — so the
+    only visible difference is the eliminated draw round."""
+    from repro.core.plan import PlanExecutor
+
+    def run(executor):
+        svc = SearchService(Repository(), slots=3, plan_executor=executor)
+        for s in range(3):
+            svc.submit(_moo_request(20 + s, method="naive"))
+        done = {c.rid: c.result for c in svc.run()}
+        return svc, done
+
+    base_svc, base = run(PlanExecutor(donate=False))
+    fused_svc, fused = run(PlanExecutor(fused_ehvi=True, impl="xla",
+                                        donate=False))
+    assert base.keys() == fused.keys()
+    for rid in base:
+        assert _result_fingerprint(base[rid]) == \
+            _result_fingerprint(fused[rid])
+    # the fused path consumes posterior rows directly: no separate
+    # draw launches, fewer plan rounds, same ehvi bucket accounting
+    assert base_svc.stats["sample_batches"] > 0
+    assert fused_svc.stats["sample_batches"] == 0
+    assert fused_svc.stats["plan_batches"] < base_svc.stats["plan_batches"]
+    assert fused_svc.stats["ehvi_batches"] == base_svc.stats["ehvi_batches"]
+
+
+def test_precompile_zero_recompile_fused_donated_executor():
+    """The churn guarantee must survive the fused + donated executor:
+    precompile walks the same donate/fused launch choices the serving
+    path makes (the donated twins are pinned at executor construction,
+    not resolved per call), so a mixed SO + MOO cohort still hits only
+    precompiled signatures with zero tracked recompiles."""
+    import dataclasses
+
+    from repro.core.plan import CohortLimits, PlanExecutor, StepPlanner
+
+    class RecordingPlanner(StepPlanner):
+        def __init__(self):
+            super().__init__()
+            self.signatures = set()
+
+        def plan(self, queries):
+            p = super().plan(queries)
+            for b in p.buckets:
+                if b.kind != "draw":
+                    self.signatures.add(self.launch_signature(b))
+            return p
+
+    space = dataclasses.replace(SPACE, name="scout-mini",
+                                configs=SPACE.configs[:8])
+    repo = Repository()
+    rng = np.random.default_rng(5)
+    for u in range(2):
+        for ci in rng.choice(len(space), 6, replace=False):
+            repo.add_run(EMU.make_record(f"anon-{u}", WID,
+                                         space.configs[ci], rng))
+    planner = RecordingPlanner()
+    executor = PlanExecutor(fused_posterior=True, fused_ehvi=True,
+                            donate=True, impl="xla")
+    svc = SearchService(repo, slots=3, planner=planner,
+                        plan_executor=executor)
+    limits = CohortLimits(d=space.all_encoded().shape[1], q_grid=8,
+                          max_obs=8, max_lanes=32, n_samples=(32,),
+                          n_mc=(8,), n_objectives=(2, 3),
+                          max_ehvi_boxes=256)
+    svc.precompile(limits)
+
+    cfg = BOConfig(n_init=2, max_iters=5, rgpe_samples=32)
+    cons = [Constraint("runtime", EMU.runtime_target(WID, 50))]
+
+    def submit(i):
+        runner = lambda c: EMU.run(WID, c, rng=None)
+        if i % 3 == 0:
+            svc.submit(SearchRequest(
+                space, runner, Objective("cost"), cons, method="karasu",
+                bo_config=cfg, seed=100 + i))
+        elif i % 3 == 1:
+            svc.submit(SearchRequest(
+                space, runner, None, cons, method="karasu",
+                bo_config=cfg, seed=100 + i,
+                objectives=[Objective("cost"), Objective("energy")],
+                n_mc=8))
+        else:
+            svc.submit(SearchRequest(
+                space, runner, None, (), method="karasu",
+                bo_config=cfg, seed=100 + i,
+                objectives=[Objective("cost"), Objective("energy"),
+                            Objective("runtime")], n_mc=8))
+
+    submitted = 0
+    for _ in range(120):
+        while len(svc.active) + len(svc.queue) < 3:
+            submit(submitted)
+            submitted += 1
+        svc.step()
+    assert len(svc.done) >= 6
+    assert planner.signatures <= svc.precompiled_signatures
+    assert svc.stats["plan_compile_misses"] == 0
