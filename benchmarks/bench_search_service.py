@@ -61,6 +61,19 @@ launches' static roofline numbers:
   search_service_steady_misses                  — must be 0
   fused_posterior_launch / _vs_vmapped_speedup / _roofline_intensity
   fused_ehvi_launch / _vs_vmapped_speedup / _roofline_intensity
+
+With ``--mesh N`` (or REPRO_BENCH_MESH=N) it forces an N-device host
+platform (``--xla_force_host_platform_device_count``, staged before jax
+imports) and measures data-parallel serving: a 64-tenant karasu cohort
+served warm on the single-device executor vs with every bucket's lane
+axis sharded over the N-device ``("data",)`` mesh, asserting the warm
+sharded pass holds ``plan_compile_misses == 0``:
+  search_service_mesh1_step / _mesh<N>_step — us per service step
+  search_service_mesh_scaling               — measured step-time ratio
+  search_service_mesh_misses                — must be 0
+  search_service_mesh*_fit_wall             — fit leg dispatch wall
+``--mesh`` composes with ``--smoke``: the CI mesh leg runs the smoke
+cohort through the sharded executor under REPRO_BENCH_MESH=4.
 """
 from __future__ import annotations
 
@@ -68,6 +81,31 @@ import json
 import os
 import sys
 import time
+
+
+def _parse_mesh_argv() -> int:
+    n = int(os.environ.get("REPRO_BENCH_MESH", "0") or 0)
+    if "--mesh" in sys.argv[1:]:
+        at = sys.argv.index("--mesh")
+        if at + 1 >= len(sys.argv):
+            raise SystemExit("--mesh needs a device-count argument")
+        n = int(sys.argv[at + 1])
+    return n
+
+
+# --mesh N (or REPRO_BENCH_MESH=N) serves the cohort through the
+# data-parallel plan executor on an N-device host platform. XLA reads
+# --xla_force_host_platform_device_count once at backend init, so the
+# flag must be staged into the environment HERE, before the repro
+# imports below pull in jax (external XLA_FLAGS already forcing a
+# device count are respected as-is).
+MESH_N = _parse_mesh_argv()
+if MESH_N > 1 and "jax" not in sys.modules:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{_flags} --xla_force_host_platform_device_count={MESH_N}"
+        ).strip()
 
 import numpy as np
 
@@ -81,6 +119,28 @@ from . import common as C
 
 N_TENANTS = {"ci": 8, "mid": 8, "full": 16}
 MAX_ITERS = {"ci": 10, "mid": 12, "full": 20}
+
+_MESH_CACHE: dict = {}
+
+
+def _mesh():
+    """The benchmark's data mesh: ``Mesh((MESH_N,), ("data",))`` when
+    mesh mode is on, else None (single-device executor). Cached so every
+    service of the run shares ONE mesh object — the sharded launch twins
+    are cached per mesh, and repeat cohorts must re-enter the same jit
+    caches for the compile-once assertions to hold."""
+    if MESH_N <= 1:
+        return None
+    if "mesh" not in _MESH_CACHE:
+        import jax
+        if len(jax.devices()) < MESH_N:
+            raise SystemExit(
+                f"--mesh {MESH_N} needs {MESH_N} devices but the backend "
+                f"has {len(jax.devices())} (is XLA_FLAGS= "
+                f"--xla_force_host_platform_device_count set before jax "
+                f"init?)")
+        _MESH_CACHE["mesh"] = jax.make_mesh((MESH_N,), ("data",))
+    return _MESH_CACHE["mesh"]
 
 
 def _setup(n_tenants: int):
@@ -278,8 +338,10 @@ def _smoke_cohort(sp, tenants, repo, targets, max_iters):
     with ``fused_ehvi=True`` so the zero-recompile assertion covers the
     fused draw+EHVI bucket launch, not just the vmapped chain."""
     from repro.core.plan import PlanExecutor
-    svc = SearchService(repo, slots=4,
-                        plan_executor=PlanExecutor(fused_ehvi=True))
+    mesh = _mesh()
+    svc = SearchService(repo, slots=4, mesh=mesh,
+                        plan_executor=PlanExecutor(fused_ehvi=True,
+                                                   mesh=mesh))
     wid0, wid1, wid2 = tenants[:3]
     svc.submit(SearchRequest(
         sp, C.profile_fn(wid0, 0), Objective("cost"),
@@ -590,6 +652,68 @@ def steady_state() -> None:
     _fused_ehvi_numbers()
 
 
+def mesh_scaling() -> None:
+    """``--mesh N`` acceptance mode: one large karasu cohort served
+    twice per executor — cold (compiling) then warm — on the
+    single-device path and again with every bucket's lane axis sharded
+    over the N-device data mesh. Emits warm per-step wall times for
+    both plus the measured scaling ratio; the warm sharded pass must
+    hold ``plan_compile_misses == 0`` (the sharded jit twins are part
+    of the compile-once vocabulary). The ratio is MEASURED, never
+    asserted: ``--xla_force_host_platform_device_count`` devices share
+    the machine's physical cores, so near-linear scaling appears only
+    on hosts that actually have N cores to back the mesh."""
+    from repro.core.plan import PlanExecutor
+
+    n_tenants = int(os.environ.get("REPRO_BENCH_MESH_TENANTS", "64"))
+    # n_init < max_iters so every tenant runs real BO iterations (init
+    # profiling alone must not satisfy max_iters and finish the session
+    # before the plan layer ever executes)
+    cfg = BOConfig(n_init=2, max_iters=6)
+    sp, tenants, repo, targets = _setup(n_tenants)
+
+    def run_cohort(mesh):
+        svc = SearchService(
+            _fresh_repo(repo), slots=n_tenants, mesh=mesh,
+            plan_executor=PlanExecutor(fused_ehvi=True, mesh=mesh))
+        for t, wid in enumerate(tenants):
+            svc.submit(SearchRequest(
+                sp, C.profile_fn(wid, t), Objective("cost"),
+                [Constraint("runtime", targets[wid])], method="karasu",
+                bo_config=cfg, seed=t))
+        steps = 0
+        t0 = time.time()
+        while svc.active or svc.queue:
+            svc.step()
+            steps += 1
+        return svc, (time.time() - t0) / max(1, steps), steps
+
+    run_cohort(None)                                     # cold: compiles
+    base_svc, base_step, base_steps = run_cohort(None)   # warm, timed
+    assert base_svc.stats["plan_compile_misses"] == 0, base_svc.stats
+    C.emit("search_service_mesh1_step", base_step * 1e6,
+           f"{n_tenants}tenants_{base_steps}steps")
+
+    mesh = _mesh()
+    if mesh is None:          # --mesh 1: single-device numbers only
+        return
+    run_cohort(mesh)                                     # cold: compiles
+    sh_svc, sh_step, sh_steps = run_cohort(mesh)         # warm, timed
+    assert sh_svc.stats["plan_compile_misses"] == 0, sh_svc.stats
+    C.emit(f"search_service_mesh{MESH_N}_step", sh_step * 1e6,
+           f"{n_tenants}tenants_{sh_steps}steps")
+    C.emit("search_service_mesh_scaling", 0.0,
+           f"{base_step / sh_step:.2f}x_over_{MESH_N}dev")
+    C.emit("search_service_mesh_misses", 0.0,
+           str(sh_svc.stats["plan_compile_misses"]))
+    # per-leg dispatch wall split (satellite of the wall counters): how
+    # much of the warm step the fit leg still claims on each path
+    for tag, svc in (("mesh1", base_svc), (f"mesh{MESH_N}", sh_svc)):
+        s = svc.stats
+        C.emit(f"search_service_{tag}_fit_wall", s["fit_wall_s"] * 1e6,
+               f"plan_wall={s['plan_wall_s']:.3f}s")
+
+
 def main() -> None:
     if "--smoke" in sys.argv[1:]:
         smoke()
@@ -597,6 +721,9 @@ def main() -> None:
     if "--steady-state" in sys.argv[1:] or \
             os.environ.get("REPRO_BENCH_STEADY_STATE") == "1":
         steady_state()
+        return
+    if "--mesh" in sys.argv[1:]:
+        mesh_scaling()
         return
     if "--moo" in sys.argv[1:] or \
             os.environ.get("REPRO_BENCH_MOO") == "1":

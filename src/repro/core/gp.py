@@ -271,7 +271,8 @@ def _batched_chol_alpha(log_ls, log_sf, x, y, mask, noise: float):
 def fit_gp_batched(xs: Sequence[np.ndarray], ys: Sequence[np.ndarray], *,
                    noise: float = 0.1, steps: int = 120,
                    n_max: Optional[int] = None, round_to: int = 1,
-                   m_round_pow2: bool = False) -> BatchedGP:
+                   m_round_pow2: bool = False, lane_round_to: int = 1,
+                   launches=None) -> BatchedGP:
     """Fit m GPs in one vmapped Adam/Cholesky pass.
 
     ``xs[i]``: (n_i, d), ``ys[i]``: (n_i,). All models must share d (and
@@ -286,12 +287,23 @@ def fit_gp_batched(xs: Sequence[np.ndarray], ys: Sequence[np.ndarray], *,
     whichever sessions' profiling runs landed form the batch) use this so
     the vmapped fit compiles once per bucket instead of once per cohort
     size. Real models' results are unaffected: vmap lanes are
-    independent."""
+    independent.
+
+    ``lane_round_to`` additionally rounds the model dimension up to a
+    multiple (applied after the pow2 rounding) so the lane axis divides a
+    ``shard_map`` mesh evenly; ``launches`` optionally substitutes a
+    ``(fit, chol_alpha)`` pair of launch twins for the default jitted
+    ones — ``sharded_fit_launches`` builds the shard-mapped pair."""
     m = len(xs)
     if m == 0 or m != len(ys):
         raise ValueError("fit_gp_batched needs >=1 model and len(xs)==len(ys)")
     if m_round_pow2:
         target = 1 << (m - 1).bit_length()
+        xs = list(xs) + [xs[0]] * (target - m)
+        ys = list(ys) + [ys[0]] * (target - m)
+        m = target
+    if lane_round_to > 1 and m % lane_round_to:
+        target = ((m + lane_round_to - 1) // lane_round_to) * lane_round_to
         xs = list(xs) + [xs[0]] * (target - m)
         ys = list(ys) + [ys[0]] * (target - m)
         m = target
@@ -323,11 +335,66 @@ def fit_gp_batched(xs: Sequence[np.ndarray], ys: Sequence[np.ndarray], *,
     xj = jnp.asarray(x)
     yj = jnp.asarray(ysd)
     mj = jnp.asarray(mask)
-    p = _fit_batched(xj, yj, mj, steps=steps, noise=noise)
-    chol, alpha = _batched_chol_alpha(p["ls"], p["sf"], xj, yj, mj, noise)
+    fit_fn, ca_fn = ((_fit_batched, _batched_chol_alpha)
+                     if launches is None else launches)
+    p = fit_fn(xj, yj, mj, steps=steps, noise=noise)
+    chol, alpha = ca_fn(p["ls"], p["sf"], xj, yj, mj, noise)
     return BatchedGP(xj, yj, mj, jnp.asarray(y_mean), jnp.asarray(y_std),
                      p["ls"], p["sf"], noise, chol, alpha,
                      jnp.asarray(ns, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Shard-mapped fit twins: the vmapped Adam fit + Cholesky refresh split
+# over a mesh's data axis (lanes are independent models, so data-parallel
+# splitting is exact). Minted once per (mesh, axis) and registered with
+# ``launch.compile_stats`` so the compile-once accounting covers them.
+# ---------------------------------------------------------------------------
+
+_SHARDED_FIT: dict = {}
+
+
+def sharded_fit_launches(mesh, axis: str = "data"):
+    """``(fit, chol_alpha)`` launch twins of ``_fit_batched`` /
+    ``_batched_chol_alpha`` running under ``shard_map`` over ``axis``.
+
+    Per-lane math is untouched — each device fits its slice of the model
+    stack with the same vmapped program, so results match the unsharded
+    launch up to float roundoff (XLA fuses the per-shard batch size
+    differently, nothing more). ``lr`` is lifted to a static argname:
+    ``shard_map`` bodies cannot close over tracers, and the fit's
+    learning rate is a config constant, never a traced value."""
+    key = (mesh, axis)
+    hit = _SHARDED_FIT.get(key)
+    if hit is not None:
+        return hit
+    from jax.sharding import PartitionSpec
+
+    from repro.distributed import mesh_axis_size, shard_map
+    from repro.launch.compile_stats import register_launch
+    spec = PartitionSpec(axis)
+
+    @partial(jax.jit, static_argnames=("steps", "noise", "lr"))
+    def fit(x, y, mask, steps: int = 120, noise: float = 0.1,
+            lr: float = 0.05):
+        body = partial(_fit_batched.__wrapped__, steps=steps, noise=noise,
+                       lr=lr)
+        return shard_map(body, mesh, in_specs=(spec,) * 3, out_specs=spec,
+                         check_vma=False)(x, y, mask)
+
+    @partial(jax.jit, static_argnames=("noise",))
+    def chol_alpha(log_ls, log_sf, x, y, mask, noise: float):
+        body = partial(_batched_chol_alpha.__wrapped__, noise=noise)
+        return shard_map(body, mesh, in_specs=(spec,) * 5, out_specs=spec,
+                         check_vma=False)(log_ls, log_sf, x, y, mask)
+
+    size = mesh_axis_size(mesh, axis)
+    register_launch(f"fit_sharded_x{size}_{len(_SHARDED_FIT)}", fit)
+    register_launch(f"chol_alpha_sharded_x{size}_{len(_SHARDED_FIT)}",
+                    chol_alpha)
+    pair = (fit, chol_alpha)
+    _SHARDED_FIT[key] = pair
+    return pair
 
 
 def stack_gps(gps: Sequence[GP], n_max: Optional[int] = None, *,

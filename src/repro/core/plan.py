@@ -58,12 +58,16 @@ before any padding, so draw streams are plan-invariant.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
+from repro.distributed import mesh_axis_size, shard_map
 from repro.kernels.routing import resolve_impl
 
 from .acquisition import (EHVI_BOX_CHUNK, _ehvi_box_launch,
@@ -73,7 +77,7 @@ from .gp import (GP, BatchedGP, _batched_loo_launch,
                  _batched_loo_launch_donated, _batched_posterior,
                  _batched_posterior_donated, _batched_sample_launch,
                  _batched_sample_launch_donated, _pad_stack_obs,
-                 fit_gp_batched)
+                 fit_gp_batched, sharded_fit_launches)
 
 # -- the one home of the shape policy ---------------------------------------
 OBS_ROUND_TO = 8        # observation axis pads to multiples of this
@@ -246,13 +250,24 @@ class StepPlanner:
 
     def __init__(self, *, obs_round_to: Optional[int] = None,
                  q_round_to: Optional[int] = None,
-                 m_round_pow2: Optional[bool] = None):
+                 m_round_pow2: Optional[bool] = None,
+                 mesh=None, data_axis: str = "data",
+                 lane_shards: Optional[int] = None):
         self.obs_round_to = (OBS_ROUND_TO if obs_round_to is None
                              else obs_round_to)
         self.q_round_to = (GRID_ROUND_TO if q_round_to is None
                            else q_round_to)
         self.m_round_pow2 = (M_ROUND_POW2 if m_round_pow2 is None
                              else m_round_pow2)
+        # data-parallel execution: with a mesh installed, every fused
+        # lane axis additionally rounds up to a multiple of the mesh's
+        # data-axis size, so shard_map splits each launch evenly across
+        # devices. ``lane_shards`` overrides the divisor directly (for
+        # policy tests on single-device hosts).
+        self.mesh = mesh
+        self.data_axis = data_axis
+        self.lane_shards = (mesh_axis_size(mesh, data_axis)
+                            if lane_shards is None else int(lane_shards))
 
     # -- shared shape policy -------------------------------------------------
     def round_obs(self, n: int) -> int:
@@ -262,7 +277,8 @@ class StepPlanner:
         return _round_up(q, self.q_round_to)
 
     def round_models(self, m: int) -> int:
-        return _pow2(m) if self.m_round_pow2 else m
+        m = _pow2(m) if self.m_round_pow2 else m
+        return _round_up(m, self.lane_shards)
 
     def fit_targets(self, xs, ys, *, noise: float, steps: int = 120,
                     m_round_pow2: Optional[bool] = None) -> BatchedGP:
@@ -271,11 +287,18 @@ class StepPlanner:
         bucketing, same model-axis rule). ``m_round_pow2=False`` opts a
         fixed-size cohort (e.g. single-tenant ``run_search``) out of the
         power-of-two lane padding that only pays off when cohort size
-        varies step to step."""
+        varies step to step. With a mesh installed the fit runs through
+        the shard-mapped launch twins (lane axis split over the data
+        axis), and the lane count rounds to a shard multiple either
+        way."""
+        launches = (sharded_fit_launches(self.mesh, self.data_axis)
+                    if self.mesh is not None and self.lane_shards > 1
+                    else None)
         return fit_gp_batched(
             xs, ys, noise=noise, steps=steps, round_to=self.obs_round_to,
             m_round_pow2=(self.m_round_pow2 if m_round_pow2 is None
-                          else m_round_pow2))
+                          else m_round_pow2),
+            lane_round_to=self.lane_shards, launches=launches)
 
     # -- bucketing -----------------------------------------------------------
     def bucket_key(self, query) -> Tuple[str, Tuple]:
@@ -380,14 +403,11 @@ class StepPlanner:
         return list(range(step, self.round_grid(max_q) + 1, step))
 
     def _lane_pads(self, max_lanes: int) -> List[int]:
-        if not self.m_round_pow2:
-            return list(range(1, max_lanes + 1))
-        out, p = [], 1
-        while p < self.round_models(max_lanes):
-            out.append(p)
-            p <<= 1
-        out.append(p)
-        return out
+        # every fixed point of round_models up to the bound: the pow2
+        # ladder, each rung lifted to a shard multiple when a mesh is
+        # installed (so the enumerated vocabulary IS the sharded one)
+        return sorted({self.round_models(m)
+                       for m in range(1, max_lanes + 1)})
 
     def _box_pads(self, max_boxes: int) -> List[int]:
         out, p = [], 1
@@ -449,26 +469,33 @@ class StepPlanner:
                                  "l_pad": l_pad, "lanes": l_pad}))
         return out
 
-    @staticmethod
-    def launch_signature(bucket: Bucket) -> Tuple:
+    def launch_signature(self, bucket: Bucket) -> Tuple:
         """The jit-cache identity of a bucket's launch: kind plus every
         axis length the compiled program sees (exact key dims that the
         executor pads away are normalised to their padded value, so a
-        live bucket compares equal to its enumerated twin)."""
+        live bucket compares equal to its enumerated twin). Under a
+        mesh the shard count joins the signature — the shard-mapped
+        twin of a shape is a DIFFERENT compiled program than the
+        single-device one, and the precompiled vocabulary must say
+        which family it warmed."""
         k, key, p = bucket.kind, bucket.key, bucket.pads
         if k == "posterior":
-            return ("posterior", key[0], key[1], p["n_pad"], p["m_pad"])
-        if k == "sample":
-            return ("sample", key[0], p["q_pad"], key[2],
-                    p["n_pad"], p["m_pad"])
-        if k == "loo":
-            return ("loo", key[0], p["n_pad"], p["l_pad"])
-        if k == "draw":     # unjitted: exact shapes, no compile identity
-            return ("draw", key[0], key[1], p["lanes"])
-        if k == "ehvi":
-            return ("ehvi", key[0], key[1], p["q_pad"], p["k_pad"],
-                    p["l_pad"])
-        raise ValueError(f"unknown bucket kind {k!r}")
+            sig = ("posterior", key[0], key[1], p["n_pad"], p["m_pad"])
+        elif k == "sample":
+            sig = ("sample", key[0], p["q_pad"], key[2],
+                   p["n_pad"], p["m_pad"])
+        elif k == "loo":
+            sig = ("loo", key[0], p["n_pad"], p["l_pad"])
+        elif k == "draw":   # unjitted: exact shapes, no compile identity
+            sig = ("draw", key[0], key[1], p["lanes"])
+        elif k == "ehvi":
+            sig = ("ehvi", key[0], key[1], p["q_pad"], p["k_pad"],
+                   p["l_pad"])
+        else:
+            raise ValueError(f"unknown bucket kind {k!r}")
+        if self.lane_shards > 1 and k != "draw":
+            sig = sig + (("shards", self.lane_shards),)
+        return sig
 
 
 # ---------------------------------------------------------------------------
@@ -477,13 +504,14 @@ class StepPlanner:
 
 
 def _count(counters: Optional[dict], kind: str, queries: int,
-           lanes: int) -> None:
+           lanes: int, wall_s: float = 0.0) -> None:
     if counters is None:
         return
     c = counters.setdefault(kind, {})
     c["launches"] = c.get("launches", 0) + 1
     c["queries"] = c.get("queries", 0) + queries
     c["lanes"] = c.get("lanes", 0) + lanes
+    c["wall_s"] = c.get("wall_s", 0.0) + wall_s
 
 
 def flatten_counters(nested: dict, counters: Optional[dict],
@@ -496,6 +524,89 @@ def flatten_counters(nested: dict, counters: Optional[dict],
     for kind in kinds:
         for k, v in nested.get(kind, {}).items():
             counters[k] = counters.get(k, 0) + v
+
+
+# -- shard-mapped launch twins ----------------------------------------------
+# One jitted twin per (mesh, kind, donate): the base (unjitted) bucket
+# launch body runs under shard_map with every argument — and every
+# output — split on its leading lane axis over the mesh's data axis.
+# Lane axes are multiples of the shard count by planner policy
+# (``StepPlanner.round_models``), so shapes always divide evenly. Each
+# twin is registered with ``launch.compile_stats`` at construction, so
+# the compile-once accounting (``plan_compile_misses``) covers the
+# sharded vocabulary exactly like the single-device one.
+_SHARDED_LAUNCHES: Dict[Tuple, Any] = {}
+
+
+def _shard_base(kind: str):
+    """(base fn, takes-static-impl, donate_argnums) for one launch kind.
+    Bases are the UNJITTED bodies — the sharded twin re-jits them under
+    its own shard_map wrapper (donating the same per-step-rebuilt
+    buffers as the single-device donating twins)."""
+    if kind == "posterior":
+        return _batched_posterior.__wrapped__, True, (2, 3, 4, 5, 6)
+    if kind == "sample":
+        return _batched_sample_launch.__wrapped__, True, (2, 3, 4, 5, 6, 7)
+    if kind == "loo":
+        return _batched_loo_launch.__wrapped__, False, (0, 1, 2, 3)
+    if kind == "ehvi":
+        from .acquisition import _ehvi_box_eval
+        return _ehvi_box_eval, False, (0, 1, 2, 3)
+    if kind == "fused_posterior":
+        from repro.kernels.fused_posterior.ops import fused_posterior_ei
+        return fused_posterior_ei, True, (2, 3, 4, 5, 6)
+    if kind == "fused_ehvi":
+        from repro.kernels.fused_ehvi.ops import fused_ehvi
+        return fused_ehvi, True, (0, 1, 2, 3, 4, 5, 6, 7)
+    raise ValueError(f"no sharded twin for launch kind {kind!r}")
+
+
+def sharded_bucket_launch(mesh, axis: str, kind: str, donate: bool):
+    """The jitted shard-mapped twin of one bucket launch kind, cached
+    per (mesh, axis, kind, donate) so repeated steps re-enter one jit
+    cache (and ``CompileWatcher`` sees one stable tracked entry)."""
+    cache_key = (mesh, axis, kind, donate)
+    hit = _SHARDED_LAUNCHES.get(cache_key)
+    if hit is not None:
+        return hit
+    from repro.launch.compile_stats import register_launch
+    base, has_impl, donate_nums = _shard_base(kind)
+    spec = PartitionSpec(axis)
+
+    if has_impl:
+        def run(*args, impl: str = "xla"):
+            body = functools.partial(base, impl=impl)
+            return shard_map(body, mesh, in_specs=(spec,) * len(args),
+                             out_specs=spec, check_vma=False)(*args)
+        kw: Dict[str, Any] = {"static_argnames": ("impl",)}
+    else:
+        def run(*args):
+            return shard_map(base, mesh, in_specs=(spec,) * len(args),
+                             out_specs=spec, check_vma=False)(*args)
+        kw = {}
+    if donate:
+        kw["donate_argnums"] = donate_nums
+    launch = jax.jit(run, **kw)
+    register_launch(
+        f"{kind}_sharded{'_donated' if donate else ''}"
+        f"_x{mesh_axis_size(mesh, axis)}_{len(_SHARDED_LAUNCHES)}",
+        launch)
+    sharding = NamedSharding(mesh, spec)
+
+    def placed(*args, **kwargs):
+        # one argument placement for every caller: a step's bucket args
+        # mix host-built stacks (uncommitted) with outputs of earlier
+        # sharded launches (committed to the mesh), and precompile's
+        # dummies are all uncommitted — jit caches per argument
+        # sharding, so without normalisation a "warmed" shape compiles
+        # AGAIN the first time it arrives mesh-committed mid-serve.
+        # device_put is a no-op for arrays already carrying this
+        # sharding, so the steady state pays nothing.
+        return launch(*(jax.device_put(a, sharding) for a in args),
+                      **kwargs)
+
+    _SHARDED_LAUNCHES[cache_key] = placed
+    return placed
 
 
 def _draw_launch(keys, mu, var, y_std, y_mean, n_mc: int):
@@ -551,17 +662,42 @@ class PlanExecutor:
     dispatches — the two can never disagree via a per-call backend
     probe. Single-query buckets guard against aliasing: with no
     lane-padding to force a copy, the "stacked" buffers can BE a
-    session's cached stack arrays, which donation would delete."""
+    session's cached stack arrays, which donation would delete.
+
+    ``mesh`` turns on data-parallel execution: every jitted bucket
+    launch is replaced by its shard-mapped twin splitting the lane axis
+    over the mesh's ``data_axis`` (lanes are independent models, so
+    per-lane results match the single-device path up to float roundoff
+    — XLA fuses the per-shard batch size differently, nothing more; the
+    DISCRETE trajectory, which configs a search selects, is unchanged).
+    The paired ``StepPlanner(mesh=...)`` rounds lane pads to shard
+    multiples so shapes always divide; ``resolve_impl`` sees the
+    per-shard cell volume, so ``"auto"`` routes each DEVICE's slice.
+    The unjitted ``draw`` combine stays unsharded — exact shapes, no
+    compile identity, trivial arithmetic."""
 
     def __init__(self, *, impl: str = "auto",
                  fused_posterior: bool = False,
                  fused_ehvi: bool = False,
-                 donate: Optional[bool] = None):
+                 donate: Optional[bool] = None,
+                 mesh=None, data_axis: str = "data"):
         self.impl = impl
         self.fused_posterior = fused_posterior
         self.fused_ehvi = fused_ehvi
         self.donate = (jax.default_backend() == "tpu" if donate is None
                        else bool(donate))
+        self.mesh = mesh
+        self.data_axis = data_axis
+        self.lane_shards = mesh_axis_size(mesh, data_axis)
+
+    def _launch(self, kind: str, plain, donated):
+        """The launch for one bucket kind under this executor's config:
+        the shard-mapped twin when a mesh is installed, else the donating
+        or plain single-device jit."""
+        if self.mesh is not None and self.lane_shards > 1:
+            return sharded_bucket_launch(self.mesh, self.data_axis, kind,
+                                         self.donate)
+        return donated if self.donate else plain
 
     def execute(self, plan: StepPlan, *, counters: Optional[dict] = None,
                 impl: Optional[str] = None) -> List[Any]:
@@ -569,14 +705,21 @@ class PlanExecutor:
         results: List[Any] = [None] * len(plan.queries)
         for bucket in plan.buckets:
             queries = [plan.queries[i] for i in bucket.indices]
+            # host-side dispatch wall per bucket kind: includes lane
+            # assembly + launch dispatch but NOT device completion (jax
+            # dispatch is async) — a relative hotness signal across
+            # kinds, not a device-time profile
+            t0 = time.perf_counter()
             out = getattr(self, f"_exec_{bucket.kind}")(
                 bucket, queries, plan, impl)
+            wall = time.perf_counter() - t0
             for i, r in zip(bucket.indices, out):
                 results[i] = r
             _count(counters, bucket.kind, len(queries),
                    bucket.pads.get("m_pad",
                                    bucket.pads.get("l_pad",
-                                                   bucket.pads["lanes"])))
+                                                   bucket.pads["lanes"])),
+                   wall)
         for query, result in zip(plan.queries, results):
             if callable(query.owner):
                 query.owner(result)
@@ -634,7 +777,8 @@ class PlanExecutor:
         n_pad, m_pad = bucket.pads["n_pad"], bucket.pads["m_pad"]
         parts = self._fresh_parts(
             queries, self._stack_parts(queries, n_pad, q, d))
-        r_impl = resolve_impl(impl, cells=m_pad * q * n_pad)
+        r_impl = resolve_impl(impl, cells=m_pad * q * n_pad,
+                              shards=self.lane_shards)
         if self.fused_posterior:
             from repro.kernels.fused_posterior import fused_launch_fn
             # per-lane incumbents; lanes without an EI head get 0.0 (the
@@ -645,12 +789,14 @@ class PlanExecutor:
                          0.0 if query.best is None else float(query.best),
                          jnp.float32) for query in queries])
             parts = self._pad_lanes(parts + [best], m_pad)
-            mu, var, ei = fused_launch_fn(donate=self.donate)(
-                *parts, impl=r_impl)
+            launch = self._launch("fused_posterior",
+                                  fused_launch_fn(donate=False),
+                                  fused_launch_fn(donate=True))
+            mu, var, ei = launch(*parts, impl=r_impl)
         else:
             parts = self._pad_lanes(parts, m_pad)
-            launch = (_batched_posterior_donated if self.donate
-                      else _batched_posterior)
+            launch = self._launch("posterior", _batched_posterior,
+                                  _batched_posterior_donated)
             mu, var = launch(*parts, impl=r_impl)
             ei = None
         out, off = [], 0
@@ -682,9 +828,10 @@ class PlanExecutor:
         if q_pad > q:
             eps = jnp.pad(eps, ((0, 0), (0, 0), (0, q_pad - q)))
         parts = self._pad_lanes(parts + [eps], m_pad)
-        r_impl = resolve_impl(impl, cells=m_pad * q_pad * n_pad)
-        launch = (_batched_sample_launch_donated if self.donate
-                  else _batched_sample_launch)
+        r_impl = resolve_impl(impl, cells=m_pad * q_pad * n_pad,
+                              shards=self.lane_shards)
+        launch = self._launch("sample", _batched_sample_launch,
+                              _batched_sample_launch_donated)
         s = launch(*parts, impl=r_impl)
         out, off = [], 0
         for query in queries:
@@ -717,8 +864,8 @@ class PlanExecutor:
             bucket.pads["l_pad"])
         # every LOO part is stacked fresh above (jnp.stack always
         # copies), so donation needs no single-query guard here
-        launch = (_batched_loo_launch_donated if self.donate
-                  else _batched_loo_launch)
+        launch = self._launch("loo", _batched_loo_launch,
+                              _batched_loo_launch_donated)
         s = launch(*parts)
         return [s[j, :, :n] for j in range(len(queries))]
 
@@ -761,8 +908,8 @@ class PlanExecutor:
         parts = self._pad_lanes(parts, l_pad)
         # all four parts are host-assembled fresh every step (np.stack ->
         # device transfer), so donation is unconditionally alias-safe
-        launch = (_ehvi_box_launch_donated if self.donate
-                  else _ehvi_box_launch)
+        launch = self._launch("ehvi", _ehvi_box_launch,
+                              _ehvi_box_launch_donated)
         out = launch(*parts)
         return [np.asarray(out[j])[:q] for j in range(len(queries))]
 
@@ -818,9 +965,12 @@ class PlanExecutor:
                  for a in (los, his, refs, mus, vars_, yms, yss)]
         parts.append(jnp.stack(epss))
         parts = self._pad_lanes(parts, l_pad)
-        r_impl = resolve_impl(impl, cells=l_pad * s * q_pad * k_pad)
+        r_impl = resolve_impl(impl, cells=l_pad * s * q_pad * k_pad,
+                              shards=self.lane_shards)
         # every argument is rebuilt per step (host-assembled stacks,
         # fresh draws), so the donating twin is alias-safe here too
-        out = fused_ehvi_launch_fn(donate=self.donate)(*parts,
-                                                       impl=r_impl)
+        launch = self._launch("fused_ehvi",
+                              fused_ehvi_launch_fn(donate=False),
+                              fused_ehvi_launch_fn(donate=True))
+        out = launch(*parts, impl=r_impl)
         return [np.asarray(out[j])[:q] for j in range(len(queries))]

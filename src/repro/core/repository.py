@@ -145,6 +145,11 @@ class SupportModelStore:
         # in LRU order (most recently used last)
         self._stacked: "OrderedDict[Tuple[Tuple[str, ...], str], " \
             "Tuple[Tuple[int, ...], object, list]]" = OrderedDict()
+        # (workload ids, measure) -> (versions, SharedMemory, handle) of
+        # the stacks this store has exported cross-process
+        self._shared: Dict[Tuple[Tuple[str, ...], str],
+                           Tuple[Tuple[int, ...], object,
+                                 "SharedStackHandle"]] = {}
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -228,3 +233,149 @@ class SupportModelStore:
                 del self._cache[k]
             for k in [k for k in self._stacked if workload_id in k[0]]:
                 del self._stacked[k]
+
+    # -- process-shared stacks ----------------------------------------------
+    def export_shared(self, workload_ids: Sequence[str],
+                      measure: str) -> Optional["SharedStackHandle"]:
+        """Pack one support stack into a shared-memory segment and
+        return its picklable ``SharedStackHandle`` — the cross-process
+        twin of ``get_stacked``, for deployments running one service
+        worker per process against a single repository owner: the owner
+        exports, the tiny handle crosses the pickle boundary (the same
+        boundary ``ProcessPoolProfileExecutor`` already imposes), and
+        each worker attaches to the one segment instead of re-fitting
+        and re-stacking every support model per process.
+
+        The owner keeps the segment alive (re-exporting the same key at
+        the same versions reuses it); ``close_shared()`` unlinks all
+        exported segments. Returns ``None`` when no workload of the set
+        is usable (the same cases ``get_stacked`` returns ``None``)."""
+        stack, ids = self.get_stacked(workload_ids, measure)
+        if stack is None:
+            return None
+        key = (tuple(workload_ids), measure)
+        vers = tuple(self._repo.version(z) for z in workload_ids)
+        hit = self._shared.get(key)
+        if hit is not None and hit[0] == vers:
+            return hit[2]
+        from multiprocessing import shared_memory
+        arrays = [(f, np.asarray(getattr(stack, f)))
+                  for f in _SHARED_STACK_FIELDS]
+        total = sum(a.nbytes for _, a in arrays)
+        seg = shared_memory.SharedMemory(create=True, size=max(total, 1))
+        fields, off = [], 0
+        for f, a in arrays:
+            view = np.ndarray(a.shape, a.dtype, buffer=seg.buf, offset=off)
+            view[...] = a
+            fields.append((f, a.shape, a.dtype.str, off))
+            off += a.nbytes
+        handle = SharedStackHandle(seg.name, tuple(fields),
+                                   float(stack.noise), tuple(ids), vers)
+        if hit is not None:       # versions moved: retire the old segment
+            hit[1].close()
+            hit[1].unlink()
+        self._shared[key] = (vers, seg, handle)
+        return handle
+
+    def close_shared(self) -> None:
+        """Release every exported segment (owner-side lifecycle end)."""
+        for _, seg, _ in self._shared.values():
+            seg.close()
+            seg.unlink()
+        self._shared.clear()
+
+
+# which BatchedGP fields ride the shared segment, in layout order (the
+# full posterior/sample working set: a worker attaching the handle can
+# serve every plan-layer query without touching the repository)
+_SHARED_STACK_FIELDS = ("x", "y", "mask", "y_mean", "y_std",
+                        "log_lengthscales", "log_signal", "chol", "alpha",
+                        "counts")
+
+
+@dataclasses.dataclass(frozen=True)
+class SharedStackHandle:
+    """Picklable description of one exported support stack: the segment
+    name plus each field's (name, shape, dtype, byte offset) — no array
+    payload crosses the boundary, only this metadata."""
+    shm_name: str
+    fields: Tuple[Tuple[str, Tuple[int, ...], str, int], ...]
+    noise: float
+    ids: Tuple[str, ...]
+    versions: Tuple[int, ...]
+
+
+def load_shared_stack(handle: SharedStackHandle):
+    """Attach a ``SharedStackHandle`` and materialise its ``BatchedGP``.
+
+    Arrays are COPIED out of the segment onto the worker's device:
+    numpy views into ``shm.buf`` die with the mapping (and jax would
+    copy host->device anyway), so attach-copy-close leaves no lifetime
+    coupling between the worker's stack and the owner's segment.
+    Returns ``(BatchedGP, ids)`` — the ``get_stacked`` result shape."""
+    import jax.numpy as jnp
+    from multiprocessing import shared_memory
+
+    from .gp import BatchedGP
+    seg = shared_memory.SharedMemory(name=handle.shm_name)
+    try:
+        parts = {}
+        for f, shape, dtype, off in handle.fields:
+            view = np.ndarray(shape, np.dtype(dtype), buffer=seg.buf,
+                              offset=off)
+            parts[f] = jnp.asarray(np.array(view, copy=True))
+    finally:
+        seg.close()
+    return (BatchedGP(parts["x"], parts["y"], parts["mask"],
+                      parts["y_mean"], parts["y_std"],
+                      parts["log_lengthscales"], parts["log_signal"],
+                      handle.noise, parts["chol"], parts["alpha"],
+                      parts["counts"]),
+            list(handle.ids))
+
+
+class SharedSupportModelStore:
+    """Worker-side ``SupportModelStore`` twin serving stacks from
+    shared-memory handles instead of fitting models: the owner process
+    exports (``SupportModelStore.export_shared``), hands the pickled
+    handles over, and workers resolve ``get_stacked`` against them —
+    one repository fit, N processes serving it.
+
+    ``get_stacked`` is handle-version-cached like the owner's stack
+    cache: re-publishing a handle for the same key with moved versions
+    (the owner re-exported after ``add_run``) re-attaches; an identical
+    handle serves the already-materialised stack."""
+
+    def __init__(self, handles: Optional[Mapping[Tuple[Tuple[str, ...],
+                                                       str],
+                                                 SharedStackHandle]] = None):
+        self._handles: Dict[Tuple[Tuple[str, ...], str],
+                            SharedStackHandle] = dict(handles or {})
+        self._attached: Dict[Tuple[Tuple[str, ...], str],
+                             Tuple[Tuple[int, ...], object, list]] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def publish(self, workload_ids: Sequence[str], measure: str,
+                handle: Optional[SharedStackHandle]) -> None:
+        """Install (or clear, with ``None``) the handle for one key."""
+        key = (tuple(workload_ids), measure)
+        if handle is None:
+            self._handles.pop(key, None)
+            self._attached.pop(key, None)
+        else:
+            self._handles[key] = handle
+
+    def get_stacked(self, workload_ids: Sequence[str], measure: str):
+        key = (tuple(workload_ids), measure)
+        handle = self._handles.get(key)
+        if handle is None:
+            return None, []
+        hit = self._attached.get(key)
+        if hit is not None and hit[0] == handle.versions:
+            self.hits += 1
+            return hit[1], list(hit[2])
+        self.misses += 1
+        stack, ids = load_shared_stack(handle)
+        self._attached[key] = (handle.versions, stack, ids)
+        return stack, list(ids)

@@ -11,7 +11,33 @@ import contextlib
 import dataclasses
 from typing import Optional, Tuple
 
+import jax
 from jax.sharding import Mesh
+
+
+def shard_map(f, mesh: Mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` across jax versions: newer releases expose it at
+    the top level (keyword ``check_vma``); older ones only under
+    ``jax.experimental.shard_map`` where the same flag is ``check_rep``.
+    Every shard-mapped launch in this package routes through here so the
+    plan executor and the model layers agree on one resolution."""
+    top = getattr(jax, "shard_map", None)
+    if top is not None:
+        return top(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as legacy
+    return legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check_vma)
+
+
+def mesh_axis_size(mesh: Optional[Mesh], axis: str) -> int:
+    """Size of one named mesh axis; 1 when the mesh is absent OR simply
+    does not carry the axis (a data-only ``("data",)`` mesh has no
+    model axis — that is a size-1 degree of parallelism, not an
+    error)."""
+    if mesh is None:
+        return 1
+    return int(dict(mesh.shape).get(axis, 1))
 
 
 @dataclasses.dataclass
@@ -28,9 +54,17 @@ class DistContext:
 
     @property
     def model_size(self) -> int:
-        if self.mesh is None:
-            return 1
-        return self.mesh.shape[self.model_axis]
+        # absent axes are size 1, NOT a KeyError: a data-only mesh is a
+        # perfectly valid context for layers that never shard weights
+        return mesh_axis_size(self.mesh, self.model_axis)
+
+    @property
+    def data_size(self) -> int:
+        """Product of the batch-axis sizes present on the mesh."""
+        out = 1
+        for a in self.batch_axes:
+            out *= mesh_axis_size(self.mesh, a)
+        return out
 
     @property
     def all_axes(self) -> Tuple[str, ...]:

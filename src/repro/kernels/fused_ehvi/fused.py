@@ -48,17 +48,27 @@ def _ehvi_kernel(los_ref, his_ref, refs_ref, mu_ref, var_ref, ym_ref,
     acc_scr[...] = jnp.zeros_like(acc_scr)
 
     def body(b, _):
-        vol = None
-        for dim in range(d):
-            lo = los_ref[0, dim, pl.ds(b * bk, bk)]    # (bk,)
-            hi = his_ref[0, dim, pl.ds(b * bk, bk)]
-            ref = refs_ref[0, dim]
-            p = p_scr[dim * s:(dim + 1) * s, :]        # (S, bq)
-            w = jnp.clip(jnp.minimum(hi, ref)[None, None, :]
-                         - jnp.maximum(lo[None, None, :], p[:, :, None]),
-                         0.0, None)                    # (S, bq, bk)
-            vol = w if vol is None else vol * w
-        acc_scr[...] += jnp.sum(vol, axis=-1)
+        # the wrapper sorts each lane's boxes into staircase order
+        # (ascending lo[0]), so +inf padding boxes pool at the tail of
+        # the axis: a block whose SMALLEST lo[0] is +inf holds only
+        # zero-volume boxes and is skipped outright — deep-padded lanes
+        # (the fused bucket pads every lane to the deepest front) pay
+        # for their own boxes, not the bucket's
+        @pl.when(jnp.min(los_ref[0, 0, pl.ds(b * bk, bk)]) < jnp.inf)
+        def _accumulate():
+            vol = None
+            for dim in range(d):
+                lo = los_ref[0, dim, pl.ds(b * bk, bk)]    # (bk,)
+                hi = his_ref[0, dim, pl.ds(b * bk, bk)]
+                ref = refs_ref[0, dim]
+                p = p_scr[dim * s:(dim + 1) * s, :]        # (S, bq)
+                w = jnp.clip(
+                    jnp.minimum(hi, ref)[None, None, :]
+                    - jnp.maximum(lo[None, None, :], p[:, :, None]),
+                    0.0, None)                             # (S, bq, bk)
+                vol = w if vol is None else vol * w
+            acc_scr[...] += jnp.sum(vol, axis=-1)
+
         return 0
 
     jax.lax.fori_loop(0, nb, body, 0)
@@ -88,6 +98,14 @@ def fused_ehvi_pallas(los, his, refs, mu, var, y_mean, y_std, eps, *,
 
     los_t = jnp.swapaxes(los, 1, 2)    # (L, D, K): box reads = lane slices
     his_t = jnp.swapaxes(his, 1, 2)
+    # staircase order: each lane's boxes sorted by ascending lo[0]. The
+    # box decomposition is disjoint, so any order sums to the same EHVI
+    # (up to float summation order); sorting pools the +inf zero-volume
+    # padding boxes at the tail, which turns them into whole blocks the
+    # kernel's early-exit predicate can skip
+    order = jnp.argsort(los_t[:, 0, :], axis=-1)       # (L, K)
+    los_t = jnp.take_along_axis(los_t, order[:, None, :], axis=2)
+    his_t = jnp.take_along_axis(his_t, order[:, None, :], axis=2)
     if pk:
         los_t = jnp.pad(los_t, ((0, 0), (0, 0), (0, pk)),
                         constant_values=jnp.inf)

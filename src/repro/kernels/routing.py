@@ -36,16 +36,23 @@ def _auto_min_cells() -> int:
 
 def resolve_impl(impl: str, *, cells: int,
                  backend: Optional[str] = None,
-                 min_cells: Optional[int] = None) -> str:
+                 min_cells: Optional[int] = None,
+                 shards: int = 1) -> str:
     """Resolve ``"auto"`` to a concrete impl; pass others through.
 
     ``cells`` is the total number of output elements the launch will
     produce (for a fused plan: models x query points x observations).
-    ``backend`` defaults to ``jax.default_backend()``; injectable for
-    tests."""
+    ``shards`` divides it: under a ``shard_map`` over the lane axis each
+    device runs the kernel on ``cells / shards`` of the work, and THAT
+    per-shard volume is what must amortise a Pallas grid's setup — a
+    bucket big enough to clear the threshold whole can still be too
+    small per shard. ``backend`` defaults to ``jax.default_backend()``;
+    injectable for tests."""
     if impl != "auto":
         return impl
     if backend is None:
         backend = jax.default_backend()
     threshold = _auto_min_cells() if min_cells is None else min_cells
-    return "pallas" if (backend == "tpu" and cells >= threshold) else "xla"
+    per_shard = cells // max(1, shards)
+    return ("pallas" if (backend == "tpu" and per_shard >= threshold)
+            else "xla")

@@ -24,6 +24,21 @@ from __future__ import annotations
 
 from typing import Dict
 
+# shard-mapped launch twins register here as they are constructed: the
+# static vocabulary below is closed, but the sharded twins are minted
+# per (mesh, kind, donate) by ``core.plan``/``core.gp`` factories, and
+# the steady-state claim must cover them too. Registration is idempotent
+# by name; a twin registered mid-step has its first compiles counted as
+# misses by any watcher constructed before it — which is exactly right,
+# they ARE serving-time compiles.
+_DYNAMIC: Dict[str, object] = {}
+
+
+def register_launch(name: str, fn) -> None:
+    """Track a dynamically-minted jitted launch (a sharded twin) in the
+    compile-once accounting alongside the static vocabulary."""
+    _DYNAMIC[name] = fn
+
 
 def tracked_launches() -> Dict[str, object]:
     """name -> jitted launch fn, lazily imported (this module must stay
@@ -33,6 +48,7 @@ def tracked_launches() -> Dict[str, object]:
     from repro.kernels.fused_posterior import ops as fused_ops
 
     return {
+        **_DYNAMIC,
         "fit": gp._fit_batched,
         "chol_alpha": gp._batched_chol_alpha,
         "posterior": gp._batched_posterior,

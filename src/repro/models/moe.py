@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.distributed import get_context
+from repro.distributed import get_context, shard_map
 from .common import ModelConfig, Params, _normal, init_mlp, mlp
 
 
@@ -189,7 +189,7 @@ def _moe_allgather_ep(p: Params, x2: jnp.ndarray, cfg: ModelConfig):
 
     bspec = P(ctx.batch_axes)
     gspec, dspec = _expert_specs(ctx)
-    return jax.shard_map(
+    return shard_map(
         body, mesh=ctx.mesh,
         in_specs=(P(), gspec, gspec, dspec, bspec),
         out_specs=(bspec, P()),
@@ -258,7 +258,7 @@ def _moe_a2a_ep(p: Params, x2: jnp.ndarray, cfg: ModelConfig):
     gspec, dspec = _expert_specs(ctx)
     # the two all_to_alls make the (mathematically model-replicated)
     # outputs unprovable for the varying-axes checker: disable it
-    return jax.shard_map(
+    return shard_map(
         body, mesh=ctx.mesh,
         in_specs=(P(), gspec, gspec, dspec, bspec),
         out_specs=(bspec, P()),

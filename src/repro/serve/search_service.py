@@ -282,21 +282,27 @@ class SearchService:
     """
 
     # how each plan-node kind rolls up into the service stats (the
-    # sample-side kinds share one pair: they are all "draws the step
+    # sample-side kinds share one triple: they are all "draws the step
     # needed", whether from a support stack, a LOO target, or posterior
-    # rows)
-    _STAT_KEYS = {"posterior": ("posterior_batches", "posterior_queries"),
-                  "sample": ("sample_batches", "sample_queries"),
-                  "loo": ("sample_batches", "sample_queries"),
-                  "draw": ("sample_batches", "sample_queries"),
-                  "ehvi": ("ehvi_batches", "ehvi_jobs")}
+    # rows); the third element accumulates the kind's host-side
+    # dispatch wall from the executor's per-bucket counters
+    _STAT_KEYS = {"posterior": ("posterior_batches", "posterior_queries",
+                                "posterior_wall_s"),
+                  "sample": ("sample_batches", "sample_queries",
+                             "sample_wall_s"),
+                  "loo": ("sample_batches", "sample_queries",
+                          "sample_wall_s"),
+                  "draw": ("sample_batches", "sample_queries",
+                           "sample_wall_s"),
+                  "ehvi": ("ehvi_batches", "ehvi_jobs", "ehvi_wall_s")}
 
     def __init__(self, repository: Optional[Repository] = None, *,
                  slots: int = 8, executor=None, wait_mode: str = "any",
                  profile_timeout: Optional[float] = None,
                  fuse_posteriors: bool = True, fuse_samples: bool = True,
                  planner: Optional[StepPlanner] = None,
-                 plan_executor: Optional[PlanExecutor] = None):
+                 plan_executor: Optional[PlanExecutor] = None,
+                 mesh=None, data_axis: str = "data"):
         if wait_mode not in ("any", "all"):
             raise ValueError(f"unknown wait_mode {wait_mode!r}")
         self.repo = repository if repository is not None else Repository()
@@ -308,10 +314,15 @@ class SearchService:
         self.fuse_posteriors = fuse_posteriors
         self.fuse_samples = fuse_samples
         # ALL bucketing/padding policy lives in the planner; the service
-        # only emits queries and scatters results
-        self.planner = planner if planner is not None else StepPlanner()
-        self.plan_executor = (plan_executor if plan_executor is not None
-                              else PlanExecutor())
+        # only emits queries and scatters results. ``mesh`` constructs
+        # BOTH defaults in sharded mode (lane pads rounded to shard
+        # multiples, bucket launches shard-mapped over ``data_axis``) —
+        # callers passing their own planner/executor own the pairing.
+        self.planner = (planner if planner is not None
+                        else StepPlanner(mesh=mesh, data_axis=data_axis))
+        self.plan_executor = (
+            plan_executor if plan_executor is not None
+            else PlanExecutor(mesh=mesh, data_axis=data_axis))
         self.queue: List[_Session] = []
         self.active: Dict[int, _Session] = {}
         self.done: List[SearchCompletion] = []
@@ -326,7 +337,9 @@ class SearchService:
                       "sample_queries": 0, "ehvi_batches": 0,
                       "ehvi_jobs": 0, "plan_batches": 0, "plan_queries": 0,
                       "plan_compile_misses": 0, "precompiled_buckets": 0,
-                      "precompile_compiles": 0}
+                      "precompile_compiles": 0, "fit_wall_s": 0.0,
+                      "posterior_wall_s": 0.0, "sample_wall_s": 0.0,
+                      "ehvi_wall_s": 0.0, "plan_wall_s": 0.0}
         # launch signatures covered by precompile() — empty until called
         self.precompiled_signatures: set = set()
 
@@ -626,14 +639,16 @@ class SearchService:
 
     def _count_plan(self, counters: Dict[str, Dict[str, int]]) -> None:
         """Roll one planned round's per-kind counters into the service
-        stats: the per-kind pairs (``_STAT_KEYS``) plus the aggregate
-        ``plan_batches``/``plan_queries``."""
+        stats: the per-kind triples (``_STAT_KEYS``) plus the aggregate
+        ``plan_batches``/``plan_queries``/``plan_wall_s``."""
         for kind, c in counters.items():
-            bk, qk = self._STAT_KEYS[kind]
+            bk, qk, wk = self._STAT_KEYS[kind]
             self.stats[bk] += c.get("launches", 0)
             self.stats[qk] += c.get("queries", 0)
+            self.stats[wk] += c.get("wall_s", 0.0)
             self.stats["plan_batches"] += c.get("launches", 0)
             self.stats["plan_queries"] += c.get("queries", 0)
+            self.stats["plan_wall_s"] += c.get("wall_s", 0.0)
 
     def _posterior_phase(self, sessions: List[_Session]
                          ) -> Dict[int, Dict[str, Dict]]:
@@ -671,8 +686,13 @@ class SearchService:
                                         for o in s.observations]))
                     owners.append((s, m))
             # async cohorts vary step to step; the planner's jit-shape
-            # policy keeps the vmapped fit from recompiling
+            # policy keeps the vmapped fit from recompiling. The wall
+            # counter is the same host-side dispatch measure as the
+            # per-bucket ones — comparable against ``*_wall_s`` to
+            # judge whether the fit leg deserves a fused Pallas twin.
+            t0 = time.perf_counter()
             tgts = self.planner.fit_targets(xs, ys, noise=noise)
+            self.stats["fit_wall_s"] += time.perf_counter() - t0
             self.stats["fit_batches"] += 1
             self.stats["fit_jobs"] += len(owners)
 
@@ -733,8 +753,10 @@ class SearchService:
             self.stats["rgpe_jobs"] += len(idxs)
             self.stats["sample_batches"] += sc.get("launches", 0)
             self.stats["sample_queries"] += sc.get("queries", 0)
+            self.stats["sample_wall_s"] += sc.get("wall_s", 0.0)
             self.stats["plan_batches"] += sc.get("launches", 0)
             self.stats["plan_queries"] += sc.get("queries", 0)
+            self.stats["plan_wall_s"] += sc.get("wall_s", 0.0)
             for i, w in zip(idxs, ws):
                 weights[i] = w
         return weights

@@ -34,7 +34,7 @@ _SCRIPT = textwrap.dedent("""
     for ep_mode in ["allgather", "a2a"]:
         ctx = DistContext(mesh=mesh, batch_axes=("data",), ep_mode=ep_mode)
         with use_context(ctx):
-            with jax.set_mesh(mesh):
+            with mesh:
                 out, aux = jax.jit(lambda p, x: moe(p, x, cfg))(p, x)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    atol=2e-4, rtol=2e-4,

@@ -1,0 +1,238 @@
+"""Data-parallel plan execution: the shard-aware shape policy and
+launch signatures, the process-shared support stacks, and sharded-vs-
+unsharded serving parity.
+
+The parity test runs in a subprocess because the device-count flag must
+be set before jax initialises (the main test process keeps 1 device);
+both executors then run in THAT one process so they share the emulator,
+the spaces, and the jit caches being compared.
+"""
+import os
+import pickle
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import Repository, scout_search_space
+from repro.core.plan import Bucket, CohortLimits, StepPlanner
+from repro.core.repository import (_SHARED_STACK_FIELDS,
+                                   SharedSupportModelStore,
+                                   SupportModelStore, load_shared_stack)
+from repro.distributed import DistContext, mesh_axis_size
+from repro.simdata import make_emulator
+
+EMU = make_emulator()
+SPACE = scout_search_space()
+WID = EMU.workload_ids()[6]
+
+
+# -- mesh axis lookups (satellite: model_size on a data-only mesh) ----------
+
+def test_model_size_on_data_only_mesh_is_one():
+    # regression: a ("data",)-only mesh carries no model axis; that is a
+    # size-1 degree of model parallelism, not a KeyError
+    mesh = jax.make_mesh((1,), ("data",))
+    ctx = DistContext(mesh=mesh)
+    assert ctx.model_size == 1
+    assert ctx.data_size == 1
+    assert mesh_axis_size(mesh, "model") == 1
+    assert mesh_axis_size(mesh, "data") == 1
+    assert mesh_axis_size(None, "data") == 1
+    assert DistContext().model_size == 1
+
+
+# -- planner shape policy under lane sharding -------------------------------
+
+def test_round_models_lifts_pow2_rungs_to_shard_multiples():
+    # lane_shards=3 is deliberately coprime with the pow2 ladder so the
+    # lift is visible on every rung
+    p = StepPlanner(lane_shards=3)
+    assert [p.round_models(m) for m in (1, 2, 3, 5)] == [3, 3, 6, 9]
+    # shards=1 must be the historical pow2 policy, bit for bit
+    p1 = StepPlanner(lane_shards=1)
+    assert [p1.round_models(m) for m in (1, 2, 3, 5)] == [1, 2, 4, 8]
+
+
+def test_lane_pads_and_enumerated_buckets_are_shard_divisible():
+    limits = CohortLimits(d=5, q_grid=24, max_obs=8, max_lanes=13,
+                          n_samples=(32,), n_mc=(8,), n_objectives=(2,),
+                          max_ehvi_boxes=16)
+    p = StepPlanner(lane_shards=4)
+    pads = p._lane_pads(limits.max_lanes)
+    assert pads == sorted(set(pads)) and pads
+    assert all(v % 4 == 0 for v in pads)
+    for b in p.enumerate_buckets(limits):
+        lanes_pad = b.pads.get("m_pad", b.pads.get("l_pad"))
+        assert lanes_pad is not None and lanes_pad % 4 == 0, b
+
+
+def test_launch_signature_carries_shard_count():
+    limits = CohortLimits(d=5, q_grid=24, max_obs=8, max_lanes=8,
+                          n_samples=(32,), n_mc=(8,), n_objectives=(2,),
+                          max_ehvi_boxes=16)
+    plain = StepPlanner(lane_shards=1)
+    sharded = StepPlanner(lane_shards=4)
+    sigs_p = {plain.launch_signature(b)
+              for b in plain.enumerate_buckets(limits)}
+    sigs_s = {sharded.launch_signature(b)
+              for b in sharded.enumerate_buckets(limits)}
+    # every sharded signature names its shard count — the shard-mapped
+    # twin of a shape is a different compiled program
+    assert all(s[-1] == ("shards", 4) for s in sigs_s)
+    assert not any(("shards", 4) in s for s in sigs_p)
+    # stripping the tag leaves shapes of the same families (the sharded
+    # vocabulary is the plain one with lane axes lifted to multiples)
+    assert {s[0] for s in sigs_s} == {s[0] for s in sigs_p}
+    # draw buckets are unjitted: no compile identity, no shard tag
+    draw = Bucket("draw", (8, 4), (), {"lanes": 2})
+    assert sharded.launch_signature(draw) == plain.launch_signature(draw)
+
+
+# -- process-shared support stacks ------------------------------------------
+
+def _support_repo(users=2, runs=12, seed=99):
+    repo = Repository()
+    rng = np.random.default_rng(seed)
+    for u in range(users):
+        for ci in rng.choice(len(SPACE), runs, replace=False):
+            repo.add_run(EMU.make_record(f"anon-{u}", WID,
+                                         SPACE.configs[ci], rng))
+    return repo
+
+
+def test_shared_stack_handle_pickles_and_roundtrips_bitwise():
+    repo = _support_repo()
+    store = SupportModelStore(repo, SPACE)
+    wids = sorted(repo.workloads())
+    want, ids = store.get_stacked(wids, "cost")
+    assert want is not None
+    handle = store.export_shared(wids, "cost")
+    assert handle is not None
+    # the handle crosses the process boundary; the arrays never do
+    wire = pickle.dumps(handle)
+    got, got_ids = load_shared_stack(pickle.loads(wire))
+    assert got_ids == list(ids)
+    for f in _SHARED_STACK_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(got, f)),
+                                      np.asarray(getattr(want, f)),
+                                      err_msg=f)
+    assert got.noise == want.noise
+    # unchanged versions: re-export reuses the one live segment
+    assert store.export_shared(wids, "cost").shm_name == handle.shm_name
+    store.close_shared()
+
+
+def test_shared_store_worker_twin_caches_and_invalidates():
+    repo = _support_repo()
+    store = SupportModelStore(repo, SPACE)
+    wids = sorted(repo.workloads())
+    handle = store.export_shared(wids, "cost")
+
+    worker = SharedSupportModelStore()
+    assert worker.get_stacked(wids, "cost") == (None, [])
+    worker.publish(wids, "cost", handle)
+    stack, ids = worker.get_stacked(wids, "cost")
+    assert stack is not None and ids and worker.misses == 1
+    again, _ = worker.get_stacked(wids, "cost")
+    assert again is stack and worker.hits == 1
+
+    # the repository moves: the owner re-exports at new versions and the
+    # worker re-attaches instead of serving the stale stack
+    repo.add_run(EMU.make_record(wids[0], WID, SPACE.configs[0],
+                                 np.random.default_rng(1)))
+    fresh = store.export_shared(wids, "cost")
+    assert fresh.versions != handle.versions
+    worker.publish(wids, "cost", fresh)
+    restacked, _ = worker.get_stacked(wids, "cost")
+    assert restacked is not stack and worker.misses == 2
+    worker.publish(wids, "cost", None)
+    assert worker.get_stacked(wids, "cost") == (None, [])
+    store.close_shared()
+
+
+def test_export_shared_unusable_key_returns_none():
+    store = SupportModelStore(Repository(), SPACE)
+    assert store.export_shared(["nobody"], "cost") is None
+    store.close_shared()
+
+
+# -- sharded vs unsharded serving parity ------------------------------------
+
+_PARITY_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import sys
+    sys.path.insert(0, "src")
+    import jax
+    import numpy as np
+    assert len(jax.devices()) >= 4, jax.devices()
+    from repro.core import (BOConfig, Constraint, Objective, Repository,
+                            scout_search_space)
+    from repro.serve.search_service import SearchRequest, SearchService
+    from repro.simdata import make_emulator
+
+    emu = make_emulator()
+    sp = scout_search_space()
+    wid = emu.workload_ids()[6]
+    cons = [Constraint("runtime", emu.runtime_target(wid, 50))]
+    cfg = BOConfig(n_init=2, max_iters=5)
+
+    def support_repo():
+        repo = Repository()
+        rng = np.random.default_rng(99)
+        for u in range(2):
+            for ci in rng.choice(len(sp), 8, replace=False):
+                repo.add_run(emu.make_record(f"anon-{u}", wid,
+                                             sp.configs[ci], rng))
+        return repo
+
+    def run_cohort(mesh):
+        svc = SearchService(support_repo(), slots=3, mesh=mesh)
+        for s in range(3):
+            rng = np.random.default_rng(s)
+            svc.submit(SearchRequest(
+                sp, lambda c, rng=rng: emu.run(wid, c, rng=rng),
+                Objective("cost"), cons, method="karasu",
+                bo_config=cfg, seed=s))
+        return svc, {c.rid: c.result for c in svc.run()}
+
+    base_svc, base = run_cohort(None)
+    sh_svc, sh = run_cohort(jax.make_mesh((4,), ("data",)))
+
+    assert sorted(base) == sorted(sh)
+    for rid in base:
+        a, b = base[rid], sh[rid]
+        # per-lane launch results only match up to float roundoff (XLA
+        # fuses the per-shard batch size differently), but the DISCRETE
+        # trajectory must be identical: same configs profiled in the
+        # same order, hence bitwise-identical measured outcomes
+        assert [o.config for o in a.observations] == \\
+               [o.config for o in b.observations], rid
+        for oa, ob in zip(a.observations, b.observations):
+            assert oa.measures == ob.measures, rid
+        assert list(a.best_index_per_iter) == list(b.best_index_per_iter)
+    # same plan both ways: equal fused-launch and step counts
+    for k in ("plan_batches", "plan_queries", "steps"):
+        assert base_svc.stats[k] == sh_svc.stats[k], (
+            k, base_svc.stats[k], sh_svc.stats[k])
+    # and the sharded cohort really dispatched shard-mapped twins
+    from repro.launch.compile_stats import tracked_launches
+    assert any("sharded" in name for name in tracked_launches()), \\
+        sorted(tracked_launches())
+    print("PARITY-OK")
+""")
+
+
+def test_sharded_trajectory_matches_unsharded():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _PARITY_SCRIPT],
+                       cwd=os.path.join(os.path.dirname(__file__), ".."),
+                       capture_output=True, text=True, env=env,
+                       timeout=540)
+    assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-4000:])
+    assert "PARITY-OK" in r.stdout
