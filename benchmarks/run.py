@@ -10,12 +10,14 @@ import time
 
 
 def main() -> None:
-    from . import bench_kernels, bench_roofline, bench_search_service
+    from . import bench_analysis, bench_kernels, bench_roofline
+    from . import bench_search_service
     from . import bench_fig3_fig4, bench_fig5_fig6, bench_fig7_fig8_fig9
 
     print("name,us_per_call,derived")
     t0 = time.time()
-    for mod in [bench_roofline, bench_kernels, bench_search_service,
+    for mod in [bench_roofline, bench_analysis, bench_kernels,
+                bench_search_service,
                 bench_fig7_fig8_fig9, bench_fig3_fig4, bench_fig5_fig6]:
         try:
             mod.main()

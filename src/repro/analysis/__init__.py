@@ -1,0 +1,35 @@
+"""Static launch-invariant analysis over the query-plan vocabulary.
+
+Four rules, each a static twin of a contract the serving path otherwise
+only samples dynamically:
+
+- ``padding-taint`` (`padding_taint`): jaxpr-level taint propagation
+  proving no padded lane/obs/grid/box region can reach a launch's
+  valid-region outputs.
+- ``donation-safety`` (`donation_safety`): every ``donate_argnums``
+  twin donates only per-step-rebuilt buffers, twins agree on arg
+  shapes/dtypes, and no executor method reads a donated buffer after
+  its launch.
+- ``vocab-closure`` (`vocab_closure`): ``enumerate_buckets`` /
+  ``launch_signature`` closure under the planner's rounding policy and
+  mesh lane-lifting, plus weak-type launch-argument detection.
+- ``prng-audit`` (`prng_audit`): the ``derive_key``/``fold_in``
+  schedule is collision-free over its purpose/iteration/index paths.
+
+``python -m repro.analysis.lint`` runs all four; ``mutants`` holds the
+seeded-bug corpus that pins each rule's detection power.
+"""
+from .findings import (Finding, SUPPRESSIONS, apply_suppressions,
+                       max_severity)
+
+__all__ = ["Finding", "SUPPRESSIONS", "apply_suppressions",
+           "max_severity", "run_all"]
+
+
+def __getattr__(name):
+    # lazy: ``python -m repro.analysis.lint`` must not find the lint
+    # module pre-imported by its own package (runpy double-import)
+    if name == "run_all":
+        from .lint import run_all
+        return run_all
+    raise AttributeError(name)

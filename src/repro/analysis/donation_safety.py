@@ -1,0 +1,287 @@
+"""Rule ``donation-safety``: donated buffers are rebuilt, never reread.
+
+Three checks over the donation story:
+
+1. **Donated-parameter classification** — every ``donate_argnums`` site
+   (the jitted twins in ``core/gp.py`` / ``core/acquisition.py`` / the
+   kernel ``ops.py`` dispatchers, found by AST, plus the sharded-twin
+   table ``core.plan._shard_base``, read at runtime) may donate only
+   parameters the executor rebuilds each step. Session-cached state —
+   the hyperparameter rows ``log_ls``/``log_sf`` and PRNG ``keys`` —
+   must never be donated: XLA would reuse the cached buffer for
+   intermediates and the NEXT step would read garbage.
+
+2. **Twin agreement** — a donating twin must accept exactly the plain
+   launch's positional arity and produce identical output avals
+   (``jax.eval_shape`` on the analysis fixtures): a drifting twin pair
+   silently forks the launch vocabulary.
+
+3. **Post-donation reads** — no ``PlanExecutor._exec_*`` method may
+   read a launch-argument buffer after the launch call (the donated
+   buffer is dead), and any method assembling lanes through
+   ``_stack_parts`` (whose single-query case can RETURN a session's
+   cached arrays) must route them through the ``_fresh_parts`` aliasing
+   guard before launching.
+"""
+from __future__ import annotations
+
+import ast
+import inspect
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .findings import Finding
+
+# Parameters holding session-cached state: never donatable. Everything
+# the executors pass positionally besides these is rebuilt per step
+# (stacked observation caches, padded grids, box decompositions, fresh
+# draws) — see the per-site comments in core/gp.py and core/plan.py.
+NON_DONATABLE = frozenset({"log_ls", "log_sf", "keys"})
+
+
+# ---------------------------------------------------------------------------
+# Check 1: donate_argnums sites donate only rebuilt buffers
+# ---------------------------------------------------------------------------
+
+
+def _param_names_of(node: ast.AST, tree: ast.Module
+                    ) -> Optional[List[str]]:
+    """Positional parameter names of a jit's first argument: a lambda,
+    a ``Name`` of a module-level def, or ``<def>.__wrapped__``."""
+    if isinstance(node, ast.Lambda):
+        return [a.arg for a in node.args.args]
+    target = None
+    if isinstance(node, ast.Name):
+        target = node.id
+    elif (isinstance(node, ast.Attribute) and node.attr == "__wrapped__"
+          and isinstance(node.value, ast.Name)):
+        target = node.value.id
+    if target is None:
+        return None
+    for item in ast.walk(tree):
+        if isinstance(item, ast.FunctionDef) and item.name == target:
+            return [a.arg for a in item.args.args]
+    return None
+
+
+def _donation_sites(tree: ast.Module) -> List[Tuple[int, List[str],
+                                                    List[int]]]:
+    """(lineno, param names, donated indices) for each
+    ``jax.jit(..., donate_argnums=...)`` call in ``tree``."""
+    sites = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and ((isinstance(node.func, ast.Attribute)
+                      and node.func.attr == "jit")
+                     or (isinstance(node.func, ast.Name)
+                         and node.func.id == "jit"))):
+            continue
+        donated = None
+        for kw in node.keywords:
+            if kw.arg == "donate_argnums":
+                if isinstance(kw.value, ast.Tuple):
+                    donated = [c.value for c in kw.value.elts
+                               if isinstance(c, ast.Constant)]
+                elif isinstance(kw.value, ast.Constant):
+                    donated = [kw.value.value]
+        if donated is None or not node.args:
+            continue
+        names = _param_names_of(node.args[0], tree)
+        if names is not None:
+            sites.append((node.lineno, names, donated))
+    return sites
+
+
+def check_donated_params(source: str, label: str) -> List[Finding]:
+    """Flag donate_argnums entries naming session-cached parameters."""
+    out: List[Finding] = []
+    tree = ast.parse(source)
+    for lineno, names, donated in _donation_sites(tree):
+        for idx in donated:
+            if not isinstance(idx, int) or idx >= len(names):
+                out.append(Finding(
+                    "donation-safety", "error", label,
+                    f"{label}:{lineno}",
+                    f"donate_argnums index {idx!r} out of range for "
+                    f"params {names}"))
+                continue
+            if names[idx] in NON_DONATABLE:
+                out.append(Finding(
+                    "donation-safety", "error", label,
+                    f"{label}:{lineno}:{names[idx]}",
+                    f"donates session-cached parameter "
+                    f"{names[idx]!r} (arg {idx}); only per-step-"
+                    f"rebuilt buffers may be donated"))
+    return out
+
+
+def _module_sources() -> List[Tuple[str, str]]:
+    import repro.core.acquisition
+    import repro.core.gp
+    import repro.core.plan
+    import repro.kernels.fused_ehvi.ops
+    import repro.kernels.fused_posterior.ops
+    mods = [repro.core.gp, repro.core.acquisition, repro.core.plan,
+            repro.kernels.fused_posterior.ops,
+            repro.kernels.fused_ehvi.ops]
+    return [(m.__name__, inspect.getsource(m)) for m in mods]
+
+
+def check_shard_base() -> List[Finding]:
+    """The sharded-twin donation table must classify like the
+    single-device twins: donated names rebuilt-only, and per-kind
+    donated index sets must match the in-tree jit twins (drift between
+    the two donation vocabularies is a silent fork)."""
+    from repro.core.plan import _shard_base
+    out: List[Finding] = []
+    # single-device donated index sets per base-body name, from AST
+    single: Dict[Tuple[str, ...], Tuple[int, ...]] = {}
+    for label, src in _module_sources():
+        for _lineno, names, donated in _donation_sites(ast.parse(src)):
+            # "impl" is a trailing static config arg, not a buffer; the
+            # runtime signatures below exclude it the same way
+            single[tuple(n for n in names if n != "impl")] = \
+                tuple(donated)
+    for kind in ("posterior", "sample", "loo", "ehvi",
+                 "fused_posterior", "fused_ehvi"):
+        base, _has_impl, donate_nums = _shard_base(kind)
+        params = [p for p in inspect.signature(base).parameters
+                  if p != "impl"]
+        for idx in donate_nums:
+            if params[idx] in NON_DONATABLE:
+                out.append(Finding(
+                    "donation-safety", "error", kind,
+                    f"_shard_base:{params[idx]}",
+                    f"sharded {kind} twin donates session-cached "
+                    f"parameter {params[idx]!r}"))
+        expected = single.get(tuple(params))
+        if expected is not None and tuple(donate_nums) != expected:
+            out.append(Finding(
+                "donation-safety", "error", kind,
+                f"_shard_base:{tuple(donate_nums)}",
+                f"sharded {kind} twin donates {tuple(donate_nums)} "
+                f"but the single-device twin donates {expected}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Check 2: twin pairs agree on arity and output avals
+# ---------------------------------------------------------------------------
+
+
+def check_twin_agreement(specs=None) -> List[Finding]:
+    import jax
+
+    from .padding_taint import launch_specs
+    specs = launch_specs() if specs is None else specs
+    out: List[Finding] = []
+    for spec in specs:
+        plain, donated = (spec.twins + (None, None))[:2]
+        if plain is None or donated is None:
+            continue
+        avals = []
+        for fn in (plain, donated):
+            try:
+                shaped = jax.eval_shape(fn, *spec.args)
+            except Exception as exc:   # arity / dtype disagreement
+                out.append(Finding(
+                    "donation-safety", "error", spec.name,
+                    f"twin:{getattr(fn, '__name__', fn)!r}",
+                    f"twin does not accept the launch arguments: "
+                    f"{exc}"))
+                shaped = None
+            avals.append(jax.tree_util.tree_map(
+                lambda l: (l.shape, str(l.dtype)), shaped))
+        if None not in avals and avals[0] != avals[1]:
+            out.append(Finding(
+                "donation-safety", "error", spec.name, "twin:avals",
+                f"plain and donated twins disagree on output avals: "
+                f"{avals[0]} vs {avals[1]}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Check 3: no Python-level read of a donated buffer after launch
+# ---------------------------------------------------------------------------
+
+
+def _call_arg_names(call: ast.Call) -> List[str]:
+    names = []
+    for a in call.args:
+        if isinstance(a, ast.Starred) and isinstance(a.value, ast.Name):
+            names.append(a.value.id)
+        elif isinstance(a, ast.Name):
+            names.append(a.id)
+    return names
+
+
+def check_post_donation_reads(source: Optional[str] = None,
+                              label: str = "core.plan") -> List[Finding]:
+    """Within every ``_exec_*`` method: after the ``launch(...)`` call
+    (the name bound from ``self._launch``), none of the call's argument
+    names may be read again; and a method assembling parts via
+    ``self._stack_parts`` must guard them with ``self._fresh_parts``."""
+    if source is None:
+        import repro.core.plan
+        source = inspect.getsource(repro.core.plan)
+    out: List[Finding] = []
+    for node in ast.walk(ast.parse(source)):
+        if not (isinstance(node, ast.FunctionDef)
+                and node.name.startswith("_exec_")):
+            continue
+        launch_names = set()
+        calls_stack_parts = calls_fresh_parts = False
+        last_launch_line = None
+        launch_args: List[str] = []
+        for item in ast.walk(node):
+            if isinstance(item, ast.Assign) and isinstance(
+                    item.value, ast.Call):
+                f = item.value.func
+                if (isinstance(f, ast.Attribute)
+                        and f.attr == "_launch"):
+                    for t in item.targets:
+                        if isinstance(t, ast.Name):
+                            launch_names.add(t.id)
+            if isinstance(item, ast.Call) and isinstance(
+                    item.func, ast.Attribute):
+                if item.func.attr == "_stack_parts":
+                    calls_stack_parts = True
+                if item.func.attr == "_fresh_parts":
+                    calls_fresh_parts = True
+        for item in ast.walk(node):
+            if (isinstance(item, ast.Call)
+                    and isinstance(item.func, ast.Name)
+                    and item.func.id in launch_names):
+                last_launch_line = item.lineno
+                launch_args = _call_arg_names(item)
+        if calls_stack_parts and not calls_fresh_parts:
+            out.append(Finding(
+                "donation-safety", "error", node.name,
+                f"{label}:{node.lineno}:_fresh_parts",
+                f"{node.name} assembles lanes via _stack_parts but "
+                f"never routes them through the _fresh_parts aliasing "
+                f"guard — a single-query donated launch would delete "
+                f"cached stack buffers"))
+        if last_launch_line is None:
+            continue
+        for item in ast.walk(node):
+            if (isinstance(item, ast.Name)
+                    and isinstance(item.ctx, ast.Load)
+                    and item.id in launch_args
+                    and item.lineno > last_launch_line):
+                out.append(Finding(
+                    "donation-safety", "error", node.name,
+                    f"{label}:{item.lineno}:{item.id}",
+                    f"{node.name} reads {item.id!r} after passing it "
+                    f"to the (potentially donating) launch — the "
+                    f"buffer may already be dead"))
+    return out
+
+
+def check_donation_safety() -> List[Finding]:
+    out: List[Finding] = []
+    for label, src in _module_sources():
+        out.extend(check_donated_params(src, label))
+    out.extend(check_shard_base())
+    out.extend(check_twin_agreement())
+    out.extend(check_post_donation_reads())
+    return out

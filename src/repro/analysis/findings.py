@@ -1,0 +1,72 @@
+"""The structured finding model shared by every analysis rule.
+
+A ``Finding`` pins (rule, severity, launch, path): ``launch`` is the
+tracked launch family or source location the finding is about, ``path``
+the evidence — a taint chain of primitives, a parameter name, a
+signature tuple, a colliding key pair. Findings are data, not log
+lines: the lint CLI serialises them to JSON for the CI artifact and the
+golden tests assert on their fields.
+
+Suppression: a finding may be waived with a JUSTIFICATION STRING keyed
+by ``(rule, launch, path)`` in ``SUPPRESSIONS``. Suppressed findings
+are kept (demoted to ``info`` and carrying the justification) so the
+JSON artifact still shows them — a suppression without a justification
+is impossible by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+SEVERITY_ORDER = {"info": 0, "warning": 1, "error": 2}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str                 # padding-taint | donation-safety | ...
+    severity: str             # error | warning | info
+    launch: str               # launch family / source site ("" = global)
+    path: str                 # evidence: taint chain, param, signature
+    message: str = ""
+    suppressed: str = ""      # justification when waived
+
+    def key(self) -> Tuple[str, str, str]:
+        return (self.rule, self.launch, self.path)
+
+
+# (rule, launch, path) -> justification. The only waiver on the current
+# tree: the fused fit's learning rate arrives as a Python-float default
+# and traces as a weak-typed f32 scalar. It is a config constant that
+# never varies at serving time, so it costs exactly one jit-cache entry
+# — the sharded fit twins even lift it to a static argname.
+SUPPRESSIONS: Dict[Tuple[str, str, str], str] = {
+    ("vocab-closure", "fit", "lr"):
+        "lr is a fixed config constant (0.05): weak f32 scalar, one "
+        "cache entry, lifted to a static argname on the sharded twins",
+}
+
+
+def apply_suppressions(
+    findings: Sequence[Finding],
+    suppressions: Optional[Dict[Tuple[str, str, str], str]] = None,
+) -> List[Finding]:
+    """Demote findings with a registered justification to ``info`` and
+    attach the justification; everything else passes through."""
+    table = SUPPRESSIONS if suppressions is None else suppressions
+    out = []
+    for f in findings:
+        just = table.get(f.key())
+        if just:
+            f = dataclasses.replace(f, severity="info", suppressed=just)
+        out.append(f)
+    return out
+
+
+def max_severity(findings: Sequence[Finding]) -> str:
+    if not findings:
+        return "info"
+    return max(findings, key=lambda f: SEVERITY_ORDER[f.severity]).severity
+
+
+def to_dicts(findings: Sequence[Finding]) -> List[dict]:
+    return [dataclasses.asdict(f) for f in findings]

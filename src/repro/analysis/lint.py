@@ -1,0 +1,101 @@
+"""``python -m repro.analysis.lint`` — run every analysis rule.
+
+Exit status is 1 iff any unsuppressed error-severity finding remains
+(the CI gate), 0 otherwise. ``--format=json`` emits the structured
+findings document the CI job uploads as an artifact; ``--format=text``
+prints one line per finding. Suppressed findings stay visible in both
+formats, demoted to ``info`` and carrying their justification.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import List, Optional, Sequence
+
+from .findings import Finding, apply_suppressions, to_dicts
+
+RULES = ("padding-taint", "donation-safety", "vocab-closure",
+         "prng-audit")
+
+
+def run_rule(rule: str) -> List[Finding]:
+    if rule == "padding-taint":
+        from .padding_taint import check_padding_taint
+        return check_padding_taint()
+    if rule == "donation-safety":
+        from .donation_safety import check_donation_safety
+        return check_donation_safety()
+    if rule == "vocab-closure":
+        from .vocab_closure import check_vocab_closure
+        return check_vocab_closure()
+    if rule == "prng-audit":
+        from .prng_audit import check_prng_audit
+        return check_prng_audit()
+    raise ValueError(f"unknown rule {rule!r} (have {RULES})")
+
+
+def run_all(rules: Sequence[str] = RULES) -> List[Finding]:
+    """All findings across ``rules``, suppressions applied."""
+    findings: List[Finding] = []
+    for rule in rules:
+        findings.extend(run_rule(rule))
+    return apply_suppressions(findings)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="repro.analysis.lint",
+        description="static launch-invariant analysis")
+    parser.add_argument("--format", choices=("text", "json"),
+                        default="text")
+    parser.add_argument("--output", default=None,
+                        help="also write the report to this path")
+    parser.add_argument("--rules", default=",".join(RULES),
+                        help="comma-separated rule subset")
+    args = parser.parse_args(argv)
+    rules = tuple(r.strip() for r in args.rules.split(",") if r.strip())
+    for rule in rules:
+        if rule not in RULES:
+            parser.error(f"unknown rule {rule!r} (have {RULES})")
+
+    t0 = time.perf_counter()
+    per_rule = {rule: apply_suppressions(run_rule(rule))
+                for rule in rules}
+    wall = time.perf_counter() - t0
+    findings = [f for fs in per_rule.values() for f in fs]
+    errors = [f for f in findings if f.severity == "error"]
+
+    if args.format == "json":
+        report = {
+            "findings": to_dicts(findings),
+            "summary": {
+                "rules": {rule: len(fs)
+                          for rule, fs in per_rule.items()},
+                "errors": len(errors),
+                "suppressed": sum(1 for f in findings if f.suppressed),
+                "wall_s": round(wall, 3),
+            },
+        }
+        text = json.dumps(report, indent=2, sort_keys=True)
+    else:
+        lines = []
+        for f in findings:
+            tag = f" [suppressed: {f.suppressed}]" if f.suppressed \
+                else ""
+            lines.append(f"{f.severity:7s} {f.rule:16s} "
+                         f"{f.launch or '-':18s} {f.path}  "
+                         f"{f.message}{tag}")
+        lines.append(f"{len(findings)} finding(s), {len(errors)} "
+                     f"error(s), {len(rules)} rule(s) in {wall:.1f}s")
+        text = "\n".join(lines)
+    print(text)
+    if args.output:
+        with open(args.output, "w") as fh:
+            fh.write(text + "\n")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

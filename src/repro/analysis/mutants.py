@@ -1,0 +1,161 @@
+"""The seeded-bug corpus: one deliberately broken twin per rule.
+
+Each mutant reproduces a real bug class this codebase has already
+legislated against (dropped mask, cross-lane reduction, post-donation
+read, vocabulary hole, weak-typed closure, flattened key tag) in a
+minimal form, and the mutation tests assert the corresponding analysis
+rule CATCHES it — the analyzer's detection power is pinned exactly like
+any other behaviour, so a future refactor cannot quietly lobotomize a
+rule.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# padding-taint mutants: launch bodies violating the mask discipline
+# ---------------------------------------------------------------------------
+
+
+def bad_mask_posterior_spec():
+    """The posterior body with the observation mask DROPPED from the
+    cross-kernel: padded observation rows flow straight into every
+    valid lane's mean/variance."""
+    from repro.core.gp import GPParams, _kernel
+
+    from .padding_taint import LaunchSpec, launch_specs
+
+    def body(log_ls, log_sf, x, mask, chol, alpha, xq):
+        def one(ls, sf, xi, mi, ci, ai, xqi):
+            params = GPParams(ls, sf, 0.0)
+            ks = _kernel(params, xqi, xi)          # BUG: no * mi[None, :]
+            mu = ks @ ai
+            v = jax.scipy.linalg.solve_triangular(ci, ks.T, lower=True)
+            var = jnp.maximum(jnp.exp(sf) - jnp.sum(v * v, axis=0),
+                              1e-10)
+            return mu, var
+
+        return jax.vmap(one)(log_ls, log_sf, x, mask, chol, alpha, xq)
+
+    base = next(s for s in launch_specs() if s.name == "posterior")
+    return dataclasses.replace(base, name="posterior[bad-mask]",
+                               fn=body, twins=())
+
+
+def lane_leak_posterior_spec():
+    """The posterior body plus a cross-lane normalisation: throwaway
+    pad lanes contaminate every real lane's mean."""
+    from functools import partial
+
+    from repro.core.gp import _batched_posterior
+
+    from .padding_taint import launch_specs
+
+    good = partial(_batched_posterior.__wrapped__, impl="xla")
+
+    def body(log_ls, log_sf, x, mask, chol, alpha, xq):
+        mu, var = good(log_ls, log_sf, x, mask, chol, alpha, xq)
+        # BUG: reduction over the padded lane axis
+        return mu - jnp.mean(mu, axis=0, keepdims=True), var
+
+    base = next(s for s in launch_specs() if s.name == "posterior")
+    return dataclasses.replace(base, name="posterior[lane-leak]",
+                               fn=body, twins=())
+
+
+# ---------------------------------------------------------------------------
+# donation-safety mutants: source snippets with broken donation
+# ---------------------------------------------------------------------------
+
+DONATES_CACHED_PARAM_SRC = '''
+import jax
+
+def _body(log_ls, log_sf, x, mask):
+    return (log_ls + log_sf[..., None]) * x * mask[..., None]
+
+_bad_twin = jax.jit(_body, donate_argnums=(0, 2))
+'''
+
+POST_DONATION_READ_SRC = '''
+class _BadExecutor:
+    def _exec_posterior(self, bucket, queries, plan, impl):
+        q, d = bucket.key
+        parts = self._fresh_parts(
+            queries, self._stack_parts(queries, bucket.pads["n_pad"],
+                                       q, d))
+        launch = self._launch("posterior", _plain, _donated)
+        mu, var = launch(*parts)
+        # BUG: parts[4] may be donated (dead) by now
+        return [(mu, var, parts[4].sum())]
+'''
+
+MISSING_ALIAS_GUARD_SRC = '''
+class _BadExecutor:
+    def _exec_posterior(self, bucket, queries, plan, impl):
+        q, d = bucket.key
+        # BUG: single-query buckets may alias session caches
+        parts = self._stack_parts(queries, bucket.pads["n_pad"], q, d)
+        launch = self._launch("posterior", _plain, _donated)
+        mu, var = launch(*parts)
+        return [(mu, var)]
+'''
+
+
+# ---------------------------------------------------------------------------
+# vocab-closure mutants
+# ---------------------------------------------------------------------------
+
+
+def vocab_hole_planner_factory():
+    """Planner whose enumerated box ladder forgets every intermediate
+    power-of-two rung: any live front below the maximum emits a
+    signature the precompiled vocabulary never saw."""
+    from repro.core.plan import StepPlanner, _pow2
+
+    class VocabHolePlanner(StepPlanner):
+        def _box_pads(self, max_boxes):
+            return [_pow2(max_boxes)]       # BUG: ladder truncated
+
+    return lambda shards: VocabHolePlanner(lane_shards=shards)
+
+
+def weak_type_posterior_spec():
+    """A launch fixture smuggling a Python scalar into the traced
+    arguments — the jit cache would fork per value."""
+    from .padding_taint import launch_specs
+
+    base = next(s for s in launch_specs() if s.name == "posterior")
+
+    def body(log_ls, log_sf, x, mask, chol, alpha, xq, jitter):
+        return base.fn(log_ls, log_sf, x, mask, chol + jitter, alpha,
+                       xq)
+
+    return dataclasses.replace(
+        base, name="posterior[weak-type]", fn=body,
+        args=base.args + (0.0,),             # BUG: weak Python float
+        taints=base.taints + (np.zeros((), bool),),
+        arg_names=base.arg_names + ("jitter",), twins=())
+
+
+# ---------------------------------------------------------------------------
+# prng-audit mutants
+# ---------------------------------------------------------------------------
+
+
+def colliding_derive_key(base, purpose, it, index):
+    """The pre-PR-5 flattened tag: one fold of an arithmetic packing
+    whose integer space aliases across components."""
+    return jax.random.fold_in(base, purpose * 1000 + it * 10 + index)
+
+
+ARITHMETIC_TAG_SRC = '''
+import jax
+
+def _draw_key(key, it, oi):
+    return jax.random.fold_in(key, 1000 + it * 10 + oi)
+'''

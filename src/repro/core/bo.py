@@ -51,6 +51,14 @@ _EXECUTOR = PlanExecutor()
 KEY_PURPOSE_RGPE = 0          # RGPE support-sample draws (index: measure)
 KEY_PURPOSE_MOO_EHVI = 1      # MC-EHVI posterior draws (index: objective)
 
+# the purpose registry: ``repro.analysis.prng_audit`` proves the tags
+# distinct and the enumerated (purpose, iteration, index) tree
+# collision-free — add new purposes HERE so the audit covers them
+KEY_PURPOSES: Dict[str, int] = {
+    "rgpe": KEY_PURPOSE_RGPE,
+    "moo_ehvi": KEY_PURPOSE_MOO_EHVI,
+}
+
 
 def derive_key(base: jax.Array, purpose: int, it: int,
                index: int) -> jax.Array:

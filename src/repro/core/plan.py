@@ -280,6 +280,15 @@ class StepPlanner:
         m = _pow2(m) if self.m_round_pow2 else m
         return _round_up(m, self.lane_shards)
 
+    def round_boxes(self, k: int) -> int:
+        """Box-axis pad of a live ``k``-box front: small fronts pad to
+        a power of two; past one launch block the axis pads to a chunk
+        multiple instead (the launch scans fixed-size blocks there,
+        bounding peak memory). The policy twin of ``_box_pads`` — the
+        static closure analysis holds the two together."""
+        return (_pow2(k) if k <= EHVI_BOX_CHUNK
+                else _round_up(k, EHVI_BOX_CHUNK))
+
     def fit_targets(self, xs, ys, *, noise: float, steps: int = 120,
                     m_round_pow2: Optional[bool] = None) -> BatchedGP:
         """Fit a cohort of target GPs under the planner's jit-shape
@@ -384,12 +393,8 @@ class StepPlanner:
                 np.asarray(query.ref, np.float64))
             prep[i] = (los, his)
             k_max = max(k_max, los.shape[0])
-        # small fronts pad to a power of two; past one launch block the
-        # box axis pads to a chunk multiple instead (the launch scans
-        # fixed-size blocks there, bounding peak memory)
-        k_pad = (_pow2(k_max) if k_max <= EHVI_BOX_CHUNK
-                 else _round_up(k_max, EHVI_BOX_CHUNK))
-        return {"k_pad": k_pad, "q_pad": self.round_grid(key[2]),
+        return {"k_pad": self.round_boxes(k_max),
+                "q_pad": self.round_grid(key[2]),
                 "l_pad": self.round_models(len(queries)),
                 "lanes": len(queries)}
 

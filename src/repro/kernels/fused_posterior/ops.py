@@ -67,3 +67,10 @@ def fused_launch_fn(donate=None):
     if donate is None:
         donate = jax.default_backend() == "tpu"
     return _fused_launch_donated if donate else _fused_launch
+
+
+def ref_twin():
+    """The pure-XLA reference body standing in for the Pallas kernel in
+    jaxpr-level analysis (``repro.analysis``): same signature, same
+    masked-dataflow contract, traceable without a Pallas lowering."""
+    return fused_posterior_ei_ref

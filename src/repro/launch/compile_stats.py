@@ -28,15 +28,37 @@ from typing import Dict
 # static vocabulary below is closed, but the sharded twins are minted
 # per (mesh, kind, donate) by ``core.plan``/``core.gp`` factories, and
 # the steady-state claim must cover them too. Registration is idempotent
-# by name; a twin registered mid-step has its first compiles counted as
-# misses by any watcher constructed before it — which is exactly right,
-# they ARE serving-time compiles.
+# for the SAME function object; re-registering a name with a different
+# fn is rejected — the replaced twin's cache entries would vanish from
+# the accounting, silently masking real misses (the total can even go
+# DOWN). A twin registered mid-step is picked up by watchers constructed
+# before it (``CompileWatcher`` re-resolves the tracked set at delta
+# time), so its first compiles count as misses — which is exactly
+# right, they ARE serving-time compiles.
 _DYNAMIC: Dict[str, object] = {}
+
+_STATIC_NAMES = frozenset({
+    "fit", "chol_alpha", "posterior", "posterior_donated", "sample",
+    "sample_donated", "loo", "loo_donated", "ehvi", "ehvi_donated",
+    "fused_posterior", "fused_posterior_donated", "fused_ehvi",
+    "fused_ehvi_donated"})
 
 
 def register_launch(name: str, fn) -> None:
     """Track a dynamically-minted jitted launch (a sharded twin) in the
-    compile-once accounting alongside the static vocabulary."""
+    compile-once accounting alongside the static vocabulary.
+    Idempotent per (name, fn); a name collision with a DIFFERENT
+    function raises — it would corrupt the miss accounting."""
+    if name in _STATIC_NAMES:
+        raise ValueError(
+            f"launch name {name!r} shadows the static vocabulary")
+    prev = _DYNAMIC.get(name)
+    if prev is not None and prev is not fn:
+        raise ValueError(
+            f"launch {name!r} is already registered with a different "
+            f"function; re-registration would drop its "
+            f"{_cache_size(prev)} counted cache entries and corrupt "
+            f"the compile-miss accounting — pick a unique name")
     _DYNAMIC[name] = fn
 
 
@@ -86,13 +108,20 @@ class CompileWatcher:
     """Delta counter over the tracked launch caches: ``misses()`` is
     how many tracked launches compiled since construction (or the last
     ``reset``). Entries are never evicted within a process, so the
-    delta is exactly the number of new (shape, static-args) programs."""
+    delta is exactly the number of new (shape, static-args) programs.
+
+    The snapshot is PER NAME, and the tracked set is re-resolved at
+    delta time: a sharded twin registered mid-step (after this watcher
+    was constructed) is attributed in full — its baseline defaults to
+    zero — and a launch absent from the delta-time set cannot offset
+    other launches' misses the way a single total would."""
 
     def __init__(self):
-        self._base = total_cache_size()
+        self._base = cache_sizes()
 
     def misses(self) -> int:
-        return total_cache_size() - self._base
+        return sum(max(0, size - self._base.get(name, 0))
+                   for name, size in cache_sizes().items())
 
     def reset(self) -> None:
-        self._base = total_cache_size()
+        self._base = cache_sizes()

@@ -91,6 +91,17 @@ from repro.serve.profile_executor import (ProfileJob, ProfileOutcome,
 READY = "ready"                        # observations current, can fit/score
 WAITING_PROFILE = "waiting_profile"    # >=1 profiling run in flight
 
+# The service's declared PRNG schedule: every per-iteration key it
+# consumes derives as derive_key(session.key, purpose, iteration,
+# index) with exactly these purposes. ``repro.analysis.prng_audit``
+# cross-checks this declaration against ``bo.KEY_PURPOSES`` and proves
+# the enumerated tree collision-free — extend it when a new consumer
+# joins the schedule.
+KEY_SCHEDULE = (
+    (KEY_PURPOSE_RGPE, "per-measure RGPE support/LOO draw keys"),
+    (KEY_PURPOSE_MOO_EHVI, "per-objective MOO posterior-draw keys"),
+)
+
 
 def _absorb_target_posts(posts, owners, tgts, mu, var) -> None:
     """Record one target stack's grid-posterior rows into each owning

@@ -1,0 +1,68 @@
+"""The analyzer on the CLEAN tree: zero unsuppressed errors, working
+suppression semantics, and a well-formed CLI report. The companion
+``test_analysis_mutants`` pins the other direction (seeded bugs ARE
+caught)."""
+import json
+
+import pytest
+
+from repro.analysis.findings import (Finding, SUPPRESSIONS,
+                                     apply_suppressions, max_severity)
+from repro.analysis.lint import RULES, main, run_all, run_rule
+
+
+@pytest.fixture(scope="module")
+def clean_findings():
+    return run_all()
+
+
+def test_clean_tree_has_no_unsuppressed_errors(clean_findings):
+    errors = [f for f in clean_findings if f.severity == "error"]
+    assert errors == [], [f"{f.rule}:{f.launch}:{f.path}: {f.message}"
+                          for f in errors]
+
+
+def test_known_waiver_is_present_and_justified(clean_findings):
+    """The fit's weak ``lr`` scalar is the designed suppression demo:
+    it must still be REPORTED (demoted, with its justification) — a
+    suppression hides the exit-code consequence, never the finding."""
+    waived = [f for f in clean_findings if f.suppressed]
+    assert any(f.key() == ("vocab-closure", "fit", "lr")
+               for f in waived)
+    assert all(f.severity == "info" and
+               f.suppressed == SUPPRESSIONS[f.key()] for f in waived)
+
+
+def test_every_rule_runs_standalone():
+    for rule in RULES:
+        findings = run_rule(rule)
+        assert all(f.rule == rule for f in findings)
+
+
+def test_suppression_only_demotes_exact_key():
+    hit = Finding("vocab-closure", "error", "fit", "lr", "weak")
+    miss = Finding("vocab-closure", "error", "fit", "other", "weak")
+    out = apply_suppressions([hit, miss])
+    assert out[0].severity == "info" and out[0].suppressed
+    assert out[1].severity == "error" and not out[1].suppressed
+    assert max_severity(out) == "error"
+
+
+def test_cli_json_report(tmp_path, capsys):
+    out_path = tmp_path / "findings.json"
+    rc = main(["--format=json", f"--output={out_path}",
+               "--rules=prng-audit,donation-safety"])
+    assert rc == 0
+    report = json.loads(capsys.readouterr().out)
+    assert json.loads(out_path.read_text()) == report
+    assert set(report["summary"]["rules"]) == {"prng-audit",
+                                               "donation-safety"}
+    assert report["summary"]["errors"] == 0
+    for f in report["findings"]:
+        assert {"rule", "severity", "launch", "path",
+                "message"} <= set(f)
+
+
+def test_cli_rejects_unknown_rule():
+    with pytest.raises(SystemExit):
+        main(["--rules=made-up-rule"])

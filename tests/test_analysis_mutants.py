@@ -1,0 +1,82 @@
+"""Mutation tests: each seeded bug in ``repro.analysis.mutants`` must
+be CAUGHT by its rule. This pins the analyzer's detection power — a
+refactor that silently blinds a rule fails here, not in production."""
+import pytest
+
+from repro.analysis import mutants
+from repro.analysis.donation_safety import (check_donated_params,
+                                            check_post_donation_reads)
+from repro.analysis.padding_taint import check_padding_taint
+from repro.analysis.prng_audit import (check_fold_in_tags,
+                                       check_schedule_collisions)
+from repro.analysis.vocab_closure import check_closure, check_weak_types
+
+
+def test_dropped_mask_leaks_padding():
+    findings = check_padding_taint([mutants.bad_mask_posterior_spec()])
+    assert findings and all(f.rule == "padding-taint" and
+                            f.severity == "error" for f in findings)
+    # the taint path names the unmasked cross-kernel contraction
+    assert any("dot_general" in f.path for f in findings)
+
+
+def test_cross_lane_reduction_leaks_pad_lanes():
+    findings = check_padding_taint(
+        [mutants.lane_leak_posterior_spec()])
+    assert findings and all(f.launch == "posterior[lane-leak]"
+                            for f in findings)
+
+
+def test_donating_a_cached_param_is_flagged():
+    findings = check_donated_params(mutants.DONATES_CACHED_PARAM_SRC,
+                                    "mutant")
+    assert len(findings) == 1
+    assert "log_ls" in findings[0].path
+    assert findings[0].severity == "error"
+
+
+def test_post_donation_read_is_flagged():
+    findings = check_post_donation_reads(
+        mutants.POST_DONATION_READ_SRC, "mutant")
+    assert len(findings) == 1
+    assert "parts" in findings[0].path
+
+
+def test_missing_alias_guard_is_flagged():
+    findings = check_post_donation_reads(
+        mutants.MISSING_ALIAS_GUARD_SRC, "mutant")
+    assert len(findings) == 1
+    assert "_fresh_parts" in findings[0].path
+
+
+def test_vocabulary_hole_is_flagged():
+    findings = check_closure(
+        planner_factory=mutants.vocab_hole_planner_factory(),
+        shard_sizes=(1,))
+    assert findings and all(f.launch == "ehvi" for f in findings)
+
+
+def test_weak_typed_launch_arg_is_flagged():
+    findings = check_weak_types([mutants.weak_type_posterior_spec()])
+    assert len(findings) == 1
+    assert findings[0].path == "jitter"
+
+
+def test_flattened_key_tag_collides():
+    findings = check_schedule_collisions(
+        derive=mutants.colliding_derive_key, purposes=(0, 1))
+    assert len(findings) == 1
+    assert findings[0].severity == "error"
+
+
+def test_arithmetic_fold_in_tag_is_flagged():
+    findings = check_fold_in_tags(mutants.ARITHMETIC_TAG_SRC, "mutant")
+    assert len(findings) == 1
+    assert "mutant:5" in findings[0].path
+
+
+def test_clean_sources_pass_the_mutant_rules():
+    """The flip side: the real executor passes the same source checks
+    the mutants fail (no false positives from the rule itself)."""
+    assert check_post_donation_reads() == []
+    assert check_closure(shard_sizes=(1,)) == []

@@ -1,0 +1,38 @@
+"""Hypothesis property: vocabulary closure holds for RANDOM serving
+envelopes, not just the lint CLI's representative one. Same oracle as
+the static ``vocab-closure`` pass — every signature a live cohort
+within random ``CohortLimits`` emits is in ``enumerate_buckets``,
+under every mesh lane-lifting divisor."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis.vocab_closure import check_closure
+from repro.core.plan import CohortLimits
+
+_knob = lambda *vals: st.sets(st.sampled_from(vals), max_size=2).map(
+    lambda s: tuple(sorted(s)))
+
+_limits = st.builds(
+    CohortLimits,
+    d=st.integers(1, 4),
+    q_grid=st.integers(1, 12),
+    max_obs=st.integers(1, 10),
+    max_lanes=st.integers(1, 4),
+    n_samples=_knob(8, 32),
+    n_mc=_knob(8, 16),
+    n_objectives=_knob(2, 3),
+    # generous box budget: the random fronts (0..3 points) must stay
+    # inside the envelope, or a "hole" would just be a limits breach
+    max_ehvi_boxes=st.just(64),
+)
+
+
+@settings(max_examples=12, deadline=None, derandomize=True)
+@given(limits=_limits, shards=st.sampled_from((1, 2, 4)))
+def test_live_signatures_stay_inside_enumerated_vocabulary(
+        limits, shards):
+    findings = check_closure(limits=limits, shard_sizes=(shards,))
+    assert findings == [], [f.path for f in findings]
