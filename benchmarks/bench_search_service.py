@@ -369,15 +369,17 @@ def _smoke_cohort(sp, tenants, repo, targets, max_iters):
 
 def smoke() -> None:
     """CI smoke: a 4-tenant mixed cohort (naive SO, karasu SO, karasu
-    2-objective, karasu 3-objective) over 4 iterations must complete,
+    2-objective, karasu 3-objective) over 5 iterations must complete,
     route its model math through the query-plan layer, and produce
     (k, 2) and (k, 3) Pareto fronts — fast enough for the tier-1 CPU
-    job. The cohort then runs a SECOND time against warm jit caches:
-    the repeat must hit the compile-once steady state
-    (``plan_compile_misses == 0``), which is the invariant CI asserts
-    from the dumped stats JSON artifact."""
+    job. Five iterations leave TWO model-driven steps past ``n_init``,
+    so every model refits once and the second fit must ride the
+    warm-start cache (``fit_warm_lanes > 0``). The cohort then runs a
+    SECOND time against warm jit caches: the repeat must hit the
+    compile-once steady state (``plan_compile_misses == 0``), which is
+    the invariant CI asserts from the dumped stats JSON artifact."""
     sp, tenants, repo, targets = _setup(3)
-    max_iters = 4
+    max_iters = 5
     cold_svc, done, _ = _smoke_cohort(sp, tenants, _fresh_repo(repo),
                                       targets, max_iters)
     svc, done2, dt = _smoke_cohort(sp, tenants, _fresh_repo(repo),
@@ -404,11 +406,17 @@ def smoke() -> None:
     assert s["plan_batches"] <= s["plan_queries"], s
     assert s["plan_batches"] == (s["posterior_batches"]
                                  + s["sample_batches"]
-                                 + s["ehvi_batches"]), s
+                                 + s["ehvi_batches"]
+                                 + s["fit_batches"]), s
     assert s["posterior_batches"] < s["posterior_queries"], s
     assert s["sample_batches"] >= 1, s
     assert s["sample_queries"] > s["sample_batches"], s
     assert s["ehvi_batches"] >= 1, s
+    # the fit leg rode the plan and its warm cache engaged: after each
+    # measure's first (cold) fit every refit takes the short warm rung
+    assert s["fit_batches"] >= 1, s
+    assert s["fit_warm_lanes"] > 0, s
+    assert s["fit_cold_lanes"] > 0, s
     stats_path = os.environ.get("REPRO_BENCH_STATS_JSON")
     if "--stats-json" in sys.argv[1:]:
         at = sys.argv.index("--stats-json")
@@ -553,6 +561,71 @@ def _fused_ehvi_numbers() -> None:
            f"dominant={dominant}")
 
 
+def _fused_fit_numbers() -> None:
+    """The fused fit kernel (masked Matern-5/2 NLML + analytic grad +
+    Adam + factorisation in ONE launch) vs the two-launch vmapped chain
+    it replaces (autodiff ``_fit_batched`` then ``_batched_chol_alpha``,
+    with the hyperparameters round-tripping through HBM between them),
+    plus the warm-vs-cold rung wall split — the kernel-level view of
+    what the warm-start cache buys per fit round."""
+    import jax.numpy as jnp
+
+    from repro.core.gp import _batched_chol_alpha, _fit_batched
+    from repro.kernels.fused_fit.ops import _fused_fit_launch
+
+    m, n, d = 16, 32, 7
+    cold_steps, warm_steps, noise = 120, 16, 0.1
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.random((m, n, d)), jnp.float32)
+    yr = np.sin(np.asarray(x).sum(axis=2)) \
+        + 0.1 * rng.normal(size=(m, n)).astype(np.float32)
+    y = jnp.asarray((yr - yr.mean(axis=1, keepdims=True))
+                    / yr.std(axis=1, keepdims=True), jnp.float32)
+    mask = jnp.ones((m, n), jnp.float32)
+    zls = jnp.zeros((m, d), jnp.float32)
+    zsf = jnp.zeros((m,), jnp.float32)
+
+    def fused(steps):
+        return _fused_fit_launch(x, y, mask, zls, zsf, steps=steps,
+                                 noise=noise, impl="xla")
+
+    def vmapped():
+        fitted = _fit_batched(x, y, mask, steps=cold_steps, noise=noise)
+        chol, alpha = _batched_chol_alpha(fitted["ls"], fitted["sf"],
+                                          x, y, mask, noise)
+        return fitted["ls"], fitted["sf"], chol, alpha
+
+    ls_f, sf_f, _, _ = fused(cold_steps)
+    ls_v, sf_v, _, _ = vmapped()
+    # parity guard: the analytic gradient IS the autodiff gradient
+    np.testing.assert_allclose(np.asarray(ls_f), np.asarray(ls_v),
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(sf_f), np.asarray(sf_v),
+                               atol=1e-3)
+    fused(warm_steps)[3].block_until_ready()
+    reps = 10
+    t0 = time.time()
+    for _ in range(reps):
+        fused(cold_steps)[3].block_until_ready()
+    cold_s = (time.time() - t0) / reps
+    t0 = time.time()
+    for _ in range(reps):
+        fused(warm_steps)[3].block_until_ready()
+    warm_s = (time.time() - t0) / reps
+    t0 = time.time()
+    for _ in range(reps):
+        vmapped()[3].block_until_ready()
+    vmap_s = (time.time() - t0) / reps
+    C.emit("fused_fit_launch", cold_s * 1e6,
+           f"m{m}n{n}steps{cold_steps}")
+    C.emit("fused_fit_vs_vmapped_speedup", 0.0,
+           f"{vmap_s / cold_s:.2f}")
+    C.emit("fused_fit_warm_rung", warm_s * 1e6,
+           f"steps{warm_steps}")
+    C.emit("fused_fit_warm_vs_cold_speedup", 0.0,
+           f"{cold_s / warm_s:.2f}")
+
+
 def steady_state() -> None:
     """Compile-once serving (the ISSUE-6 acceptance scenario): per-step
     latency of a churning mixed SO + 2-objective + 3-objective cohort
@@ -639,6 +712,8 @@ def steady_state() -> None:
     pre_s = time.time() - t0
     warm_times = run_steps(warm, steps)
     assert warm.stats["plan_compile_misses"] == 0, warm.stats
+    # the churning cohort's refits must actually ride the warm rung
+    assert warm.stats["fit_warm_lanes"] > 0, warm.stats
 
     C.emit("search_service_steady_cold_step",
            float(np.mean(cold_times)) * 1e6, f"{steps}steps")
@@ -648,8 +723,15 @@ def steady_state() -> None:
            f"{pre['buckets']}buckets_{pre['compiles']}compiles")
     C.emit("search_service_steady_misses", 0.0,
            str(warm.stats["plan_compile_misses"]))
+    # the fit round's wall per service step, annotated with how the
+    # cohort's fit lanes split between the warm refine and cold rungs
+    C.emit("search_service_steady_fit_wall",
+           warm.stats["fit_wall_s"] * 1e6 / steps,
+           f"warm{warm.stats['fit_warm_lanes']}"
+           f"_cold{warm.stats['fit_cold_lanes']}")
     _fused_kernel_numbers()
     _fused_ehvi_numbers()
+    _fused_fit_numbers()
 
 
 def mesh_scaling() -> None:

@@ -17,8 +17,10 @@ Three checks over the donation story:
    silently forks the launch vocabulary.
 
 3. **Post-donation reads** — no ``PlanExecutor._exec_*`` method may
-   read a launch-argument buffer after the launch call (the donated
-   buffer is dead), and any method assembling lanes through
+   read a DONATED launch-argument buffer after the launch call (the
+   donated buffer is dead; non-donated arguments stay live, so e.g.
+   the fit leg may seed its ``BatchedGP`` from x/y/mask after
+   launching), and any method assembling lanes through
    ``_stack_parts`` (whose single-query case can RETURN a session's
    cached arrays) must route them through the ``_fresh_parts`` aliasing
    guard before launching.
@@ -119,10 +121,14 @@ def _module_sources() -> List[Tuple[str, str]]:
     import repro.core.gp
     import repro.core.plan
     import repro.kernels.fused_ehvi.ops
+    import repro.kernels.fused_fit.ops
     import repro.kernels.fused_posterior.ops
+    import repro.kernels.ranking_loss.ops
     mods = [repro.core.gp, repro.core.acquisition, repro.core.plan,
             repro.kernels.fused_posterior.ops,
-            repro.kernels.fused_ehvi.ops]
+            repro.kernels.fused_ehvi.ops,
+            repro.kernels.fused_fit.ops,
+            repro.kernels.ranking_loss.ops]
     return [(m.__name__, inspect.getsource(m)) for m in mods]
 
 
@@ -142,7 +148,7 @@ def check_shard_base() -> List[Finding]:
             single[tuple(n for n in names if n != "impl")] = \
                 tuple(donated)
     for kind in ("posterior", "sample", "loo", "ehvi",
-                 "fused_posterior", "fused_ehvi"):
+                 "fused_posterior", "fused_ehvi", "fused_fit"):
         base, _has_impl, donate_nums = _shard_base(kind)
         params = [p for p in inspect.signature(base).parameters
                   if p != "impl"]
@@ -204,22 +210,56 @@ def check_twin_agreement(specs=None) -> List[Finding]:
 # ---------------------------------------------------------------------------
 
 
-def _call_arg_names(call: ast.Call) -> List[str]:
-    names = []
+def _call_arg_names(call: ast.Call,
+                    donated: Optional[Sequence[int]] = None) -> List[str]:
+    """Names of the call's positional buffer arguments. With ``donated``
+    given, only the names at those positions — the buffers actually
+    dead after the launch; a ``*splat`` erases the position mapping, so
+    it conservatively reinstates every name."""
+    names, starred = [], False
     for a in call.args:
         if isinstance(a, ast.Starred) and isinstance(a.value, ast.Name):
             names.append(a.value.id)
+            starred = True
         elif isinstance(a, ast.Name):
             names.append(a.id)
-    return names
+    if donated is None or starred:
+        return names
+    return [n for i, n in enumerate(names) if i in donated]
+
+
+def _launch_kind(call: ast.Call) -> Optional[str]:
+    """The kind string of a ``self._launch("<kind>", ...)`` call."""
+    if (call.args and isinstance(call.args[0], ast.Constant)
+            and isinstance(call.args[0].value, str)):
+        return call.args[0].value
+    return None
+
+
+def _donated_positions(kind: Optional[str]) -> Optional[Tuple[int, ...]]:
+    """Donated argument positions of a launch kind, from the runtime
+    sharded-twin table (the single source for per-kind donate_argnums);
+    None when the kind is unknown there — the caller then treats every
+    argument as potentially donated."""
+    if kind is None:
+        return None
+    try:
+        from repro.core.plan import _shard_base
+        _base, _has_impl, donate_nums = _shard_base(kind)
+    except Exception:
+        return None
+    return tuple(donate_nums)
 
 
 def check_post_donation_reads(source: Optional[str] = None,
                               label: str = "core.plan") -> List[Finding]:
     """Within every ``_exec_*`` method: after the ``launch(...)`` call
-    (the name bound from ``self._launch``), none of the call's argument
-    names may be read again; and a method assembling parts via
-    ``self._stack_parts`` must guard them with ``self._fresh_parts``."""
+    (the name bound from ``self._launch``), none of the call's DONATED
+    argument buffers may be read again (non-donated arguments stay live
+    by construction; when the kind's donated positions are unknown or a
+    ``*splat`` hides them, every argument is treated as donated); and a
+    method assembling parts via ``self._stack_parts`` must guard them
+    with ``self._fresh_parts``."""
     if source is None:
         import repro.core.plan
         source = inspect.getsource(repro.core.plan)
@@ -229,6 +269,7 @@ def check_post_donation_reads(source: Optional[str] = None,
                 and node.name.startswith("_exec_")):
             continue
         launch_names = set()
+        launch_kind: Optional[str] = None
         calls_stack_parts = calls_fresh_parts = False
         last_launch_line = None
         launch_args: List[str] = []
@@ -241,6 +282,7 @@ def check_post_donation_reads(source: Optional[str] = None,
                     for t in item.targets:
                         if isinstance(t, ast.Name):
                             launch_names.add(t.id)
+                    launch_kind = _launch_kind(item.value)
             if isinstance(item, ast.Call) and isinstance(
                     item.func, ast.Attribute):
                 if item.func.attr == "_stack_parts":
@@ -251,8 +293,12 @@ def check_post_donation_reads(source: Optional[str] = None,
             if (isinstance(item, ast.Call)
                     and isinstance(item.func, ast.Name)
                     and item.func.id in launch_names):
-                last_launch_line = item.lineno
-                launch_args = _call_arg_names(item)
+                # a multi-line call's arguments sit past its first
+                # line; reads only count after the whole call ends
+                last_launch_line = getattr(item, "end_lineno",
+                                           item.lineno)
+                launch_args = _call_arg_names(
+                    item, _donated_positions(launch_kind))
         if calls_stack_parts and not calls_fresh_parts:
             out.append(Finding(
                 "donation-safety", "error", node.name,

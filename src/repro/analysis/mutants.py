@@ -124,6 +124,21 @@ def vocab_hole_planner_factory():
     return lambda shards: VocabHolePlanner(lane_shards=shards)
 
 
+def fit_rung_hole_planner_factory():
+    """Planner whose fit enumeration forgets the warm (short-refine)
+    ``steps`` rung: the service's warm cache still emits warm-steps
+    ``FitQuery`` nodes, so every warm fit bucket carries a signature
+    the precompiled vocabulary never saw — a serving-time compile on
+    the supposedly compile-free steady state."""
+    from repro.core.plan import StepPlanner
+
+    class FitRungHolePlanner(StepPlanner):
+        def fit_step_rungs(self, limits):
+            return [int(limits.fit_steps)]   # BUG: warm rung dropped
+
+    return lambda shards: FitRungHolePlanner(lane_shards=shards)
+
+
 def weak_type_posterior_spec():
     """A launch fixture smuggling a Python scalar into the traced
     arguments — the jit cache would fork per value."""

@@ -1,8 +1,9 @@
 """Rule ``padding-taint``: padded regions cannot reach valid outputs.
 
 One ``LaunchSpec`` per tracked launch family (fit, chol_alpha,
-posterior, sample, loo, ehvi, and the fused Pallas kernels via their
-XLA ref twins — the jaxpr-level dataflow is the kernels' specification,
+posterior, sample, loo, ehvi, the padded ranking loss, and the fused
+Pallas kernels — posterior, EHVI, fit — via their XLA ref twins — the
+jaxpr-level dataflow is the kernels' specification,
 and the donated / sharded twins jit the SAME bodies, so one spec covers
 the family). Each spec carries concrete example arguments exercising
 every pad axis the executor can produce, a taint mask marking the FREE
@@ -357,6 +358,68 @@ def _fused_posterior_spec() -> LaunchSpec:
         twins=(fp_ops._fused_launch, fp_ops._fused_launch_donated))
 
 
+def _fused_fit_spec() -> LaunchSpec:
+    """The fused fit leg: warm-start rows ride the lane axis, padded
+    observation rows must have exactly zero gradient (the masked-NLML
+    contract in ``kernels/fused_fit/ref.py``), and the emitted Cholesky
+    must keep its pinned pad block untouchable — the posterior legs
+    consume it directly."""
+    from repro.kernels.fused_fit import ops as ff_ops
+    fx = _stack_fixture()
+    m_valid, m_pad, n_pad, d = (fx["m_valid"], fx["m_pad"], fx["n_pad"],
+                                fx["d"])
+    lane = fx["lane_pad_mask"]
+    obs = fx["obs_pad_mask"]
+    valid_alpha = np.zeros((m_pad, n_pad), bool)
+    for i, n in enumerate(fx["ns"]):
+        valid_alpha[i, :n] = True
+    return LaunchSpec(
+        name="fused_fit",
+        fn=partial(ff_ops.ref_twin(), steps=2, noise=0.1, lr=0.05),
+        args=(fx["x"], fx["y"], fx["mask"], fx["log_ls"], fx["log_sf"]),
+        taints=(obs((d,)), obs(), lane((m_pad, n_pad)),  # mask pinned
+                lane((m_pad, d)), lane((m_pad,))),
+        valid_outs=(~lane((m_pad, d)),                   # log_ls
+                    ~lane((m_pad,)),                     # log_sf
+                    ~lane((m_pad, n_pad, n_pad)),        # chol, pad
+                    valid_alpha),                        # block included
+        arg_names=("x", "y", "mask", "init_ls", "init_sf"),
+        twins=(ff_ops._fused_fit_launch, ff_ops._fused_fit_launch_donated))
+
+
+def _ranking_loss_spec() -> LaunchSpec:
+    """The padded RGPE scoring launch: pad rows (n_valid = 0) and each
+    row's pad columns are free; the per-row validity mask must fence
+    them out of every real row's misrank count."""
+    from repro.kernels.ranking_loss import ops as rl_ops
+    from repro.kernels.ranking_loss.ref import ranking_loss_padded_ref
+    rng = np.random.default_rng(2)
+    r_valid, r_pad, n_pad = 3, 4, 8
+    nvs = (5, 5, 3)
+    preds = np.zeros((r_pad, n_pad), np.float32)
+    ys = np.zeros((r_pad, n_pad), np.float32)
+    nv = np.zeros((r_pad,), np.int32)
+    for i, n in enumerate(nvs):
+        preds[i, :n] = rng.normal(0.0, 1.0, (n,))
+        ys[i, :n] = rng.normal(0.0, 1.0, (n,))
+        nv[i] = n
+    taint = np.zeros((r_pad, n_pad), bool)
+    for i, n in enumerate(nvs):
+        taint[i, n:] = True
+    taint[r_valid:] = True
+    valid = np.zeros((r_pad,), bool)
+    valid[:r_valid] = True
+    return LaunchSpec(
+        name="ranking_loss",
+        fn=ranking_loss_padded_ref,
+        args=(preds, ys, nv),
+        taints=(taint, taint.copy(), np.zeros((r_pad,), bool)),  # nv pinned
+        valid_outs=(valid,),
+        arg_names=("preds", "ys", "n_valid"),
+        twins=(rl_ops._ranking_loss_launch,
+               rl_ops._ranking_loss_launch_donated))
+
+
 _SPECS: Optional[List[LaunchSpec]] = None
 
 
@@ -367,7 +430,8 @@ def launch_specs(refresh: bool = False) -> List[LaunchSpec]:
     global _SPECS
     if _SPECS is None or refresh:
         _SPECS = (_gp_specs() + _ehvi_specs()
-                  + [_fused_posterior_spec()])
+                  + [_fused_posterior_spec(), _fused_fit_spec(),
+                     _ranking_loss_spec()])
     return _SPECS
 
 

@@ -69,7 +69,7 @@ def iter_live_plans(planner, limits) -> Iterable:
     front in ``_ehvi_fronts`` for EHVI buckets (lane counts thinned to
     {1, 2, max} there — the lane axis rounds identically across
     kinds)."""
-    from repro.core.plan import (EhviQuery, LooSampleQuery,
+    from repro.core.plan import (EhviQuery, FitQuery, LooSampleQuery,
                                  PosteriorQuery, SampleQuery)
     rng = np.random.default_rng(7)
     d, qg = limits.d, limits.q_grid
@@ -92,6 +92,23 @@ def iter_live_plans(planner, limits) -> Iterable:
                 yield planner.plan(
                     [LooSampleQuery(SimpleNamespace(n=n), None, s)]
                     * lanes)
+        # fit buckets: both steps rungs (warm refine + cold full) at
+        # every noise level. The live rungs come from LIMITS directly —
+        # mirroring the service, whose warm cache decides a query's
+        # steps — NOT from the planner's fit_step_rungs policy, so a
+        # planner that drops a rung from its enumeration surfaces here
+        # as an unenumerated live signature
+        live_rungs = sorted(
+            {int(limits.fit_steps)}
+            | ({int(limits.fit_warm_steps)}
+               if limits.fit_warm_steps else set()))
+        for steps in live_rungs:
+            for noise in limits.noises:
+                for lanes in thin_lanes:
+                    yield planner.plan(
+                        [FitQuery(np.zeros((n, d), np.float32),
+                                  np.zeros((n,), np.float32),
+                                  noise, steps)] * lanes)
     fronts = _ehvi_fronts(limits, rng)
     for n_obj in limits.n_objectives:
         for s in limits.n_mc:

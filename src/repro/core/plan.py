@@ -23,6 +23,8 @@ testable IR:
                          posterior rows (MOO EHVI sampling)
     ``EhviQuery``        MC-EHVI of raw-scale draws against (n_obj, S, q)
                          a session's front (any n_obj >= 2)
+    ``FitQuery``         warm-startable GP fit of one       (d, steps,
+                         model's observations               noise)
     ==================== ================================== =============
 
   - ``StepPlanner`` — owns ALL bucketing/padding policy in one place.
@@ -76,8 +78,8 @@ from .acquisition import (EHVI_BOX_CHUNK, _ehvi_box_launch,
 from .gp import (GP, BatchedGP, _batched_loo_launch,
                  _batched_loo_launch_donated, _batched_posterior,
                  _batched_posterior_donated, _batched_sample_launch,
-                 _batched_sample_launch_donated, _pad_stack_obs,
-                 fit_gp_batched, sharded_fit_launches)
+                 _batched_sample_launch_donated, _pack_fit_lanes,
+                 _pad_stack_obs, fit_gp_batched, sharded_fit_launches)
 
 # -- the one home of the shape policy ---------------------------------------
 OBS_ROUND_TO = 8        # observation axis pads to multiples of this
@@ -172,6 +174,28 @@ class EhviQuery:
     n_mc: Optional[int] = None
 
 
+@dataclasses.dataclass(frozen=True)
+class FitQuery:
+    """Fit one GP model's hyperparameters from its raw observations —
+    the fit leg as a first-class plan node. ``x``: (n, d) raw inputs,
+    ``y``: (n,) raw objective values (standardisation happens at
+    packing, exactly as in ``fit_gp_batched``). ``steps`` is the Adam
+    schedule length and part of the bucket key: warm lanes carry their
+    previous hyperparameters in ``init_ls``/``init_sf`` and ask for the
+    short refine rung (``CohortLimits.fit_warm_steps``), cold lanes
+    leave them ``None`` (zero init) on the full rung
+    (``CohortLimits.fit_steps``). Result: ``(stack, lane)`` — the
+    bucket's fitted ``BatchedGP`` plus this query's lane index in it
+    (``stack.extract(lane)`` recovers the unbatched model)."""
+    x: Any
+    y: Any
+    noise: float
+    steps: int
+    init_ls: Any = None
+    init_sf: Any = None
+    owner: Any = None
+
+
 # ---------------------------------------------------------------------------
 # The plan IR
 # ---------------------------------------------------------------------------
@@ -217,6 +241,7 @@ class CohortLimits:
     max_ehvi_boxes: int = 1
     noises: Tuple[float, ...] = (0.1,)
     fit_steps: int = 120
+    fit_warm_steps: int = 16
 
 
 @dataclasses.dataclass
@@ -333,6 +358,11 @@ class StepPlanner:
             s_shape = np.shape(query.samples[0])
             return "ehvi", (len(query.samples), int(s_shape[0]),
                             int(s_shape[1]))
+        if isinstance(query, FitQuery):
+            # steps and noise are jit-static on the fit launch, so warm
+            # and cold lanes land in DIFFERENT buckets by construction
+            return "fit", (int(np.shape(query.x)[1]), int(query.steps),
+                           float(query.noise))
         raise TypeError(f"not a query node: {query!r}")
 
     def plan(self, queries: Sequence) -> StepPlan:
@@ -398,6 +428,12 @@ class StepPlanner:
                 "l_pad": self.round_models(len(queries)),
                 "lanes": len(queries)}
 
+    def _pads_fit(self, key, queries, idxs, prep) -> Dict[str, int]:
+        lanes = len(queries)
+        n_max = max(int(np.shape(q.y)[0]) for q in queries)
+        return {"n_pad": self.round_obs(n_max),
+                "m_pad": self.round_models(lanes), "lanes": lanes}
+
     # -- the closed bucket vocabulary ----------------------------------------
     def _obs_pads(self, max_obs: int) -> List[int]:
         step = max(1, self.obs_round_to)
@@ -426,6 +462,17 @@ class StepPlanner:
             k += EHVI_BOX_CHUNK
         return out
 
+    def fit_step_rungs(self, limits: CohortLimits) -> List[int]:
+        """The fit leg's schedule-length vocabulary: the warm (short
+        refine) rung and the cold (full) rung — deduplicated, since a
+        service may disable warm starts by equating the two. A mutant
+        that drops the warm rung here opens a vocabulary hole the
+        closure analysis must catch (``repro.analysis.mutants``)."""
+        rungs = {int(limits.fit_steps)}
+        if limits.fit_warm_steps:
+            rungs.add(int(limits.fit_warm_steps))
+        return sorted(rungs)
+
     def enumerate_buckets(self, limits: CohortLimits) -> List[Bucket]:
         """Walk the CLOSED launch-shape vocabulary a cohort bounded by
         ``limits`` can produce — one ``Bucket`` (empty ``indices``) per
@@ -441,7 +488,9 @@ class StepPlanner:
         buckets) and the sample count; LOO launches vary (n_pad, l_pad)
         per sample count; EHVI launches vary the candidate bucket (the
         remaining-candidate set shrinks every iteration), the box-axis
-        pad, and the MOO lane pad per (n_obj, n_mc)."""
+        pad, and the MOO lane pad per (n_obj, n_mc); fit launches vary
+        (n_pad, m_pad) per (noise, steps-rung) — the warm and cold
+        schedule lengths from ``fit_step_rungs``."""
         out: List[Bucket] = []
         obs = self._obs_pads(limits.max_obs)
         lanes = self._lane_pads(limits.max_lanes)
@@ -472,6 +521,14 @@ class StepPlanner:
                                 "ehvi", (n_obj, s, q_pad), (),
                                 {"k_pad": k_pad, "q_pad": q_pad,
                                  "l_pad": l_pad, "lanes": l_pad}))
+        for noise in limits.noises:
+            for steps in self.fit_step_rungs(limits):
+                for n_pad in obs:
+                    for m_pad in lanes:
+                        out.append(Bucket(
+                            "fit", (limits.d, steps, float(noise)), (),
+                            {"n_pad": n_pad, "m_pad": m_pad,
+                             "lanes": m_pad}))
         return out
 
     def launch_signature(self, bucket: Bucket) -> Tuple:
@@ -496,6 +553,12 @@ class StepPlanner:
         elif k == "ehvi":
             sig = ("ehvi", key[0], key[1], p["q_pad"], p["k_pad"],
                    p["l_pad"])
+        elif k == "fit":
+            # the schedule length is a jit-static rung of the closed
+            # vocabulary, not an axis — named so golden-signature tests
+            # can't confuse it with the obs pad
+            sig = ("fit", key[0], p["n_pad"], p["m_pad"],
+                   ("steps", key[1]), ("noise", key[2]))
         else:
             raise ValueError(f"unknown bucket kind {k!r}")
         if self.lane_shards > 1 and k != "draw":
@@ -563,13 +626,60 @@ def _shard_base(kind: str):
     if kind == "fused_ehvi":
         from repro.kernels.fused_ehvi.ops import fused_ehvi
         return fused_ehvi, True, (0, 1, 2, 3, 4, 5, 6, 7)
+    if kind == "fused_fit":
+        from repro.kernels.fused_fit.ops import fused_fit
+        return fused_fit, True, (3, 4)
     raise ValueError(f"no sharded twin for launch kind {kind!r}")
+
+
+def sharded_fused_fit_launch(mesh, axis: str, donate: bool):
+    """Shard-mapped twin of the fused fit launch. The generic wrapper
+    below only threads ``impl`` statically, but the fit leg's schedule
+    length and noise are jit-static rungs of the vocabulary too — so it
+    gets its own wrapper binding all three before shard_map. One jitted
+    entry covers every (steps, noise) rung (jit caches per static), and
+    only the per-step-rebuilt warm-start rows are donated."""
+    cache_key = (mesh, axis, "fused_fit", donate)
+    hit = _SHARDED_LAUNCHES.get(cache_key)
+    if hit is not None:
+        return hit
+    from repro.kernels.fused_fit.ops import fused_fit
+    from repro.launch.compile_stats import register_launch
+    spec = PartitionSpec(axis)
+
+    def run(x, y, mask, init_ls, init_sf, *, steps: int = 120,
+            noise: float = 0.1, lr: float = 0.05, impl: str = "xla"):
+        body = functools.partial(fused_fit, steps=steps, noise=noise,
+                                 lr=lr, impl=impl)
+        return shard_map(body, mesh, in_specs=(spec,) * 5,
+                         out_specs=spec, check_vma=False)(
+            x, y, mask, init_ls, init_sf)
+
+    kw: Dict[str, Any] = {"static_argnames": ("steps", "noise", "lr",
+                                              "impl")}
+    if donate:
+        kw["donate_argnums"] = (3, 4)
+    launch = jax.jit(run, **kw)
+    register_launch(
+        f"fused_fit_sharded{'_donated' if donate else ''}"
+        f"_x{mesh_axis_size(mesh, axis)}_{len(_SHARDED_LAUNCHES)}",
+        launch)
+    sharding = NamedSharding(mesh, spec)
+
+    def placed(*args, **kwargs):
+        return launch(*(jax.device_put(a, sharding) for a in args),
+                      **kwargs)
+
+    _SHARDED_LAUNCHES[cache_key] = placed
+    return placed
 
 
 def sharded_bucket_launch(mesh, axis: str, kind: str, donate: bool):
     """The jitted shard-mapped twin of one bucket launch kind, cached
     per (mesh, axis, kind, donate) so repeated steps re-enter one jit
     cache (and ``CompileWatcher`` sees one stable tracked entry)."""
+    if kind == "fused_fit":   # extra statics: steps/noise/lr rungs
+        return sharded_fused_fit_launch(mesh, axis, donate)
     cache_key = (mesh, axis, kind, donate)
     hit = _SHARDED_LAUNCHES.get(cache_key)
     if hit is not None:
@@ -979,3 +1089,53 @@ class PlanExecutor:
                               fused_ehvi_launch_fn(donate=True))
         out = launch(*parts, impl=r_impl)
         return [np.asarray(out[j])[:q] for j in range(len(queries))]
+
+    def _exec_fit(self, bucket, queries, plan, impl):
+        """One ``kernels.fused_fit`` launch for the bucket: pack the raw
+        observations host-side (vectorised standardisation, zero-padded
+        lanes), overlay warm-start rows, fit every lane in one launch,
+        and hand each query ``(stack, lane)`` into the bucket's fitted
+        ``BatchedGP``. Only the warm-start rows are donated — the
+        packed x/y/mask become the stack the posterior legs query, so
+        they must outlive the launch."""
+        from repro.kernels.fused_fit import fused_fit_launch_fn
+        d, steps, noise = bucket.key
+        n_pad, m_pad = bucket.pads["n_pad"], bucket.pads["m_pad"]
+        xs = [np.asarray(query.x, np.float32) for query in queries]
+        ys = [np.asarray(query.y, np.float32) for query in queries]
+        ns = [int(yi.shape[0]) for yi in ys]
+        if m_pad > len(queries):   # padded lanes repeat lane 0, thrown away
+            extra = m_pad - len(queries)
+            xs += [xs[0]] * extra
+            ys += [ys[0]] * extra
+            ns += [ns[0]] * extra
+        x_np, ysd, mask_np, y_mean, y_std = _pack_fit_lanes(
+            xs, ys, ns, n_pad)
+        ils = np.zeros((m_pad, d), np.float32)
+        isf = np.zeros((m_pad,), np.float32)
+        for j, query in enumerate(queries):
+            if query.init_ls is not None:
+                ils[j] = np.asarray(query.init_ls, np.float32)
+                isf[j] = np.float32(query.init_sf)
+        gx = jnp.asarray(x_np)
+        gy = jnp.asarray(ysd)
+        gmask = jnp.asarray(mask_np)
+        # all five launch args are host-built fresh above (device
+        # transfers of new numpy buffers), so donation is alias-safe
+        # without the single-query guard; only gils/gisf (the donated
+        # positions) die at launch — x/y/mask stay live to seed the
+        # returned BatchedGP
+        gils = jnp.asarray(ils)
+        gisf = jnp.asarray(isf)
+        r_impl = resolve_impl(impl, cells=m_pad * n_pad * n_pad * steps,
+                              shards=self.lane_shards)
+        launch = self._launch("fused_fit",
+                              fused_fit_launch_fn(donate=False),
+                              fused_fit_launch_fn(donate=True))
+        log_ls, log_sf, chol, alpha = launch(
+            gx, gy, gmask, gils, gisf, steps=steps, noise=noise,
+            impl=r_impl)
+        stack = BatchedGP(gx, gy, gmask, jnp.asarray(y_mean),
+                          jnp.asarray(y_std), log_ls, log_sf, noise,
+                          chol, alpha, jnp.asarray(ns, jnp.int32))
+        return [(stack, j) for j in range(len(queries))]

@@ -37,7 +37,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.ranking_loss import ranking_loss, ranking_loss_padded
+from repro.kernels.ranking_loss import (ranking_loss,
+                                        ranking_loss_launch_fn,
+                                        ranking_loss_padded)
 from .gp import (GP, BatchedGP, batched_posterior, batched_sample,
                  gp_loo_samples, gp_posterior, gp_sample)
 from .plan import (LooSampleQuery, PlanExecutor, SampleQuery,
@@ -242,13 +244,31 @@ def compute_weights_multi(
     if not rows_p:
         return out
 
-    n_max = max(p.shape[1] for p in rows_p)
+    # planner-policy padding closes the launch's shape vocabulary: the
+    # sample axis rounds like an observation axis, the row axis like a
+    # fused lane axis (pow2, shard-lifted). Pad rows carry n_valid = 0
+    # — zero rankable pairs, score 0 — and per-row independence keeps
+    # the real rows bitwise identical to the exact-shape launch.
+    planner = planner if planner is not None else StepPlanner()
+    n_pad = planner.round_obs(max(p.shape[1] for p in rows_p))
     preds = jnp.concatenate(
-        [jnp.pad(p, ((0, 0), (0, n_max - p.shape[1]))) for p in rows_p])
+        [jnp.pad(p, ((0, 0), (0, n_pad - p.shape[1]))) for p in rows_p])
     ys = jnp.concatenate(
-        [jnp.pad(y, ((0, 0), (0, n_max - y.shape[1]))) for y in rows_y])
-    loss = ranking_loss_padded(preds, ys, jnp.concatenate(rows_nv),
-                               impl=impl)
+        [jnp.pad(y, ((0, 0), (0, n_pad - y.shape[1]))) for y in rows_y])
+    nv = jnp.concatenate(rows_nv)
+    r = int(preds.shape[0])
+    r_pad = planner.round_models(r)
+    if r_pad > r:
+        preds = jnp.pad(preds, ((0, r_pad - r), (0, 0)))
+        ys = jnp.pad(ys, ((0, r_pad - r), (0, 0)))
+        nv = jnp.pad(nv, (0, r_pad - r))
+    # every argument is a fresh per-step stack, so the donating twin
+    # (pinned by the sharing service's executor when one is passed) is
+    # alias-safe
+    launch = ranking_loss_launch_fn(
+        donate=plan_executor.donate if plan_executor is not None
+        else None)
+    loss = launch(preds, ys, nv, impl=impl)[:r]
     # one vectorised weight reduction per (m, S) shape group instead of
     # a per-job loop of small eager ops
     offs, off = [], 0

@@ -1,0 +1,6 @@
+from .ops import fused_fit, fused_fit_launch_fn
+from .ref import fused_fit_ref
+from .fused import fused_fit_pallas
+
+__all__ = ["fused_fit", "fused_fit_ref", "fused_fit_pallas",
+           "fused_fit_launch_fn"]

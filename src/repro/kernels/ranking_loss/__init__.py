@@ -1,5 +1,6 @@
-from .ops import ranking_loss, ranking_loss_padded
+from .ops import (ranking_loss, ranking_loss_launch_fn,
+                  ranking_loss_padded)
 from .ref import ranking_loss_padded_ref, ranking_loss_ref
 
 __all__ = ["ranking_loss", "ranking_loss_padded", "ranking_loss_ref",
-           "ranking_loss_padded_ref"]
+           "ranking_loss_padded_ref", "ranking_loss_launch_fn"]

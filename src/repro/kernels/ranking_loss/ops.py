@@ -90,3 +90,31 @@ def ranking_loss_padded(preds: jnp.ndarray, ys: jnp.ndarray,
     if impl == "pallas_interpret":
         return _pallas_padded(preds, ys, n_valid, interpret=True)
     raise ValueError(f"unknown ranking_loss impl {impl!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def _ranking_loss_launch(preds, ys, n_valid, impl: str = "xla"):
+    """The jitted (tracked) entry for the padded ranking loss — part of
+    the compile-once launch vocabulary (``launch.compile_stats``).
+    Callers pad the row axis to the planner's lane policy and the
+    sample axis to the observation policy before dispatch, so the shape
+    set is closed by the cohort bounds."""
+    return ranking_loss_padded(preds, ys, n_valid, impl=impl)
+
+
+_ranking_loss_launch_donated = jax.jit(
+    lambda preds, ys, n_valid, impl="xla":
+        ranking_loss_padded(preds, ys, n_valid, impl=impl),
+    static_argnames=("impl",), donate_argnums=(2,))
+
+
+def ranking_loss_launch_fn(donate=None):
+    """Donating twin on TPU by default. Only ``n_valid`` is donated:
+    it matches the (R,) int32 output buffer exactly, while the float32
+    sample matrices can never be reused for an int32 result (donating
+    them would only trigger unusable-donation warnings). The counts
+    are a fresh per-step stack, rebuilt before each scoring round, so
+    the donation is unconditionally alias-safe."""
+    if donate is None:
+        donate = jax.default_backend() == "tpu"
+    return _ranking_loss_launch_donated if donate else _ranking_loss_launch

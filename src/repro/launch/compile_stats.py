@@ -41,7 +41,8 @@ _STATIC_NAMES = frozenset({
     "fit", "chol_alpha", "posterior", "posterior_donated", "sample",
     "sample_donated", "loo", "loo_donated", "ehvi", "ehvi_donated",
     "fused_posterior", "fused_posterior_donated", "fused_ehvi",
-    "fused_ehvi_donated"})
+    "fused_ehvi_donated", "fused_fit", "fused_fit_donated",
+    "ranking_loss", "ranking_loss_donated"})
 
 
 def register_launch(name: str, fn) -> None:
@@ -67,7 +68,9 @@ def tracked_launches() -> Dict[str, object]:
     importable before the heavy model modules are)."""
     from repro.core import acquisition, gp
     from repro.kernels.fused_ehvi import ops as fused_ehvi_ops
+    from repro.kernels.fused_fit import ops as fused_fit_ops
     from repro.kernels.fused_posterior import ops as fused_ops
+    from repro.kernels.ranking_loss import ops as ranking_ops
 
     return {
         **_DYNAMIC,
@@ -85,6 +88,10 @@ def tracked_launches() -> Dict[str, object]:
         "fused_posterior_donated": fused_ops._fused_launch_donated,
         "fused_ehvi": fused_ehvi_ops._fused_ehvi_launch,
         "fused_ehvi_donated": fused_ehvi_ops._fused_ehvi_launch_donated,
+        "fused_fit": fused_fit_ops._fused_fit_launch,
+        "fused_fit_donated": fused_fit_ops._fused_fit_launch_donated,
+        "ranking_loss": ranking_ops._ranking_loss_launch,
+        "ranking_loss_donated": ranking_ops._ranking_loss_launch_donated,
     }
 
 

@@ -17,14 +17,14 @@ See ``repro.core.plan`` for the node table and the exact-padding
 contract.
 """
 from repro.core.plan import (GRID_ROUND_TO, M_ROUND_POW2, OBS_ROUND_TO,
-                             Bucket, CohortLimits, EhviQuery, LooSampleQuery,
-                             PlanExecutor, PosteriorDrawQuery,
-                             PosteriorQuery, SampleQuery, StepPlan,
-                             StepPlanner)
+                             Bucket, CohortLimits, EhviQuery, FitQuery,
+                             LooSampleQuery, PlanExecutor,
+                             PosteriorDrawQuery, PosteriorQuery,
+                             SampleQuery, StepPlan, StepPlanner)
 
 __all__ = [
     "OBS_ROUND_TO", "GRID_ROUND_TO", "M_ROUND_POW2",
     "Bucket", "CohortLimits", "StepPlan", "StepPlanner", "PlanExecutor",
     "PosteriorQuery", "SampleQuery", "LooSampleQuery",
-    "PosteriorDrawQuery", "EhviQuery",
+    "PosteriorDrawQuery", "EhviQuery", "FitQuery",
 ]

@@ -74,16 +74,18 @@ from repro.core.bo import (KEY_PURPOSE_MOO_EHVI, KEY_PURPOSE_RGPE, BOConfig,
                            _model_posteriors_augmented, _should_stop_early,
                            _target_runs, derive_key)
 from repro.core.encoding import SearchSpace
-from repro.core.gp import GP, BatchedGP, GPParams, batched_posterior
+from repro.core.gp import (GP, BatchedGP, GPParams, _pad_stack_obs,
+                           batched_posterior)
 from repro.core.repository import Repository
 from repro.core.rgpe import WeightJob, mix_weighted
+from repro.kernels.ranking_loss import ranking_loss_launch_fn
 from repro.core.types import (BOResult, Constraint, Objective, Observation,
                               RunRecord)
 from repro.launch.compile_stats import CompileWatcher
-from repro.serve.plan import (CohortLimits, EhviQuery, LooSampleQuery,
-                              PlanExecutor, PosteriorDrawQuery,
-                              PosteriorQuery, SampleQuery, StepPlan,
-                              StepPlanner)
+from repro.serve.plan import (CohortLimits, EhviQuery, FitQuery,
+                              LooSampleQuery, PlanExecutor,
+                              PosteriorDrawQuery, PosteriorQuery,
+                              SampleQuery, StepPlan, StepPlanner)
 from repro.serve.profile_executor import (ProfileJob, ProfileOutcome,
                                           SyncProfileExecutor)
 
@@ -173,6 +175,13 @@ class _Session:
         self._launch_seq = 0           # session-local submission index
         self._record_seq = 0           # next seq to absorb
         self._held: Dict[int, ProfileOutcome] = {}
+        # warm-start cache of the incremental fit leg: measure ->
+        # (observation version, log_ls, log_sf) host rows from the last
+        # fit. An entry means the next fit of that measure rides the
+        # short warm rung; the version records which observation set
+        # produced it (diagnostics — the warm start is a valid initial
+        # point for ANY later observation set of the same model).
+        self.fit_cache: Dict[str, Tuple[int, np.ndarray, np.ndarray]] = {}
 
     def launch(self, ci: int, tag: str = "bo") -> ProfileJob:
         """Reserve candidate ``ci`` and build its executor job; the
@@ -305,7 +314,8 @@ class SearchService:
                           "sample_wall_s"),
                   "draw": ("sample_batches", "sample_queries",
                            "sample_wall_s"),
-                  "ehvi": ("ehvi_batches", "ehvi_jobs", "ehvi_wall_s")}
+                  "ehvi": ("ehvi_batches", "ehvi_jobs", "ehvi_wall_s"),
+                  "fit": ("fit_batches", "fit_jobs", "fit_wall_s")}
 
     def __init__(self, repository: Optional[Repository] = None, *,
                  slots: int = 8, executor=None, wait_mode: str = "any",
@@ -313,7 +323,9 @@ class SearchService:
                  fuse_posteriors: bool = True, fuse_samples: bool = True,
                  planner: Optional[StepPlanner] = None,
                  plan_executor: Optional[PlanExecutor] = None,
-                 mesh=None, data_axis: str = "data"):
+                 mesh=None, data_axis: str = "data",
+                 fit_steps: int = 120,
+                 fit_warm_steps: Optional[int] = 16):
         if wait_mode not in ("any", "all"):
             raise ValueError(f"unknown wait_mode {wait_mode!r}")
         self.repo = repository if repository is not None else Repository()
@@ -324,6 +336,13 @@ class SearchService:
         self.profile_timeout = profile_timeout
         self.fuse_posteriors = fuse_posteriors
         self.fuse_samples = fuse_samples
+        # the incremental fit leg: models with cached hyperparameters
+        # refit on the short warm rung, new/cold models pay the full
+        # schedule. ``fit_warm_steps=None`` (or 0) disables warm starts
+        # — every lane refits cold, the parity/benchmark baseline.
+        self.fit_steps = int(fit_steps)
+        self.fit_warm_steps = (int(fit_warm_steps)
+                               if fit_warm_steps else 0)
         # ALL bucketing/padding policy lives in the planner; the service
         # only emits queries and scatters results. ``mesh`` constructs
         # BOTH defaults in sharded mode (lane pads rounded to shard
@@ -350,7 +369,9 @@ class SearchService:
                       "plan_compile_misses": 0, "precompiled_buckets": 0,
                       "precompile_compiles": 0, "fit_wall_s": 0.0,
                       "posterior_wall_s": 0.0, "sample_wall_s": 0.0,
-                      "ehvi_wall_s": 0.0, "plan_wall_s": 0.0}
+                      "ehvi_wall_s": 0.0, "plan_wall_s": 0.0,
+                      "fit_warm_lanes": 0, "fit_cold_lanes": 0,
+                      "fit_fused_batches": 0}
         # launch signatures covered by precompile() — empty until called
         self.precompiled_signatures: set = set()
 
@@ -421,10 +442,17 @@ class SearchService:
         shape — executing (not just AOT-lowering) is deliberate: in
         current jax ``lower().compile()`` does not populate the jit call
         cache, and only the executed path exercises the identical impl
-        routing and kernel dispatch serving will use. The vmapped fit
-        launches (the one jit vocabulary outside the plan) are warmed
-        from the same limits. Returns ``{"buckets", "compiles"}`` and
-        folds both into ``stats``."""
+        routing and kernel dispatch serving will use. The target fit
+        leg is part of the enumerated vocabulary (fit buckets walk both
+        the warm and cold ``steps`` rungs); the legacy vmapped fit
+        launches are ALSO warmed from the same limits — the support-
+        model store still fits through ``fit_targets``. The padded
+        ranking-loss launch (the RGPE scoring hot spot) is warmed over
+        its limits-closed shape set too: its row count is the step's
+        ensemble rows — at most ``max_lanes`` stacks of ``n_samples``
+        draws — rounded by the lane policy, and its column count rounds
+        like an observation axis. Returns ``{"buckets", "compiles"}``
+        and folds both into ``stats``."""
         watch = CompileWatcher()
         buckets = self.planner.enumerate_buckets(limits)
         for bucket in buckets:
@@ -441,6 +469,20 @@ class SearchService:
                         [np.zeros((n_pad, limits.d), np.float32)] * m_pad,
                         [np.arange(n_pad, dtype=np.float32)] * m_pad,
                         noise=noise, steps=limits.fit_steps)
+        if limits.n_samples:
+            # the launch's impl is jit-static and comes from the
+            # tenants' BOConfig.kernel_impl; the cohort default ("xla")
+            # is the warmed vocabulary — a per-tenant Pallas override
+            # opts out of the zero-recompile claim for this leg
+            launch = ranking_loss_launch_fn(donate=self.plan_executor.donate)
+            row_pads = sorted({self.planner.round_models(k * s)
+                               for s in limits.n_samples
+                               for k in range(1, limits.max_lanes + 1)})
+            for n_pad in self.planner._obs_pads(limits.max_obs):
+                for r_pad in row_pads:
+                    launch(jnp.zeros((r_pad, n_pad), jnp.float32),
+                           jnp.zeros((r_pad, n_pad), jnp.float32),
+                           jnp.zeros((r_pad,), jnp.int32), impl="xla")
         self.precompiled_signatures = {
             self.planner.launch_signature(b) for b in buckets}
         compiles = watch.misses()
@@ -502,6 +544,15 @@ class SearchService:
                                      np.full((n_obj,), 2.0))
                            for _ in range(pads["l_pad"])]
             return queries, {i: box for i in range(len(queries))}
+        if kind == "fit":
+            d_, steps, noise_ = key
+            # nonzero distinct y: the packing standardises per lane and
+            # clamps y_std, so any values compile — but a spread keeps
+            # the dummy on the same numeric path as live data
+            return [FitQuery(np.zeros((pads["n_pad"], d_), np.float32),
+                             np.arange(pads["n_pad"], dtype=np.float32),
+                             noise_, steps)
+                    for _ in range(pads["m_pad"])], {}
         raise ValueError(f"unknown bucket kind {kind!r}")
 
     @staticmethod
@@ -661,18 +712,65 @@ class SearchService:
             self.stats["plan_queries"] += c.get("queries", 0)
             self.stats["plan_wall_s"] += c.get("wall_s", 0.0)
 
+    @staticmethod
+    def _regroup_fit(entries: List[Tuple[BatchedGP, int]],
+                     noise: float) -> BatchedGP:
+        """Assemble one (space, noise) group's target stack from the
+        fit round's per-query ``(bucket stack, lane)`` results. Warm
+        and cold lanes of a group come back in DIFFERENT bucket stacks
+        (the schedule length is part of the bucket key), possibly at
+        different observation pads — re-pad to the common maximum
+        (``_pad_stack_obs``'s exactness contract) and gather each
+        lane's rows, preserving the group's owner order."""
+        n_max = max(st.n_max for st, _ in entries)
+        padded: Dict[int, Tuple] = {}
+        rows: Dict[str, List[Any]] = {k: [] for k in (
+            "x", "y", "mask", "y_mean", "y_std", "ls", "sf", "chol",
+            "alpha", "cnt")}
+        for st, ln in entries:
+            c = padded.get(id(st))
+            if c is None:
+                p = n_max - st.n_max
+                x, mask, chol, alpha = _pad_stack_obs(st, n_max)
+                y = jnp.pad(st.y, ((0, 0), (0, p))) if p else st.y
+                c = (x, y, mask, chol, alpha)
+                padded[id(st)] = c
+            x, y, mask, chol, alpha = c
+            rows["x"].append(x[ln])
+            rows["y"].append(y[ln])
+            rows["mask"].append(mask[ln])
+            rows["chol"].append(chol[ln])
+            rows["alpha"].append(alpha[ln])
+            rows["y_mean"].append(st.y_mean[ln])
+            rows["y_std"].append(st.y_std[ln])
+            rows["ls"].append(st.log_lengthscales[ln])
+            rows["sf"].append(st.log_signal[ln])
+            rows["cnt"].append(st.counts[ln])
+        return BatchedGP(
+            jnp.stack(rows["x"]), jnp.stack(rows["y"]),
+            jnp.stack(rows["mask"]), jnp.stack(rows["y_mean"]),
+            jnp.stack(rows["y_std"]), jnp.stack(rows["ls"]),
+            jnp.stack(rows["sf"]), noise, jnp.stack(rows["chol"]),
+            jnp.stack(rows["alpha"]), jnp.stack(rows["cnt"]))
+
     def _posterior_phase(self, sessions: List[_Session]
                          ) -> Dict[int, Dict[str, Dict]]:
-        """COLLECT every grid-posterior query of the step — target
-        stacks (fit in one vmapped batch per (space, noise) group under
-        the planner's shape policy), every karasu ensemble's support
-        stack, MOO models, all tenants — PLAN them into fused buckets,
-        EXECUTE one launch per bucket, and SCATTER the rows back to
-        their owning (session, measure) slots. RGPE weights score
+        """COLLECT every model query of the step in two planned rounds.
+        The FIT round first: one ``FitQuery`` per (session, measure)
+        target model across all (space, noise) groups — warm lanes
+        (hyperparameters cached from the previous step) on the short
+        refine rung, cold lanes on the full schedule — executed as one
+        ``kernels.fused_fit`` launch per (d, steps, noise) bucket, then
+        regrouped into per-group target stacks. Then the POSTERIOR
+        round: every grid-posterior query — target stacks, every karasu
+        ensemble's support stack, MOO models, all tenants — planned
+        into fused buckets, one launch per bucket, rows scattered back
+        to their owning (session, measure) slots. RGPE weights score
         between collect and scatter (one padded ranking-loss launch per
         kernel impl, its sample draws planned through the same layer).
-        With ``fuse_posteriors=False`` the phase degrades to the
-        historical per-group + per-ensemble loop."""
+        With ``fuse_posteriors=False`` the posterior half degrades to
+        the historical per-group + per-ensemble loop (the fit round
+        still plans)."""
         groups: Dict[Tuple[Any, float], List[_Session]] = {}
         posts: Dict[int, Dict[str, Dict]] = {}
         for s in sessions:
@@ -683,29 +781,62 @@ class SearchService:
                 continue
             groups.setdefault((s.space_key, s.cfg.noise), []).append(s)
 
-        # -- collect ---------------------------------------------------------
-        # (session, measure, bases, WeightJob) across ALL groups
-        rgpe_jobs: List[Tuple[_Session, str, Any, WeightJob]] = []
-        queries: List[PosteriorQuery] = []
-        for (_, noise), group in groups.items():
-            xs, ys, owners = [], [], []
+        # -- collect: the fit round ------------------------------------------
+        # one FitQuery per (session, measure) model across ALL groups —
+        # warm lanes (cached hyperparameters) ask for the short refine
+        # rung, cold lanes the full schedule; the planner buckets them
+        # by (d, steps, noise) and the executor runs ONE fused launch
+        # per bucket, so a step's whole fit leg is a handful of
+        # ``kernels.fused_fit`` launches instead of a vmapped 120-step
+        # Adam per group
+        fit_queries: List[FitQuery] = []
+        fit_owners: List[Tuple[_Session, str]] = []
+        group_lanes: Dict[Tuple[Any, float], List[int]] = {}
+        for gk, group in groups.items():
+            noise = gk[1]
+            lanes = group_lanes.setdefault(gk, [])
             for s in group:
                 x = np.stack([o.x for o in s.observations])
                 for m in s.measures:
-                    xs.append(x)
-                    ys.append(np.array([o.measures[m]
-                                        for o in s.observations]))
-                    owners.append((s, m))
-            # async cohorts vary step to step; the planner's jit-shape
-            # policy keeps the vmapped fit from recompiling. The wall
-            # counter is the same host-side dispatch measure as the
-            # per-bucket ones — comparable against ``*_wall_s`` to
-            # judge whether the fit leg deserves a fused Pallas twin.
-            t0 = time.perf_counter()
-            tgts = self.planner.fit_targets(xs, ys, noise=noise)
-            self.stats["fit_wall_s"] += time.perf_counter() - t0
-            self.stats["fit_batches"] += 1
-            self.stats["fit_jobs"] += len(owners)
+                    y = np.array([o.measures[m] for o in s.observations])
+                    entry = (s.fit_cache.get(m) if self.fit_warm_steps
+                             else None)
+                    if entry is not None:
+                        self.stats["fit_warm_lanes"] += 1
+                        q = FitQuery(x, y, noise, self.fit_warm_steps,
+                                     init_ls=entry[1], init_sf=entry[2])
+                    else:
+                        self.stats["fit_cold_lanes"] += 1
+                        q = FitQuery(x, y, noise, self.fit_steps)
+                    lanes.append(len(fit_queries))
+                    fit_queries.append(q)
+                    fit_owners.append((s, m))
+        fc: Dict[str, Dict[str, int]] = {}
+        fit_res = self.plan_executor.execute(
+            self.planner.plan(fit_queries), counters=fc)
+        self._count_plan(fc)
+        self.stats["fit_fused_batches"] += \
+            fc.get("fit", {}).get("launches", 0)
+        # refresh every lane's warm-start cache from the fitted stacks
+        # (one host transfer per bucket stack, not per lane)
+        host: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        for (s, m), (st, ln) in zip(fit_owners, fit_res):
+            h = host.get(id(st))
+            if h is None:
+                h = (np.asarray(st.log_lengthscales),
+                     np.asarray(st.log_signal))
+                host[id(st)] = h
+            s.fit_cache[m] = (len(s.observations), h[0][ln], h[1][ln])
+
+        # -- collect: posteriors over the fitted stacks ----------------------
+        # (session, measure, bases, WeightJob) across ALL groups
+        rgpe_jobs: List[Tuple[_Session, str, Any, WeightJob]] = []
+        queries: List[PosteriorQuery] = []
+        for gk, group in groups.items():
+            noise = gk[1]
+            owners = [(s, m) for s in group for m in s.measures]
+            tgts = self._regroup_fit(
+                [fit_res[i] for i in group_lanes[gk]], noise)
 
             xq_all = group[0].xq_all
             if self.fuse_posteriors:

@@ -56,6 +56,17 @@ def test_vocabulary_hole_is_flagged():
     assert findings and all(f.launch == "ehvi" for f in findings)
 
 
+def test_fit_rung_vocabulary_hole_is_flagged():
+    """Dropping the warm steps rung from the fit enumeration must
+    surface: the live cohort (whose warm cache emits short-refine
+    FitQuery nodes) produces fit signatures outside the vocabulary."""
+    findings = check_closure(
+        planner_factory=mutants.fit_rung_hole_planner_factory(),
+        shard_sizes=(1,))
+    assert findings and all(f.launch == "fit" for f in findings)
+    assert any("'steps', 16" in f.path for f in findings)
+
+
 def test_weak_typed_launch_arg_is_flagged():
     findings = check_weak_types([mutants.weak_type_posterior_spec()])
     assert len(findings) == 1

@@ -355,3 +355,39 @@ def test_batched_ensemble_posterior_matches_sequential():
     mu_b, var_b = ensemble_posterior_batched(bens, xq)
     np.testing.assert_allclose(np.asarray(mu_b), np.asarray(mu), atol=TOL)
     np.testing.assert_allclose(np.asarray(var_b), np.asarray(var), atol=TOL)
+
+
+def test_pack_fit_lanes_standardisation_is_bitwise_per_lane():
+    """The one-shot f64-accumulated standardisation in _pack_fit_lanes
+    must be BITWISE identical to an explicit per-lane float64 loop
+    mirroring its operation order: both the legacy vmapped fit and the
+    fused fit leg consume this packing, so any drift here would
+    silently fork their parity baselines. Includes a single-observation
+    lane and a constant-target lane (the 1e-8 std clamp path)."""
+    from repro.core.gp import _pack_fit_lanes
+    rng = np.random.default_rng(11)
+    counts = (7, 5, 1, 4)
+    d, nm = 3, 8
+    xs = [rng.random((n, d)) for n in counts]
+    ys = [rng.normal(size=n) * 10.0 + 5.0 for n in counts]
+    ys[3] = np.full(4, 2.5)                    # constant -> clamped std
+    x, ysd, mask, y_mean, y_std = _pack_fit_lanes(
+        xs, ys, list(counts), nm)
+    for i, n in enumerate(counts):
+        row = np.zeros(nm, np.float32)
+        row[:n] = np.asarray(ys[i], np.float32)
+        mrow = np.zeros(nm, np.float32)
+        mrow[:n] = 1.0
+        mu = row.sum(dtype=np.float64) / np.float64(n)
+        sq = ((row - mu) * mrow) ** 2
+        sd = np.maximum(np.sqrt(sq.sum(dtype=np.float64)
+                                / np.float64(n)), 1e-8)
+        ym = np.float32(mu)
+        ysd_i = ((row - ym) / np.float32(sd)) * mrow
+        assert y_mean[i] == ym
+        assert y_std[i] == np.float32(sd)
+        assert np.array_equal(ysd[i], ysd_i)
+        assert np.array_equal(mask[i], mrow)
+        assert np.array_equal(x[i, :n],
+                              np.asarray(xs[i], np.float32))
+        assert (x[i, n:] == 0).all() and (ysd[i, n:] == 0).all()

@@ -32,14 +32,15 @@ MAX_ITERS = 15
 NEAR_OPT = 1.10                               # within 10% of the optimum
 
 
-def _run_service(method: str, repo: Repository, seeds) -> dict:
+def _run_service(method: str, repo: Repository, seeds,
+                 fit_warm_steps=16) -> dict:
     """All seeds' searches as concurrent tenants of ONE service, each
     profiling run carrying a seed-dependent virtual latency — the async
     scheduler overlaps them deterministically."""
     svc = SearchService(repo, slots=len(seeds),
                         executor=FakeProfileExecutor(
                             lambda job: 1 + job.rid % 3),
-                        wait_mode="any")
+                        wait_mode="any", fit_warm_steps=fit_warm_steps)
     rid_to_seed = {}
     for seed in seeds:
         rid = svc.submit(SearchRequest(
@@ -95,6 +96,27 @@ def test_karasu_beats_naive_runs_to_near_optimal(case, naive_runs):
     assert np.mean(n_karasu) < np.mean(n_naive), (case, n_karasu, n_naive)
     # and never pathologically worse on any single seed
     assert max(n_karasu) <= MAX_ITERS + 1, (case, n_karasu)
+
+
+@pytest.mark.parametrize("case", ["A", "D"])
+def test_warm_started_fit_is_no_worse_than_cold(case):
+    """The warm-started incremental fit leg (16-step refine from the
+    cached hyperparameters) must not cost search quality: runs to a
+    near-optimal configuration with warm starting on (the default) stay
+    no worse than with every fit forced cold (``fit_warm_steps=None``),
+    on both data-availability cases. Warm and cold reach slightly
+    different hyperparameters, so individual trajectories may diverge
+    by a profiling run either way; the guard is against SYSTEMATIC
+    degradation — mean within one run of cold, and never failing to
+    reach near-optimal inside the budget."""
+    warm = _run_service("karasu", _case_repo(case), SEEDS)
+    cold = _run_service("karasu", _case_repo(case), SEEDS,
+                        fit_warm_steps=None)
+    n_warm = [_runs_to_near_optimal(warm[s]) for s in SEEDS]
+    n_cold = [_runs_to_near_optimal(cold[s]) for s in SEEDS]
+    assert np.mean(n_warm) <= np.mean(n_cold) + 1.0, (case, n_warm,
+                                                      n_cold)
+    assert max(n_warm) <= MAX_ITERS + 1, (case, n_warm)
 
 
 def test_e2e_trajectories_deterministic_across_runs():

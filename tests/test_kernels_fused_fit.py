@@ -1,0 +1,142 @@
+"""Fused warm-startable fit kernel vs its oracles.
+
+Three-way parity chain: the Pallas kernel (interpret mode) must match
+the analytic vmapped reference (``fused_fit_ref``) bit-for-bit-ish
+(<= 1e-4), and the reference must match the legacy autodiff fit
+(``core.gp._fit_batched`` + ``_batched_chol_alpha``) from a cold start
+— the analytic gradient IS the autodiff gradient of the masked NLML.
+The autodiff leg pins lanes at n >= 5: tiny-n lanes sit in flat NLML
+basins where f32 roundoff between the two gradient formulations is
+Adam-amplified over 120 steps (an intrinsic property, not a kernel
+bug); the ref-vs-interpret leg has no such caveat and runs the
+degenerate shapes (n_obs = 1, fully-masked lanes) directly.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gp as gp_mod
+from repro.kernels.fused_fit import (fused_fit, fused_fit_pallas,
+                                     fused_fit_ref)
+
+TOL = 1e-4
+NOISE = 0.1
+
+
+def _lanes(seed=0, counts=(7, 5, 3), n_pad=8, d=3, warm=False):
+    """Padded fit-bucket arrays exactly as ``_exec_fit`` packs them:
+    standardised targets, zero pads, validity mask, warm-start rows."""
+    rng = np.random.default_rng(seed)
+    m = len(counts)
+    x = np.zeros((m, n_pad, d), np.float32)
+    y = np.zeros((m, n_pad), np.float32)
+    mask = np.zeros((m, n_pad), np.float32)
+    for i, n in enumerate(counts):
+        if n == 0:
+            continue
+        xi = rng.random((n, d))
+        yi = np.sin(xi.sum(axis=1)) + 0.1 * rng.normal(size=n)
+        sd = yi.std() if n > 1 and yi.std() > 1e-8 else 1.0
+        x[i, :n] = xi
+        y[i, :n] = (yi - yi.mean()) / sd
+        mask[i, :n] = 1.0
+    if warm:
+        ils = rng.normal(0.0, 0.3, (m, d)).astype(np.float32)
+        isf = rng.normal(0.0, 0.3, (m,)).astype(np.float32)
+    else:
+        ils = np.zeros((m, d), np.float32)
+        isf = np.zeros((m,), np.float32)
+    return x, y, mask, ils, isf
+
+
+@pytest.mark.parametrize("counts,n_pad,warm", [
+    ((7, 5, 3), 8, False),       # ragged cold bucket
+    ((8, 8), 8, True),           # full lanes, warm start
+    ((1,), 8, False),            # single observation
+    ((5, 0), 8, True),           # fully-masked lane rides along
+])
+def test_pallas_interpret_matches_ref(counts, n_pad, warm):
+    parts = _lanes(seed=1, counts=counts, n_pad=n_pad, warm=warm)
+    steps = 16 if warm else 40
+    ref = fused_fit_ref(*parts, steps=steps, noise=NOISE)
+    got = fused_fit_pallas(*parts, steps=steps, noise=NOISE,
+                           interpret=True)
+    for r, g, name in zip(ref, got, ("log_ls", "log_sf", "chol",
+                                     "alpha")):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r),
+                                   atol=TOL, err_msg=name)
+
+
+def test_ref_matches_legacy_autodiff_fit_cold():
+    """Cold start (zero init, 120 steps) against the vmapped autodiff
+    fit + factorisation pair the executor used before the fused leg."""
+    x, y, mask, ils, isf = _lanes(seed=2, counts=(7, 6, 5), n_pad=8)
+    ls, sf, chol, alpha = fused_fit_ref(x, y, mask, ils, isf,
+                                        steps=120, noise=NOISE)
+    fitted = gp_mod._fit_batched(x, y, mask, steps=120, noise=NOISE)
+    chol0, alpha0 = gp_mod._batched_chol_alpha(
+        fitted["ls"], fitted["sf"], x, y, mask, NOISE)
+    np.testing.assert_allclose(np.asarray(ls), np.asarray(fitted["ls"]),
+                               atol=TOL)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(fitted["sf"]),
+                               atol=TOL)
+    np.testing.assert_allclose(np.asarray(chol), np.asarray(chol0),
+                               atol=TOL)
+    np.testing.assert_allclose(np.asarray(alpha), np.asarray(alpha0),
+                               atol=TOL)
+
+
+def test_fully_masked_lane_keeps_its_warm_start():
+    """The init-invariance contract ``_regroup_fit`` and the padded
+    executor lanes rely on: zero mask -> zero gradient, params stay AT
+    the caller's init, and the factorisation degenerates to the padding
+    contract (diag sqrt(1 + noise + jitter), alpha 0)."""
+    x, y, mask, _, _ = _lanes(seed=3, counts=(0, 0), n_pad=4)
+    ils = np.asarray([[0.5, -0.25, 1.0], [-1.0, 0.0, 2.0]], np.float32)
+    isf = np.asarray([0.75, -0.5], np.float32)
+    ls, sf, chol, alpha = fused_fit_ref(x, y, mask, ils, isf,
+                                        steps=30, noise=NOISE)
+    np.testing.assert_allclose(np.asarray(ls), ils, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(sf), isf, atol=1e-6)
+    diag = np.sqrt(1.0 + NOISE + 1e-6)
+    np.testing.assert_allclose(
+        np.asarray(chol),
+        np.broadcast_to(diag * np.eye(4, dtype=np.float32), (2, 4, 4)),
+        atol=1e-6)
+    np.testing.assert_allclose(np.asarray(alpha), np.zeros((2, 4)),
+                               atol=1e-6)
+
+
+def test_warm_refine_does_not_degrade_nlml():
+    """Warm-refining from an already-converged point must not hurt the
+    fit. The contract is in FUNCTION space, not parameter space: a
+    restarted Adam takes ~lr-sized sign-normalised steps regardless of
+    gradient magnitude, so along flat NLML directions the params may
+    wander — but each lane's masked NLML after the 16-step warm rung
+    must be no worse than the cold 120-step solution's."""
+    import jax
+
+    from repro.core.gp import GPParams, _masked_nlml
+    x, y, mask, ils, isf = _lanes(seed=4, counts=(8, 6), n_pad=8)
+    ls0, sf0, _, _ = fused_fit_ref(x, y, mask, ils, isf,
+                                   steps=120, noise=NOISE)
+    ls1, sf1, _, _ = fused_fit_ref(x, y, mask, np.asarray(ls0),
+                                   np.asarray(sf0), steps=16,
+                                   noise=NOISE)
+    nlml = jax.vmap(
+        lambda ls, sf, xi, yi, mi:
+        _masked_nlml(GPParams(ls, sf, NOISE), xi, yi, mi))
+    n_cold = np.asarray(nlml(ls0, sf0, x, y, mask))
+    n_warm = np.asarray(nlml(ls1, sf1, x, y, mask))
+    assert (n_warm <= n_cold + 0.05).all(), (n_warm, n_cold)
+
+
+def test_impl_dispatch():
+    parts = _lanes(seed=5, counts=(4, 3), n_pad=4)
+    ref = fused_fit(*parts, steps=8, impl="xla")
+    got = fused_fit(*parts, steps=8, impl="pallas_interpret")
+    for r, g in zip(ref, got):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r),
+                                   atol=TOL)
+    with pytest.raises(ValueError):
+        fused_fit(*parts, steps=8, impl="nope")

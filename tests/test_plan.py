@@ -11,9 +11,10 @@ from repro.core import (BOConfig, Constraint, Objective, Repository,
 from repro.core.acquisition import mc_ehvi_batched, mc_ehvi_nd
 from repro.core.gp import (batched_posterior, batched_sample, fit_gp,
                            fit_gp_batched, gp_loo_samples)
-from repro.core.plan import (CohortLimits, EhviQuery, LooSampleQuery,
-                             PlanExecutor, PosteriorDrawQuery,
-                             PosteriorQuery, SampleQuery, StepPlanner)
+from repro.core.plan import (CohortLimits, EhviQuery, FitQuery,
+                             LooSampleQuery, PlanExecutor,
+                             PosteriorDrawQuery, PosteriorQuery,
+                             SampleQuery, StepPlanner)
 from repro.serve.search_service import SearchRequest, SearchService
 from repro.simdata import make_emulator
 
@@ -317,18 +318,23 @@ def test_plan_stats_invariants_mixed_so_moo_3obj_cohort():
     assert s["plan_batches"] >= 1
     assert s["plan_batches"] <= s["plan_queries"]
     assert s["plan_batches"] == (s["posterior_batches"]
-                                 + s["sample_batches"] + s["ehvi_batches"])
+                                 + s["sample_batches"] + s["ehvi_batches"]
+                                 + s["fit_batches"])
     assert s["plan_queries"] == (s["posterior_queries"]
-                                 + s["sample_queries"] + s["ehvi_jobs"])
-    # fusion engaged on every leg
+                                 + s["sample_queries"] + s["ehvi_jobs"]
+                                 + s["fit_jobs"])
+    # fusion engaged on every leg, the fit round included
     assert s["posterior_batches"] < s["posterior_queries"]
     assert s["sample_batches"] < s["sample_queries"]
     assert s["ehvi_batches"] <= s["ehvi_jobs"]
+    assert 0 < s["fit_batches"] < s["fit_jobs"]
 
 
 def test_plan_stats_zero_without_fusion():
-    """The loop baselines never enter the plan: all plan counters stay
-    zero with fuse_posteriors=False, fuse_samples=False."""
+    """The loop baselines never enter the plan: with
+    fuse_posteriors=False, fuse_samples=False the only planned launches
+    are the fit rounds, which ALWAYS ride the plan (the fit leg is a
+    first-class plan node with no loop twin)."""
     svc = SearchService(_support_repo(), slots=1, fuse_posteriors=False,
                         fuse_samples=False)
     svc.submit(SearchRequest(
@@ -339,8 +345,11 @@ def test_plan_stats_zero_without_fusion():
                     Objective("runtime")], n_mc=8))
     (c,) = svc.run()
     assert len(c.result.observations) == 4
-    assert svc.stats["plan_batches"] == 0
-    assert svc.stats["plan_queries"] == 0
+    assert svc.stats["plan_batches"] == svc.stats["fit_batches"] > 0
+    assert svc.stats["plan_queries"] == svc.stats["fit_jobs"]
+    assert svc.stats["posterior_batches"] == 0
+    assert svc.stats["sample_batches"] == 0
+    assert svc.stats["ehvi_batches"] == 0
 
 
 def test_posterior_form_ehvi_query_shares_sample_form_bucket():
@@ -381,3 +390,69 @@ def test_posterior_form_ehvi_query_shares_sample_form_bucket():
         outs[name] = got
     for a, b in zip(outs["vmapped"], outs["fused"]):
         np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def _fit_q(rng, n, steps, d=3, warm=False):
+    x = rng.random((n, d)).astype(np.float32)
+    y = (x[:, 0] + np.sin(3 * x[:, 1])).astype(np.float32)
+    if warm:
+        return FitQuery(x, y, 0.1, steps,
+                        init_ls=rng.normal(0, 0.3, d).astype(np.float32),
+                        init_sf=np.float32(rng.normal(0, 0.3)))
+    return FitQuery(x, y, 0.1, steps)
+
+
+def test_golden_bucketing_fit_warm_and_cold():
+    """Warm (short-refine) and cold (full-schedule) FitQuery nodes of
+    one step land in DIFFERENT buckets by construction — ``steps`` and
+    ``noise`` are jit-static on the fit launch, so both sit in the
+    bucket key — while the padded shapes follow the shared policy:
+    observation axis to multiples of 8, lane axis to a power of two."""
+    rng = np.random.default_rng(21)
+    plan = StepPlanner().plan([
+        _fit_q(rng, 5, 120), _fit_q(rng, 9, 120),
+        _fit_q(rng, 7, 16, warm=True), _fit_q(rng, 4, 16, warm=True)])
+    assert plan.stats() == {"batches": 2, "queries": 4}
+    b = _by_kind(plan)
+    cold = b[("fit", (3, 120, 0.1))]
+    assert cold.indices == (0, 1)
+    assert cold.pads == {"n_pad": 16, "m_pad": 2, "lanes": 2}
+    warm = b[("fit", (3, 16, 0.1))]
+    assert warm.indices == (2, 3)
+    assert warm.pads == {"n_pad": 8, "m_pad": 2, "lanes": 2}
+    # the signature names the schedule rung and noise explicitly, so
+    # they can never be confused with the (positional) axis pads
+    planner = StepPlanner()
+    assert planner.launch_signature(cold) == \
+        ("fit", 3, 16, 2, ("steps", 120), ("noise", 0.1))
+    assert planner.launch_signature(warm) == \
+        ("fit", 3, 8, 2, ("steps", 16), ("noise", 0.1))
+
+
+def test_enumerate_buckets_walks_both_fit_rungs():
+    """The AOT vocabulary carries BOTH fit schedule rungs (warm refine
+    + cold full fit) across the whole (n_pad, m_pad) ladder, and live
+    warm/cold fit buckets sign inside it. Disabling warm starting
+    (``fit_warm_steps=None``) collapses the ladder to the cold rung
+    only — at which point a live warm bucket is out-of-vocabulary."""
+    planner = StepPlanner()
+    limits = CohortLimits(d=3, q_grid=8, max_obs=9, max_lanes=2)
+    assert planner.fit_step_rungs(limits) == [16, 120]
+    cold_only = CohortLimits(d=3, q_grid=8, max_obs=9, max_lanes=2,
+                             fit_warm_steps=None)
+    assert planner.fit_step_rungs(cold_only) == [120]
+    sigs = {planner.launch_signature(b)
+            for b in planner.enumerate_buckets(limits) if b.kind == "fit"}
+    # full cross product: 2 rungs x obs pads {8, 16} x lane pads {1, 2}
+    assert sigs == {("fit", 3, n, m, ("steps", s), ("noise", 0.1))
+                    for s in (16, 120) for n in (8, 16) for m in (1, 2)}
+    rng = np.random.default_rng(22)
+    live = StepPlanner().plan([
+        _fit_q(rng, 9, 120), _fit_q(rng, 6, 16, warm=True)])
+    for b in live.buckets:
+        assert planner.launch_signature(b) in sigs, (b.key, b.pads)
+    cold_sigs = {planner.launch_signature(b)
+                 for b in planner.enumerate_buckets(cold_only)
+                 if b.kind == "fit"}
+    warm_live = next(b for b in live.buckets if b.key[1] == 16)
+    assert planner.launch_signature(warm_live) not in cold_sigs

@@ -804,7 +804,7 @@ def test_precompile_zero_recompile_under_mixed_tenant_churn():
     # churn actually happened: tenants retired and were replaced
     assert len(svc.done) >= 10
     # every planned launch came from the precompiled vocabulary...
-    assert {"posterior", "sample", "loo", "ehvi"} <= \
+    assert {"posterior", "sample", "loo", "ehvi", "fit"} <= \
         {sig[0] for sig in planner.signatures}
     assert planner.signatures <= svc.precompiled_signatures
     # ...and no tracked launch compiled while serving
@@ -913,3 +913,81 @@ def test_precompile_zero_recompile_fused_donated_executor():
     assert len(svc.done) >= 6
     assert planner.signatures <= svc.precompiled_signatures
     assert svc.stats["plan_compile_misses"] == 0
+
+
+def test_fit_leg_warm_and_cold_rungs_zero_recompile():
+    """Warm (short-refine) and COLD (full-schedule) fit buckets serve
+    in the SAME scheduling step without leaving the precompiled
+    vocabulary: staggered tenant lifetimes put a fresh tenant's first
+    fit (cold — no warm cache yet) alongside running tenants' warm
+    refines, both rungs land in distinct precompiled buckets, and
+    ``plan_compile_misses`` stays 0."""
+    import dataclasses
+
+    from repro.core.plan import CohortLimits, StepPlanner
+
+    class RecordingPlanner(StepPlanner):
+        def __init__(self):
+            super().__init__()
+            self.signatures = set()
+            self.fit_rungs = []          # steps rungs per fit round
+
+        def plan(self, queries):
+            p = super().plan(queries)
+            for b in p.buckets:
+                if b.kind != "draw":
+                    self.signatures.add(self.launch_signature(b))
+            rungs = {b.key[1] for b in p.buckets if b.kind == "fit"}
+            if rungs:
+                self.fit_rungs.append(rungs)
+            return p
+
+    space = dataclasses.replace(SPACE, name="scout-mini",
+                                configs=SPACE.configs[:8])
+    planner = RecordingPlanner()
+    svc = SearchService(Repository(), slots=2, planner=planner)
+    limits = CohortLimits(d=space.all_encoded().shape[1], q_grid=8,
+                          max_obs=8, max_lanes=8)
+    svc.precompile(limits)
+
+    def submit(i):
+        rng = np.random.default_rng(i)
+        svc.submit(SearchRequest(
+            space, lambda c: EMU.run(WID, c, rng=rng),
+            Objective("cost"), [Constraint("runtime", RT)],
+            method="naive",
+            bo_config=BOConfig(n_init=2, max_iters=4 + (i % 3)),
+            seed=10 + i))
+
+    submitted = 0
+    for _ in range(40):
+        while len(svc.active) + len(svc.queue) < 2:
+            submit(submitted)
+            submitted += 1
+        svc.step()
+
+    assert svc.stats["fit_warm_lanes"] > 0
+    assert svc.stats["fit_cold_lanes"] > 0
+    assert svc.stats["fit_fused_batches"] > 0
+    # both rungs were planned, and at least one round carried BOTH at
+    # once (a cold newcomer sharing the step with warm incumbents)
+    rungs = {r for s in planner.fit_rungs for r in s}
+    assert rungs == {svc.fit_warm_steps, svc.fit_steps}
+    assert any(len(s) == 2 for s in planner.fit_rungs)
+    fit_sigs = {s for s in planner.signatures if s[0] == "fit"}
+    assert {dict(p for p in s if isinstance(p, tuple))["steps"]
+            for s in fit_sigs} == rungs
+    # vocabulary closed, zero serving-time compiles
+    assert planner.signatures <= svc.precompiled_signatures
+    assert svc.stats["plan_compile_misses"] == 0
+
+
+def test_fit_warm_steps_disabled_runs_every_lane_cold():
+    """``fit_warm_steps=None`` turns the warm cache off: every fit
+    lane runs the full cold schedule and the warm counter stays 0."""
+    svc = SearchService(Repository(), slots=2, fit_warm_steps=None)
+    for s in range(2):
+        svc.submit(_request(s, max_iters=4))
+    svc.run()
+    assert svc.stats["fit_cold_lanes"] > 0
+    assert svc.stats["fit_warm_lanes"] == 0
